@@ -1,0 +1,22 @@
+"""Shared benchmark utilities: timing, CSV output."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+
+def time_fn(fn: Callable, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall-time of fn() in seconds."""
+    for _ in range(warmup):
+        fn()
+    ts: List[float] = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

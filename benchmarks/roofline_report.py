@@ -1,0 +1,67 @@
+"""Render the EXPERIMENTS.md roofline table from the dry-run JSONL
+(single-pod mesh rows, per the assignment; multi-pod rows prove the pod
+axis shards and are summarized separately)."""
+from __future__ import annotations
+
+import json
+import os
+
+DEFAULT = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "dryrun.jsonl")
+
+
+def load(path=DEFAULT):
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            try:
+                rows.append(json.loads(line))
+            except json.JSONDecodeError:
+                pass
+    # keep the latest record per cell
+    latest = {}
+    for r in rows:
+        latest[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(latest.values())
+
+
+def fmt_row(r):
+    mf = r["model_flops_total"]
+    return (f"| {r['arch']} | {r['shape']} | {r['t_compute']:.4f} "
+            f"| {r['t_memory']:.4f} | {r['t_collective']:.4f} "
+            f"| {r['bottleneck']} | {mf:.2e} "
+            f"| {r['useful_flops_frac']:.2f} | {r['fits_hbm']} |")
+
+
+def markdown_table(rows, mesh="16x16"):
+    out = ["| arch | shape | t_compute (s) | t_memory (s) | t_coll (s) "
+           "| bottleneck | MODEL_FLOPS | useful/HLO | fits |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] == mesh:
+            out.append(fmt_row(r))
+    return "\n".join(out)
+
+
+def run():
+    rows = load()
+    if not rows:
+        print("# roofline: no dryrun.jsonl yet — run "
+              "PYTHONPATH=src python -m repro.launch.dryrun first")
+        return
+    single = [r for r in rows if r["mesh"] == "16x16"]
+    multi = [r for r in rows if r["mesh"] != "16x16"]
+    print(f"# roofline: {len(single)} single-pod cells, "
+          f"{len(multi)} multi-pod cells")
+    for r in sorted(single, key=lambda r: (r["arch"], r["shape"])):
+        dom = {"compute": r["t_compute"], "memory": r["t_memory"],
+               "collective": r["t_collective"]}[r["bottleneck"]]
+        print(f"roofline/{r['arch']}/{r['shape']},{dom * 1e6:.1f},"
+              f"bottleneck={r['bottleneck']} "
+              f"useful={r['useful_flops_frac']:.2f} fits={r['fits_hbm']}")
+
+
+if __name__ == "__main__":
+    print(markdown_table(load()))

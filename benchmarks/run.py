@@ -1,0 +1,21 @@
+"""Benchmark harness: one module per paper table/figure. Prints
+``name,us_per_call,derived`` CSV lines.
+
+  table1_variants  — paper Table 1 analogue (variant ladder)
+  fig7_dsc         — paper Fig. 7 DSC parity (parallel == sequential)
+  table3_speedup   — paper Table 3 exec times + Fig. 8 speedup curve
+  roofline_report  — §Roofline summary from the dry-run JSONL
+"""
+
+
+def main() -> None:
+    from . import fig7_dsc, roofline_report, table1_variants, table3_speedup
+    print("benchmark,us_per_call,derived")
+    table1_variants.run()
+    fig7_dsc.run()
+    table3_speedup.run()
+    roofline_report.run()
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,62 @@
+"""Quickstart: the paper's pipeline end-to-end on one axial slice.
+
+Segments a synthetic brain phantom into WM/GM/CSF/background with the
+paper-faithful FCM baseline AND the fused device-resident FCM, reports
+DSC against ground truth for both (paper Fig. 7), and writes PGM images
+you can open with any viewer.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import fcm as F
+from repro.data import phantom
+
+
+def write_pgm(path, img):
+    img = np.asarray(img, np.uint8)
+    with open(path, "wb") as f:
+        f.write(b"P5\n%d %d\n255\n" % (img.shape[1], img.shape[0]))
+        f.write(img.tobytes())
+
+
+def main():
+    out_dir = os.path.join(os.path.dirname(__file__), "out")
+    os.makedirs(out_dir, exist_ok=True)
+
+    img, gt = phantom.phantom_slice(217, 181, slice_pos=0.5, seed=96)
+    x = img.ravel().astype(np.float32)
+    print(f"phantom slice: {img.shape}, {x.size / 1024:.0f} KB")
+
+    # The paper "manually selects" the four clusters; we use the
+    # deterministic linspace init for both paths (pure random membership
+    # init can collapse clusters on some seeds).
+    import jax.numpy as jnp
+    u0 = F.update_membership(jnp.asarray(x),
+                             F.linspace_centers(jnp.asarray(x), 4), 2.0)
+    base = F.fit_baseline(x, F.FCMConfig(), u0=u0)
+    fused = F.fit_fused(x, F.FCMConfig())
+    print(f"baseline (paper-faithful): {base.n_iters} iters, "
+          f"centers={np.sort(np.asarray(base.centers)).round(1)}")
+    print(f"fused (device-resident):   {fused.n_iters} iters, "
+          f"centers={np.sort(np.asarray(fused.centers)).round(1)}")
+
+    for tag, res in [("baseline", base), ("fused", fused)]:
+        pred = phantom.match_labels_to_classes(
+            np.asarray(res.labels), np.asarray(res.centers))
+        dscs = phantom.dice_per_class(pred.reshape(img.shape), gt)
+        print(f"  {tag} DSC:", {c: round(d, 4) for c, d in
+                                zip(phantom.CLASS_NAMES, dscs)})
+        seg = (pred.reshape(img.shape) * 85).astype(np.uint8)
+        write_pgm(os.path.join(out_dir, f"segmented_{tag}.pgm"), seg)
+    write_pgm(os.path.join(out_dir, "input.pgm"), img)
+    print(f"wrote {out_dir}/input.pgm and segmented_*.pgm")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Batched serving demo: prefill + step-synchronous greedy decode with
+the KV cache (the serve_step the decode dry-run shapes lower). Verifies
+the decoded continuation against teacher-forced argmax.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.models import lm
+from repro.serving import ServeEngine
+
+
+def main():
+    cfg = dataclasses.replace(
+        configs.get_config("llama3.2-1b").reduced(),
+        name="serve-demo", n_layers=4, d_model=128, n_heads=4,
+        n_kv_heads=2, head_dim=32, d_ff=256, vocab_size=1024)
+    params = lm.init_params(jax.random.PRNGKey(7), cfg)
+
+    batch, prompt_len, n_new = 4, 12, 20
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (batch, prompt_len)).astype(np.int32)
+
+    engine = ServeEngine(cfg, params, max_len=prompt_len + n_new,
+                         batch_size=batch)
+    out = engine.generate(prompts, n_new=n_new, temperature=0.0)
+    print("prompts:", prompts[:, :8], "...")
+    print("generated:", out[:, prompt_len:])
+
+    # verify against teacher forcing: feed the generated stream through
+    # the train forward; argmax at each position must reproduce it.
+    logits, _ = jax.jit(lambda p, t: lm.forward(p, t, cfg))(
+        params, jnp.asarray(out[:, :-1]))
+    greedy = np.asarray(jnp.argmax(logits, -1))[:, prompt_len - 1:]
+    agree = (greedy == out[:, prompt_len:]).mean()
+    print(f"teacher-forced agreement: {agree:.3f}")
+    assert agree == 1.0, "decode path diverged from train forward"
+    print("serving OK")
+
+
+if __name__ == "__main__":
+    main()

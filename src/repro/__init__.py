@@ -1,0 +1,5 @@
+"""repro: multi-pod JAX framework reproducing and extending
+"GPU-Based Fuzzy C-Means Clustering Algorithm for Image Segmentation"
+(Almazrooie, Vadiveloo, Abdullah, 2016). See DESIGN.md."""
+
+__version__ = "1.0.0"

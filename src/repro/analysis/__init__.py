@@ -1,0 +1,1 @@
+from . import hw, roofline  # noqa: F401

@@ -1,0 +1,344 @@
+"""Trip-count-aware cost accounting over compiled (post-SPMD) HLO text.
+
+XLA's ``compiled.cost_analysis()`` visits each while/scan body ONCE, so
+anything under ``lax.scan`` (layer groups, microbatches, flash-attention
+chunks, SSM time steps) is undercounted by its trip count — useless for
+roofline on scanned models. This walker parses the HLO module into
+computations with per-computation symbol tables (operand shapes are not
+printed in compiled HLO, so references are resolved to their defining
+ops), builds the call graph, extracts scan trip counts from while-loop
+condition constants, and accumulates per-device:
+
+  flops — 2*prod(out)*prod(contracting) for every dot (MXU terms;
+          elementwise ignored; reduce counted at 1 flop/element)
+  bytes — HBM traffic at fusion boundaries: resolved operand sizes +
+          result size for every non-control top-level op (fusion
+          internals excluded: fusions are XLA's memory-access units)
+  wire  — collective wire bytes from output shapes + ring semantics:
+          AR 2(n-1)/n * data, AG (n-1)/n * out, RS (n-1) * out,
+          A2A (n-1)/n * data, permute 1 * out   (per participant)
+
+Shapes in a post-SPMD module are per-device, so flops/bytes are
+per-device; wire is per-participant and scaled to global by the caller.
+Validated in tests/test_roofline.py against hand-counted programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+from . import hw
+
+_SHAPE_RE = re.compile(r"\b(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-_]+)\s*=\s*(.*)$")
+_OPNAME_RE = re.compile(r"\s([a-z][\w\-]*)\(")
+_REF_RE = re.compile(r"%([\w\.\-_]+)")
+_CONST_S32_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_HDR_PARAM_RE = re.compile(r"%?([\w\.\-_]+)\s*:\s*([^,)]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_CONTROL_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "while", "conditional",
+    "call", "copy-start", "copy-done", "async-start", "async-update",
+    "async-done", "domain", "opt-barrier", "rng-bit-generator",
+    "rng-get-and-update-state", "get-dimension-size",
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter",
+                "all-to-all", "collective-permute")
+
+
+def _nbytes(shape_text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_text):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * hw.dtype_bytes(m.group(1))
+    return total
+
+
+def _elems(shape_text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_text):
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _split_rhs(rhs: str) -> Tuple[str, str, str, str]:
+    """rhs -> (result_shape_text, opname, operand_text, attr_text)."""
+    m = _OPNAME_RE.search(" " + rhs)
+    if not m:
+        return rhs, "", "", ""
+    opname = m.group(1)
+    start = m.end()                     # index in " "+rhs just past "("
+    shape_text = rhs[:m.start(1) - 1]
+    # find matching close paren
+    depth = 1
+    i = start - 1                        # rhs index of char after "("
+    while i < len(rhs) and depth > 0:
+        if rhs[i] == "(":
+            depth += 1
+        elif rhs[i] == ")":
+            depth -= 1
+        i += 1
+    return shape_text, opname, rhs[start - 1:i - 1], rhs[i:]
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    n_coll_ops: int = 0
+
+    def scaled(self, k: float) -> "Costs":
+        return Costs(self.flops * k, self.bytes * k,
+                     {n: v * k for n, v in self.wire_by_kind.items()},
+                     self.n_coll_ops)
+
+    def add(self, o: "Costs"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for n, v in o.wire_by_kind.items():
+            self.wire_by_kind[n] += v
+        self.n_coll_ops += o.n_coll_ops
+
+    @property
+    def wire(self) -> float:
+        return sum(self.wire_by_kind.values())
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str, n_devices: int,
+                 while_override: Optional[int] = None):
+        self.n_devices = n_devices
+        self.while_override = while_override
+        self.comps: Dict[str, List[str]] = {}
+        self.symbols: Dict[str, Dict[str, str]] = {}
+        self.roots: Dict[str, str] = {}      # computation -> root op name
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[Tuple[str, bool], Costs] = {}
+
+    # -- parsing ------------------------------------------------------------
+
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            stripped = line.strip()
+            if not line.startswith(" ") and "->" in line and \
+                    stripped.endswith("{"):
+                hdr = stripped
+                is_entry = hdr.startswith("ENTRY")
+                hdr = hdr[5:].strip() if is_entry else hdr
+                name = hdr.split("(", 1)[0].strip().lstrip("%").strip()
+                cur = name
+                self.comps[cur] = []
+                self.symbols[cur] = {}
+                if is_entry:
+                    self.entry = cur
+                # header params carry shapes: "(%p: f32[8,16], ...)"
+                paren = hdr[hdr.index("("):hdr.rindex("->")]
+                for pm in _HDR_PARAM_RE.finditer(paren):
+                    self.symbols[cur][pm.group(1)] = pm.group(2)
+                continue
+            if stripped == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            self.comps[cur].append(stripped)
+            m = _OP_RE.match(stripped)
+            if m:
+                shape_text, op, _, _ = _split_rhs(m.group(2))
+                self.symbols[cur][m.group(1)] = shape_text
+                if stripped.startswith("ROOT"):
+                    self.roots[cur] = op
+
+    def _trip_count(self, cond_name: str) -> int:
+        if self.while_override is not None:
+            return self.while_override
+        consts = []
+        for line in self.comps.get(cond_name, []):
+            consts += [int(x) for x in _CONST_S32_RE.findall(line)]
+        return max(consts) if consts else 1
+
+    def _operand_bytes(self, comp: str, operand_text: str) -> int:
+        total = _nbytes(operand_text)            # inline-typed operands
+        if total:
+            return total
+        table = self.symbols.get(comp, {})
+        for ref in _REF_RE.findall(operand_text):
+            total += _nbytes(table.get(ref, ""))
+        return total
+
+    def _operand_shape(self, comp: str, ref_text: str) -> str:
+        m = _SHAPE_RE.search(ref_text)
+        if m:
+            return ref_text
+        refs = _REF_RE.findall(ref_text)
+        if refs:
+            return self.symbols.get(comp, {}).get(refs[0], "")
+        return ""
+
+    # -- accounting ----------------------------------------------------------
+
+    def _dot_flops(self, comp: str, shape_text: str, operand_text: str,
+                   attrs: str) -> float:
+        out_elems = _elems(shape_text)
+        ops = [o.strip() for o in self._top_split(operand_text)]
+        if not ops:
+            return 0.0
+        lhs_shape = self._operand_shape(comp, ops[0])
+        sm = _SHAPE_RE.search(lhs_shape)
+        if sm is None:
+            return 0.0
+        lhs_dims = [int(d) for d in sm.group(2).split(",") if d]
+        contract = 1
+        cm = _CONTRACT_RE.search(attrs) or _CONTRACT_RE.search(operand_text)
+        if cm:
+            for i in cm.group(1).split(","):
+                if i:
+                    contract *= lhs_dims[int(i)]
+        return 2.0 * out_elems * contract
+
+    @staticmethod
+    def _top_split(text: str) -> List[str]:
+        out, depth, start = [], 0, 0
+        for i, ch in enumerate(text):
+            if ch in "([{":
+                depth += 1
+            elif ch in ")]}":
+                depth -= 1
+            elif ch == "," and depth == 0:
+                out.append(text[start:i])
+                start = i + 1
+        if text[start:].strip():
+            out.append(text[start:])
+        return out
+
+    def _group_size(self, line: str) -> int:
+        m = _GROUPS_V2_RE.search(line)
+        if m:
+            return int(m.group(2))
+        m = _GROUPS_RE.search(line)
+        if m:
+            return len([x for x in m.group(1).split(",")
+                        if x.strip() != ""])
+        return self.n_devices
+
+    def _collective_wire(self, kind: str, shape_text: str, line: str) -> float:
+        out_b = _nbytes(shape_text)
+        n = self._group_size(line)
+        if kind == "all-reduce":
+            return 2.0 * (n - 1) / max(n, 1) * out_b
+        if kind == "all-gather":
+            return float(n - 1) / max(n, 1) * out_b
+        if kind == "reduce-scatter":
+            return float(n - 1) * out_b           # input = out * n
+        if kind == "all-to-all":
+            return float(n - 1) / max(n, 1) * out_b
+        return float(out_b)                        # collective-permute
+
+    def comp_cost(self, name: str, count_bytes: bool = True) -> Costs:
+        key = (name, count_bytes)
+        if key in self._memo:
+            return self._memo[key]
+        total = Costs()
+        self._memo[key] = total
+        for line in self.comps.get(name, []):
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            rhs = m.group(2)
+            shape_text, op, operands, attrs = _split_rhs(rhs)
+            if op == "while":
+                bm = re.search(r"body=%?([\w\.\-_]+)", rhs)
+                cm = re.search(r"condition=%?([\w\.\-_]+)", rhs)
+                if bm and cm:
+                    trips = self._trip_count(cm.group(1))
+                    inner = Costs()
+                    inner.add(self.comp_cost(bm.group(1), count_bytes))
+                    inner.add(self.comp_cost(cm.group(1), count_bytes))
+                    total.add(inner.scaled(trips))
+                continue
+            if op in ("call", "conditional"):
+                for c in re.findall(
+                        r"(?:to_apply|calls|branch_computations=\{)"
+                        r"=?%?([\w\.\-_]+)", rhs):
+                    total.add(self.comp_cost(c, count_bytes))
+                continue
+            if op == "fusion":
+                cm = re.search(r"calls=%?([\w\.\-_]+)", rhs)
+                root = self.roots.get(cm.group(1), "") if cm else ""
+                if cm:
+                    total.add(self.comp_cost(cm.group(1),
+                                             count_bytes=False))
+                if count_bytes:
+                    if root == "bitcast":
+                        pass  # pure layout view: no HBM traffic of its own
+                    elif root == "dynamic-update-slice":
+                        # in-place on the aliased (largest) operand: only
+                        # the update slice is read+written
+                        ob = [self._operand_bytes(name, o)
+                              for o in self._top_split(operands)]
+                        total.bytes += 2 * (sum(ob) - max(ob, default=0))
+                    else:
+                        total.bytes += (_nbytes(shape_text)
+                                        + self._operand_bytes(name,
+                                                              operands))
+                continue
+            if op == "dot":
+                total.flops += self._dot_flops(name, shape_text, operands,
+                                               attrs)
+                if count_bytes:
+                    total.bytes += (_nbytes(shape_text)
+                                    + self._operand_bytes(name, operands))
+                continue
+            coll = next((c for c in _COLLECTIVES
+                         if op == c or op == c + "-start"), None)
+            if coll:
+                total.wire_by_kind[coll] += self._collective_wire(
+                    coll, shape_text, rhs)
+                total.n_coll_ops += 1
+                if count_bytes:
+                    total.bytes += (_nbytes(shape_text)
+                                    + self._operand_bytes(name, operands))
+                continue
+            if op in _CONTROL_OPS or not op:
+                continue
+            if op == "reduce" or op.startswith("reduce-window"):
+                total.flops += self._operand_bytes(name, operands) / 4.0
+                if count_bytes:
+                    total.bytes += (_nbytes(shape_text)
+                                    + self._operand_bytes(name, operands))
+                continue
+            # generic elementwise / data-movement op at fusion granularity
+            if count_bytes:
+                total.bytes += (_nbytes(shape_text)
+                                + self._operand_bytes(name, operands))
+        self._memo[key] = total
+        return total
+
+    def total(self) -> Costs:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.comp_cost(self.entry)
+
+
+def analyze_text(hlo_text: str, n_devices: int,
+                 while_override: Optional[int] = None) -> Costs:
+    return HloCostModel(hlo_text, n_devices, while_override).total()

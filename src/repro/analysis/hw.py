@@ -1,0 +1,16 @@
+"""Target-hardware constants (TPU v5e pod), per the assignment."""
+
+PEAK_FLOPS_BF16 = 197e12      # per chip, bf16
+HBM_BW = 819e9                # bytes/s per chip
+ICI_LINK_BW = 50e9            # bytes/s per link
+HBM_BYTES = 16 * 2 ** 30      # 16 GiB per chip
+CHIPS_PER_POD = 256           # 16 x 16 mesh
+
+
+def dtype_bytes(name: str) -> int:
+    return {
+        "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+        "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+        "s32": 4, "u32": 4, "f32": 4,
+        "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    }.get(name, 4)

@@ -1,0 +1,191 @@
+"""Roofline-term derivation from the compiled dry-run artifact.
+
+Per (arch, shape, mesh) cell we report three times (seconds/step):
+
+  compute    = HLO_FLOPs_total   / (chips * 197 TF/s)
+  memory     = HLO_bytes_total   / (chips * 819 GB/s)
+  collective = wire_bytes_global / (chips * 50 GB/s)
+
+``compiled.cost_analysis()`` reports per-device flops/bytes (verified in
+tests against hand-counted einsums), so compute/memory terms divide by
+one chip's peak directly. Collective bytes are NOT in cost_analysis:
+:func:`collective_bytes` parses the post-SPMD HLO text and sums operand
+sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops, scaled to wire traffic with standard ring
+multipliers (all-reduce 2(n-1)/n, gather/scatter (n-1)/n, permute 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+import jax
+
+from . import hw
+
+_COLL_RE = re.compile(
+    r"=\s+[^=]*?\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"\b(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _op_operand_bytes(line: str) -> int:
+    """Sum of operand tensor sizes on an HLO op line (per-device)."""
+    lhs, _, rhs = line.partition("(")
+    total = 0
+    for m in _SHAPE_RE.finditer(rhs):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * hw.dtype_bytes(dt)
+    return total
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:                                  # [groups, size] iota form
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return n_devices
+
+
+_WIRE_MULT = {
+    "all-reduce": lambda n: 2.0 * (n - 1) / max(n, 1),
+    "all-gather": lambda n: float(n - 1) / max(n, 1),
+    "reduce-scatter": lambda n: float(n - 1) / max(n, 1),
+    "all-to-all": lambda n: float(n - 1) / max(n, 1),
+    "collective-permute": lambda n: 1.0,
+}
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> Dict[str, float]:
+    """Global wire bytes per collective kind for one execution."""
+    out: Dict[str, float] = {k: 0.0 for k in _WIRE_MULT}
+    out["n_ops"] = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None or "-done" in line.split("=", 1)[-1][:40]:
+            continue
+        kind = m.group(1)
+        per_dev = _op_operand_bytes(line)
+        n = _group_size(line, n_devices)
+        wire = per_dev * _WIRE_MULT[kind](n) * n_devices
+        out[kind] += wire
+        out["n_ops"] += 1
+    out["total"] = sum(out[k] for k in _WIRE_MULT)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Model-FLOPs accounting (6*N*D / 2*N*D)
+# ---------------------------------------------------------------------------
+
+def count_params(cfg) -> Dict[str, float]:
+    """Total and active (MoE-aware) parameter counts from the abstract
+    param tree: expert-stacked FFN leaves (ndim 4: (G, E, d, f)) count at
+    top_k/E toward active params."""
+    from repro.models import lm
+    tree = lm.abstract_params(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    total = active = 0.0
+    for path, leaf in flat:
+        n = 1.0
+        for s in leaf.shape:
+            n *= s
+        total += n
+        keys = "/".join(str(getattr(k, "key", k)) for k in path)
+        if "ffn" in keys and leaf.ndim == 4 and cfg.moe is not None \
+                and leaf.shape[1] == cfg.moe.n_experts:
+            active += n * cfg.moe.top_k / cfg.moe.n_experts
+        else:
+            active += n
+    return {"total": total, "active": active}
+
+
+def model_flops(cfg, shape) -> float:
+    """6*N_active*D for training, 2*N_active*D for inference steps."""
+    n = count_params(cfg)["active"]
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    d = shape.global_batch * 1
+    return 2.0 * n * d
+
+
+# ---------------------------------------------------------------------------
+# Cell report
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    flops_per_dev: float
+    bytes_per_dev: float
+    wire_bytes: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_flops_total: float
+    useful_flops_frac: float
+    mem_args_gb: float
+    mem_temp_gb: float
+    mem_out_gb: float
+    fits_hbm: bool
+    xla_flops_per_dev: float = 0.0     # raw cost_analysis, scan-unaware
+    xla_bytes_per_dev: float = 0.0
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze(arch: str, shape, mesh_label: str, n_devices: int,
+            cost: Optional[dict], mem, hlo_text: str, cfg,
+            while_override: Optional[int] = None) -> RooflineReport:
+    """Roofline terms from the trip-count-aware HLO walker (hlo_cost.py).
+    XLA's own cost_analysis undercounts scan bodies (visited once); its
+    numbers are kept in the record for reference only."""
+    from . import hlo_cost
+    costs = hlo_cost.analyze_text(hlo_text, n_devices, while_override)
+    flops_dev = costs.flops
+    bytes_dev = costs.bytes
+    coll = {"total": costs.wire, **costs.wire_by_kind}
+    t_c = flops_dev / hw.PEAK_FLOPS_BF16
+    t_m = bytes_dev / hw.HBM_BW
+    t_x = coll["total"] / (n_devices * hw.ICI_LINK_BW)
+    dominant = max((("compute", t_c), ("memory", t_m),
+                    ("collective", t_x)), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape) if cfg is not None else 0.0
+    hlo_total = flops_dev * n_devices
+    args_gb = mem.argument_size_in_bytes / 2 ** 30 if mem else 0.0
+    temp_gb = mem.temp_size_in_bytes / 2 ** 30 if mem else 0.0
+    out_gb = mem.output_size_in_bytes / 2 ** 30 if mem else 0.0
+    peak = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+            + mem.output_size_in_bytes) if mem else 0
+    return RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_label, n_devices=n_devices,
+        flops_per_dev=flops_dev, bytes_per_dev=bytes_dev,
+        wire_bytes=coll["total"],
+        t_compute=t_c, t_memory=t_m,
+        t_collective=t_x, bottleneck=dominant, model_flops_total=mf,
+        useful_flops_frac=(mf / hlo_total if hlo_total else 0.0),
+        mem_args_gb=args_gb, mem_temp_gb=temp_gb, mem_out_gb=out_gb,
+        fits_hbm=bool(peak <= hw.HBM_BYTES),
+        xla_flops_per_dev=float(cost.get("flops", 0.0)) if cost else 0.0,
+        xla_bytes_per_dev=(float(cost.get("bytes accessed", 0.0))
+                           if cost else 0.0),
+    )

@@ -1,0 +1,23 @@
+"""The paper's own configuration: FCM segmentation of brain phantom
+slices into WM/GM/CSF/background (c=4, m=2, eps=0.005), dataset scaled
+20 KB -> 1 MB (paper Table 3), plus a pod-scale 1 GB volume cell for the
+dry-run."""
+import dataclasses
+
+from repro.core.fcm import FCMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class FCMJobConfig:
+    name: str = "fcm-brainweb"
+    fcm: FCMConfig = FCMConfig(n_clusters=4, m=2.0, eps=5e-3, max_iters=300)
+    # paper Table 3 dataset sizes (bytes)
+    table3_sizes = tuple(int(k * 1024) for k in
+                         (20, 40, 60, 80, 100, 120, 140, 160, 180, 200,
+                          300, 500, 700, 1000))
+    # pod-scale dry-run: a 1 GiB voxel volume sharded over all chips
+    dryrun_bytes: int = 1 << 30
+
+
+def make_config() -> FCMJobConfig:
+    return FCMJobConfig()

@@ -1,0 +1,12 @@
+"""llama3.2-3b [dense] 28L d3072 24H (GQA kv=8) d_ff=8192 vocab=128256.
+[hf:meta-llama/Llama-3.2-3B]"""
+from .base import ModelConfig
+
+
+def make_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3.2-3b", family="dense",
+        n_layers=28, d_model=3072, n_heads=24, n_kv_heads=8,
+        head_dim=128, d_ff=8192, vocab_size=128256,
+        rope_theta=5e5, sub_quadratic=False,
+    )

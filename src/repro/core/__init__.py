@@ -1,0 +1,8 @@
+# The paper's primary contribution: Fuzzy C-Means, paper-faithful and
+# beyond-paper variants. See DESIGN.md §2 and §6.
+from . import distributed, fcm, histogram, sequential  # noqa: F401
+from .fcm import (FCMConfig, FCMResult, defuzzify, fit_baseline,  # noqa: F401
+                  fit_fused, labels_from_centers, objective,
+                  update_centers, update_membership)
+from .histogram import fit_histogram  # noqa: F401
+from .distributed import fit_sharded  # noqa: F401

@@ -1,0 +1,77 @@
+"""Histogram-compressed FCM (beyond-paper optimization #2).
+
+8-bit grayscale images have at most 256 distinct intensities, so FCM over
+pixels is algebraically identical to *weighted* FCM over (value, count)
+pairs: every sum over pixels factors through the histogram. One O(N)
+counting pass replaces the per-iteration O(N·c) traffic with O(256·c)
+arithmetic — the data-reduction idea of br-FCM [Eschrich et al. 2003],
+which the paper cites as related work [11] but does not implement.
+
+Distributed: each shard histograms locally, one psum(256) merges, and the
+(tiny) weighted FCM then runs replicated on every device with **zero**
+further communication per iteration.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import fcm as F
+
+
+@partial(jax.jit, static_argnames=("n_bins",))
+def intensity_histogram(x: jax.Array, n_bins: int = 256) -> jax.Array:
+    """Counts per integer intensity; x is float-valued but integral."""
+    idx = jnp.clip(x.astype(jnp.int32), 0, n_bins - 1)
+    return jnp.zeros((n_bins,), jnp.float32).at[idx].add(1.0)
+
+
+def weighted_membership(vals: jax.Array, v: jax.Array, m: float) -> jax.Array:
+    return F.update_membership(vals, v, m)
+
+
+def weighted_center_step(vals: jax.Array, w: jax.Array, v: jax.Array,
+                         m: float) -> jax.Array:
+    """Fused v -> v' step over (value, weight) pairs."""
+    u = F.update_membership(vals, v, m)          # (c, 256)
+    um = (u ** m) * w[None, :]
+    num = um @ vals
+    den = jnp.maximum(jnp.sum(um, axis=1), 1e-12)
+    return num / den
+
+
+@partial(jax.jit, static_argnames=("c", "m", "max_iters"))
+def _hist_loop(vals, w, v0, c, m, eps, max_iters):
+    def cond(state):
+        _, delta, it = state
+        return jnp.logical_and(delta >= eps, it < max_iters)
+
+    def body(state):
+        v, _, it = state
+        v_new = weighted_center_step(vals, w, v, m)
+        return v_new, jnp.max(jnp.abs(v_new - v)), it + 1
+
+    state = (v0, jnp.asarray(jnp.inf, jnp.float32), jnp.asarray(0, jnp.int32))
+    return jax.lax.while_loop(cond, body, state)
+
+
+def fit_histogram(x: jax.Array, cfg: F.FCMConfig = F.FCMConfig(),
+                  n_bins: int = 256,
+                  hist: Optional[jax.Array] = None) -> F.FCMResult:
+    """FCM via histogram compression. ``hist`` may be supplied directly
+    (e.g. a psum-merged global histogram in the distributed path)."""
+    x = jnp.asarray(x, jnp.float32)
+    if hist is None:
+        hist = intensity_histogram(x, n_bins)
+    vals = jnp.arange(n_bins, dtype=jnp.float32)
+    v0 = F.linspace_centers(x, cfg.n_clusters)
+    rng = float(jnp.max(x) - jnp.min(x)) or 1.0
+    eps_v = cfg.eps * rng * 0.1
+    v, delta, it = _hist_loop(vals, hist, v0, cfg.n_clusters, cfg.m, eps_v,
+                              cfg.max_iters)
+    labels = F.labels_from_centers(x, v)
+    return F.FCMResult(centers=v, labels=labels, n_iters=int(it),
+                       final_delta=float(delta))

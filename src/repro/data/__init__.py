@@ -1,0 +1,1 @@
+from . import phantom  # noqa: F401

@@ -1,0 +1,105 @@
+"""Synthetic digital brain phantom (BrainWeb-like) + metrics.
+
+The paper segments the BrainWeb simulated brain phantom (Collins et al.
+1998) into WM / GM / CSF / background. That dataset is not
+redistributable, so this module synthesizes axial-slice-like images with
+the same statistical structure: four piecewise-constant tissue classes
+arranged as nested regions (background, CSF rim + ventricles, GM ribbon,
+WM core) with additive Gaussian noise — plus exact ground-truth masks,
+which is what the paper's DSC evaluation (Fig. 6/7) requires.
+
+Classes: 0=background, 1=CSF, 2=GM, 3=WM.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+N_CLASSES = 4
+CLASS_NAMES = ("background", "CSF", "GM", "WM")
+# Mean intensities roughly matching a T1 BrainWeb slice.
+CLASS_MEANS = np.array([0.0, 52.0, 106.0, 168.0])
+
+
+def _ellipse(h, w, cy, cx, ry, rx, yy=None, xx=None):
+    if yy is None:
+        yy, xx = np.mgrid[0:h, 0:w]
+    return ((yy - cy) / ry) ** 2 + ((xx - cx) / rx) ** 2 <= 1.0
+
+
+def phantom_slice(height: int = 217, width: int = 181,
+                  slice_pos: float = 0.5, noise: float = 4.0,
+                  seed: int = 0):
+    """Returns (image uint8 (H, W), labels int32 (H, W)).
+
+    ``slice_pos`` in [0, 1] scales the anatomy like moving through axial
+    slices (the paper shows the 91st/96th/101st/111th slices).
+    """
+    rng = np.random.default_rng(seed)
+    h, w = height, width
+    yy, xx = np.mgrid[0:h, 0:w]
+    cy, cx = h / 2.0, w / 2.0
+    scale = 0.75 + 0.5 * slice_pos          # anatomy grows/shrinks by slice
+
+    labels = np.zeros((h, w), np.int32)
+    # head outline: CSF-filled skull interior (skull itself stripped, as in
+    # the paper's preprocessing)
+    head = _ellipse(h, w, cy, cx, 0.46 * h * scale, 0.42 * w * scale, yy, xx)
+    labels[head] = 1
+    # GM ribbon
+    gm = _ellipse(h, w, cy, cx, 0.42 * h * scale, 0.38 * w * scale, yy, xx)
+    labels[gm] = 2
+    # WM core (two lobes for a non-convex boundary)
+    wm = (_ellipse(h, w, cy, cx - 0.10 * w, 0.30 * h * scale,
+                   0.20 * w * scale, yy, xx)
+          | _ellipse(h, w, cy, cx + 0.10 * w, 0.30 * h * scale,
+                     0.20 * w * scale, yy, xx))
+    labels[wm & gm] = 3
+    # lateral ventricles: CSF pockets inside WM
+    vent = (_ellipse(h, w, cy - 0.02 * h, cx - 0.08 * w, 0.09 * h * scale,
+                     0.035 * w * scale, yy, xx)
+            | _ellipse(h, w, cy - 0.02 * h, cx + 0.08 * w, 0.09 * h * scale,
+                       0.035 * w * scale, yy, xx))
+    labels[vent] = 1
+
+    img = CLASS_MEANS[labels] + rng.normal(0.0, noise, size=(h, w))
+    img = np.clip(img, 0, 255)
+    # background stays exactly 0 outside the head (skull-stripped)
+    img[labels == 0] = np.clip(
+        rng.normal(0.0, noise * 0.25, size=(h, w)), 0, 255)[labels == 0]
+    return img.astype(np.uint8), labels
+
+
+def phantom_of_bytes(n_bytes: int, noise: float = 4.0, seed: int = 0):
+    """A phantom whose uint8 image is exactly ``n_bytes`` (paper Table 3
+    scales the dataset from 20 KB to 1 MB; 1 byte per pixel)."""
+    width = 256
+    height = max(n_bytes // width, 8)
+    img, lab = phantom_slice(height, width, 0.5, noise, seed)
+    img = img.ravel()[:n_bytes // width * width]
+    lab = lab.ravel()[:img.size]
+    return img, lab
+
+
+def dice(pred_mask: np.ndarray, gt_mask: np.ndarray) -> float:
+    """Dice Similarity Coefficient (paper Eq. 5)."""
+    pred = np.asarray(pred_mask, bool)
+    gt = np.asarray(gt_mask, bool)
+    s = pred.sum() + gt.sum()
+    if s == 0:
+        return 1.0
+    return 2.0 * np.logical_and(pred, gt).sum() / s
+
+
+def dice_per_class(pred_labels, gt_labels, n_classes: int = N_CLASSES):
+    """DSC per tissue class after matching predicted clusters to classes
+    by mean intensity rank (FCM labels are permutation-arbitrary)."""
+    return [dice(pred_labels == k, gt_labels == k) for k in range(n_classes)]
+
+
+def match_labels_to_classes(labels, centers):
+    """Relabel FCM clusters so cluster rank by center intensity matches
+    class rank (background < CSF < GM < WM)."""
+    order = np.argsort(np.asarray(centers).ravel())
+    remap = np.empty_like(order)
+    remap[order] = np.arange(len(order))
+    return remap[np.asarray(labels)]

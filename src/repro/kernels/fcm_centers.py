@@ -1,0 +1,130 @@
+"""Pallas TPU kernels for the FCM cluster-center reduction (Eq. 3).
+
+Two kernels:
+
+* :func:`center_partials_pallas` — the paper-faithful reduction: reads a
+  *materialized* membership tile plus the pixel tile and accumulates the
+  numerator/denominator partial sums. This is the TPU analogue of the
+  paper's Algorithm-2 shared-memory tree reduction: each grid step
+  accumulates its (block_rows, 128) tile into a per-lane (c, 128) VMEM
+  accumulator (TPU grid steps are sequential on a core, so `+=` on an
+  output block mapped to a fixed index is the idiomatic reduction), and
+  the final 128-lane fold happens outside — the moral equivalent of the
+  paper's one-thread final-sum kernel, except it never leaves the device.
+
+* :func:`fused_partials_pallas` — beyond-paper: computes the membership
+  *inside* the kernel from the centers and immediately reduces, so the
+  (c, N) membership array never touches HBM. One O(N) read per FCM
+  iteration instead of the baseline's ~(3c+2)·N HBM traffic.
+
+Both use a validity-weight tile so padded pixels contribute zero.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+_D2_FLOOR = 1e-12
+
+
+def _accumulate(num_ref, den_ref, pnum, pden):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        num_ref[...] = jnp.zeros_like(num_ref)
+        den_ref[...] = jnp.zeros_like(den_ref)
+
+    num_ref[...] += pnum
+    den_ref[...] += pden
+
+
+def _center_partials_kernel(x_ref, u_ref, w_ref, num_ref, den_ref,
+                            *, m: float):
+    x = x_ref[...].astype(jnp.float32)          # (R, 128)
+    u = u_ref[...].astype(jnp.float32)          # (c, R, 128)
+    w = w_ref[...].astype(jnp.float32)          # (R, 128)
+    um = (u ** m) * w[None, :, :]
+    pnum = jnp.sum(um * x[None, :, :], axis=1)  # (c, 128) per-lane partials
+    pden = jnp.sum(um, axis=1)
+    _accumulate(num_ref, den_ref, pnum, pden)
+
+
+def _fused_partials_kernel(x_ref, w_ref, v_ref, num_ref, den_ref,
+                           *, m: float, c: int):
+    x = x_ref[...].astype(jnp.float32)              # (R, 128)
+    w = w_ref[...].astype(jnp.float32)
+    v = v_ref[...][:, 0].astype(jnp.float32)        # (c,)
+    d2 = (v[:, None, None] - x[None, :, :]) ** 2
+    p = jnp.clip(d2, _D2_FLOOR, None) ** (-1.0 / (m - 1.0))
+    u = p / jnp.sum(p, axis=0, keepdims=True)
+    zero = (d2 <= 0.0)
+    any_zero = jnp.any(zero, axis=0, keepdims=True)
+    zcount = jnp.maximum(jnp.sum(zero, axis=0, keepdims=True), 1)
+    u = jnp.where(any_zero, zero.astype(u.dtype) / zcount.astype(u.dtype), u)
+    um = (u ** m) * w[None, :, :]
+    pnum = jnp.sum(um * x[None, :, :], axis=1)
+    pden = jnp.sum(um, axis=1)
+    _accumulate(num_ref, den_ref, pnum, pden)
+
+
+def center_partials_pallas(x2d, u3d, w2d, m: float, block_rows: int = 64,
+                           interpret: bool = False):
+    """x2d (M,128), u3d (c,M,128), w2d (M,128) -> num (c,), den (c,)."""
+    mrows = x2d.shape[0]
+    c = u3d.shape[0]
+    assert mrows % block_rows == 0
+    grid = (mrows // block_rows,)
+    num, den = pl.pallas_call(
+        partial(_center_partials_kernel, m=m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((c, block_rows, LANES), lambda i: (0, i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((c, LANES), lambda i: (0, 0)),
+            pl.BlockSpec((c, LANES), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((c, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x2d, u3d, w2d)
+    return jnp.sum(num, axis=1), jnp.sum(den, axis=1)
+
+
+def fused_partials_pallas(x2d, w2d, v, m: float, block_rows: int = 64,
+                          interpret: bool = False):
+    """x2d (M,128), w2d (M,128), v (c,) -> num (c,), den (c,).
+
+    Membership never materialized: the whole FCM iteration is one kernel.
+    """
+    mrows = x2d.shape[0]
+    c = v.shape[0]
+    assert mrows % block_rows == 0
+    vb = jnp.broadcast_to(v.astype(jnp.float32)[:, None], (c, LANES))
+    grid = (mrows // block_rows,)
+    num, den = pl.pallas_call(
+        partial(_fused_partials_kernel, m=m, c=c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((c, LANES), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((c, LANES), lambda i: (0, 0)),
+            pl.BlockSpec((c, LANES), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((c, LANES), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x2d, w2d, vb)
+    return jnp.sum(num, axis=1), jnp.sum(den, axis=1)

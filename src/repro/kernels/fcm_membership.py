@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: FCM membership update (Eq. 4), one pass over pixels.
+
+TPU adaptation of the paper's per-pixel CUDA membership kernel (§4.3):
+instead of one scalar thread per pixel, pixels are laid out (rows, 128)
+so every VPU lane holds one pixel; a grid step processes a
+(block_rows, 128) VMEM tile and writes the (c, block_rows, 128)
+cluster-major membership tile. Centers are tiny and broadcast to every
+grid step.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+_D2_FLOOR = 1e-12
+
+
+def _membership_kernel(x_ref, v_ref, u_ref, *, m: float, c: int):
+    x = x_ref[...].astype(jnp.float32)              # (R, 128)
+    v = v_ref[...][:, 0].astype(jnp.float32)        # (c,)
+    d2 = (v[:, None, None] - x[None, :, :]) ** 2    # (c, R, 128)
+    p = jnp.clip(d2, _D2_FLOOR, None) ** (-1.0 / (m - 1.0))
+    u = p / jnp.sum(p, axis=0, keepdims=True)
+    zero = (d2 <= 0.0)
+    any_zero = jnp.any(zero, axis=0, keepdims=True)
+    zcount = jnp.maximum(jnp.sum(zero, axis=0, keepdims=True), 1)
+    u = jnp.where(any_zero, zero.astype(u.dtype) / zcount.astype(u.dtype), u)
+    u_ref[...] = u.astype(u_ref.dtype)
+
+
+def membership_pallas(x2d: jax.Array, v: jax.Array, m: float,
+                      block_rows: int = 64,
+                      interpret: bool = False) -> jax.Array:
+    """x2d: (M, 128) pixels; v: (c,) centers -> u: (c, M, 128).
+
+    M must be a multiple of block_rows (ops.py pads).
+    """
+    mrows = x2d.shape[0]
+    c = v.shape[0]
+    assert mrows % block_rows == 0, (mrows, block_rows)
+    vb = jnp.broadcast_to(v.astype(jnp.float32)[:, None], (c, LANES))
+    grid = (mrows // block_rows,)
+    return pl.pallas_call(
+        partial(_membership_kernel, m=m, c=c),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((c, LANES), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((c, block_rows, LANES), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, mrows, LANES), jnp.float32),
+        interpret=interpret,
+    )(x2d, vb)

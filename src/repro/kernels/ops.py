@@ -1,0 +1,94 @@
+"""Jitted public wrappers around the FCM Pallas kernels.
+
+Handles 1-D <-> (rows, 128) tiling, padding with validity weights, and
+interpret-mode fallback on non-TPU backends (kernel bodies execute in
+Python on CPU for correctness validation, per the Pallas docs).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import fcm_centers as KC
+from . import fcm_membership as KM
+
+LANES = KM.LANES
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _tile(x: jax.Array, block_rows: int):
+    """(N,) -> ((M,128) pixels, (M,128) weights, N) with M % block_rows == 0."""
+    n = x.shape[0]
+    per_block = block_rows * LANES
+    n_pad = (-n) % per_block
+    xp = jnp.concatenate([x.astype(jnp.float32),
+                          jnp.zeros((n_pad,), jnp.float32)])
+    w = jnp.concatenate([jnp.ones((n,), jnp.float32),
+                         jnp.zeros((n_pad,), jnp.float32)])
+    m_rows = (n + n_pad) // LANES
+    return xp.reshape(m_rows, LANES), w.reshape(m_rows, LANES), n
+
+
+@partial(jax.jit, static_argnames=("m", "block_rows", "interpret"))
+def _membership_impl(x, v, m, block_rows, interpret):
+    x2d, _, n = _tile(x, block_rows)
+    u = KM.membership_pallas(x2d, v, m, block_rows, interpret)
+    c = v.shape[0]
+    return u.reshape(c, -1)[:, :n]
+
+
+def membership(x, v, m: float = 2.0, block_rows: int = 64,
+               interpret=None) -> jax.Array:
+    """Eq. 4 membership via Pallas; x (N,), v (c,) -> u (c, N)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _membership_impl(x, v, m, block_rows, interpret)
+
+
+@partial(jax.jit, static_argnames=("m", "block_rows", "interpret"))
+def _center_partials_impl(x, u, m, block_rows, interpret):
+    x2d, w2d, n = _tile(x, block_rows)
+    c = u.shape[0]
+    pad = x2d.size - n
+    u_p = jnp.concatenate(
+        [u.astype(jnp.float32), jnp.zeros((c, pad), jnp.float32)], axis=1)
+    u3d = u_p.reshape(c, -1, LANES)
+    num, den = KC.center_partials_pallas(x2d, u3d, w2d, m, block_rows,
+                                         interpret)
+    return num[:, None], den          # num (c,1) matches (c,F) center layout
+
+
+def center_partials(x, u, m: float = 2.0, block_rows: int = 64,
+                    interpret=None):
+    """Eq. 3 partial sums from materialized membership (paper-faithful)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _center_partials_impl(x, u, m, block_rows, interpret)
+
+
+@partial(jax.jit, static_argnames=("m", "block_rows", "interpret"))
+def _fused_step_impl(x, v, m, block_rows, interpret):
+    x2d, w2d, n = _tile(x, block_rows)
+    num, den = KC.fused_partials_pallas(x2d, w2d, v, m, block_rows, interpret)
+    return num / jnp.maximum(den, 1e-12)
+
+
+def fused_step(x, v, m: float = 2.0, block_rows: int = 64, interpret=None):
+    """One fused v -> v' FCM iteration (single kernel launch)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _fused_step_impl(x, v, m, block_rows, interpret)
+
+
+def fused_partials(x2d, w2d, v, m: float = 2.0, block_rows: int = 64,
+                   interpret=None):
+    """Raw pre-tiled partials — used by the distributed fit where the
+    psum happens outside the kernel."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return KC.fused_partials_pallas(x2d, w2d, v, m, block_rows, interpret)

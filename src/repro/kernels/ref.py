@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the FCM Pallas kernels.
+
+All references operate on grayscale pixels ``x: (N,)`` with cluster-major
+memberships ``u: (c, N)`` and optional validity weights ``w: (N,)``.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import fcm as F
+
+
+def membership_ref(x, v, m):
+    """Eq. 4; (c, N) float32."""
+    return F.update_membership(jnp.asarray(x, jnp.float32),
+                               jnp.asarray(v, jnp.float32), m)
+
+
+def center_partials_ref(x, u, m, w=None):
+    """Summed numerator/denominator of Eq. 3: num (c,), den (c,)."""
+    x = jnp.asarray(x, jnp.float32)
+    um = jnp.asarray(u, jnp.float32) ** m
+    if w is not None:
+        um = um * jnp.asarray(w, jnp.float32)[None, :]
+    return um @ x, jnp.sum(um, axis=1)
+
+
+def fused_partials_ref(x, v, m, w=None):
+    """Membership (Eq. 4) substituted into Eq. 3 partial sums, without
+    materializing u: num (c,), den (c,)."""
+    u = membership_ref(x, v, m)
+    return center_partials_ref(x, u, m, w)
+
+
+def fused_step_ref(x, v, m, w=None):
+    """One fused v -> v' center iteration."""
+    num, den = fused_partials_ref(x, v, m, w)
+    return num / jnp.maximum(den, 1e-12)
+
+
+def selective_scan_ref(u, dt, bmat, cmat, a):
+    """Oracle for the Mamba selective-scan kernel: the exact lax.scan
+    recurrence from repro.models.ssm (no skip term, zero init)."""
+    import jax.numpy as jnp2
+    from repro.models.ssm import _ssm_scan
+    bsz, _, di = u.shape
+    ds = bmat.shape[-1]
+    h0 = jnp2.zeros((bsz, di, ds), jnp2.float32)
+    y, _ = _ssm_scan(u.astype(jnp2.float32), dt.astype(jnp2.float32),
+                     bmat.astype(jnp2.float32), cmat.astype(jnp2.float32),
+                     a, jnp2.zeros((di,), jnp2.float32), h0)
+    return y

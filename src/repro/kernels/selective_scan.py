@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: Mamba selective-scan (hillclimb #1, beyond-paper).
+
+Why a kernel: the SSM recurrence h_t = exp(dt_t A) h_t-1 + (dt_t u_t) B_t
+is elementwise-diagonal over (d_inner, d_state) with decay coupled in
+BOTH dims, so unlike RWKV/GLA there is no jnp chunked form that avoids
+materializing state-sized tensors per step — XLA cannot fuse across
+`lax.scan` steps and the measured HBM traffic of the scan lowering is
+~100 MB/step/device (EXPERIMENTS.md §Perf). This kernel keeps the state
+resident in VMEM for a whole sequence block and streams u/dt/B/C through:
+HBM traffic collapses to the kernel's own IO.
+
+Tiling: grid over (batch, d_inner tiles, seq blocks). Each grid step
+loads (seq_blk, di_tile) slabs of u/dt plus (seq_blk, d_state) B/C,
+iterates time in-VMEM with a fori_loop, writes the (seq_blk, di_tile) y
+slab. State (di_tile, d_state) is carried across seq blocks in a VMEM
+accumulator (TPU grids iterate sequentially, so the rightmost grid dim
+walks the sequence with the state block pinned).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _selective_scan_kernel(u_ref, dt_ref, b_ref, c_ref, a_ref, y_ref,
+                           h_ref, *, seq_blk: int):
+    sblk = pl.program_id(2)
+
+    @pl.when(sblk == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[...]                                   # (di_t, ds)
+    u = u_ref[...][0]                                # (seq_blk, di_t)
+    dt = dt_ref[...][0]
+    bmat = b_ref[...][0]                             # (seq_blk, ds)
+    cmat = c_ref[...][0]
+
+    def step(t, carry):
+        h, y = carry
+        dt_t = dt[t][:, None]                        # (di_t, 1)
+        da = jnp.exp(dt_t * a)                       # (di_t, ds)
+        h = da * h + (dt_t * u[t][:, None]) * bmat[t][None, :]
+        y = y.at[t].set(jnp.sum(h * cmat[t][None, :], axis=-1))
+        return h, y
+
+    y0 = jnp.zeros(u.shape, jnp.float32)
+    h, y = jax.lax.fori_loop(0, seq_blk, step,
+                             (h_ref[...].astype(jnp.float32), y0))
+    h_ref[...] = h
+    y_ref[...] = y[None].astype(y_ref.dtype)
+
+
+def selective_scan_pallas(u, dt, bmat, cmat, a, *, di_tile: int = 512,
+                          seq_blk: int = 128, interpret: bool = False):
+    """u, dt: (B, S, di); bmat, cmat: (B, S, ds); a: (di, ds) ->
+    y (B, S, di) fp32. S % seq_blk == 0, di % di_tile == 0."""
+    bsz, s, di = u.shape
+    ds = bmat.shape[-1]
+    di_tile = min(di_tile, di)
+    seq_blk = min(seq_blk, s)
+    assert s % seq_blk == 0 and di % di_tile == 0
+    grid = (bsz, di // di_tile, s // seq_blk)
+    y, _ = pl.pallas_call(
+        partial(_selective_scan_kernel, seq_blk=seq_blk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, seq_blk, di_tile), lambda b, d, t: (b, t, d)),
+            pl.BlockSpec((1, seq_blk, di_tile), lambda b, d, t: (b, t, d)),
+            pl.BlockSpec((1, seq_blk, ds), lambda b, d, t: (b, t, 0)),
+            pl.BlockSpec((1, seq_blk, ds), lambda b, d, t: (b, t, 0)),
+            pl.BlockSpec((di_tile, ds), lambda b, d, t: (d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, seq_blk, di_tile), lambda b, d, t: (b, t, d)),
+            pl.BlockSpec((di_tile, ds), lambda b, d, t: (d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, di), jnp.float32),
+            jax.ShapeDtypeStruct((di_tile, ds), jnp.float32),
+        ],
+        interpret=interpret,
+    )(u, dt, bmat, cmat, a)
+    return y

@@ -1,0 +1,3 @@
+# Launchers. NOTE: dryrun.py must be imported/run as the process entry
+# (it sets XLA_FLAGS before jax init); do not import it from library code.
+from . import mesh  # noqa: F401

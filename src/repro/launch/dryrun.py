@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT-lower + compile every (arch x input-shape) cell
+on the production meshes (16,16) and (2,16,16), print memory/cost
+analysis, parse collective traffic from the partitioned HLO, and append
+roofline records to a JSONL the benchmarks/EXPERIMENTS.md read.
+
+The two lines above MUST precede every other import (jax locks the device
+count on first init); only this entry point sees 512 fake devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mistral-nemo-12b \
+      --shape train_4k --mesh single --force
+"""
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import configs                      # noqa: E402
+from repro.analysis import hw, roofline        # noqa: E402
+from repro.core import distributed as fcm_dist  # noqa: E402
+from repro.core.fcm import FCMConfig           # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import lm                    # noqa: E402
+from repro.models import sharding as sh        # noqa: E402
+from repro.training import train_loop as tl    # noqa: E402
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun.jsonl")
+
+
+def _sds(tree, shardings):
+    """Abstract tree + sharding tree -> ShapeDtypeStruct-with-sharding."""
+    return jax.tree_util.tree_map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        tree, shardings)
+
+
+def _abstract_batch(cfg, shape):
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+           "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.is_encdec:
+        out["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                             jnp.float32)
+    if cfg.n_img_tokens:
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_img_tokens, cfg.d_model), jnp.float32)
+    return out
+
+
+# At-scale training config for the dry-run: bf16 Adam moments (fp32
+# master weights kept) — the realistic memory budget for 100B+ on v5e.
+TRAIN_CFG = tl.TrainConfig(
+    optimizer=tl.opt.OptimizerConfig(moment_dtype="bfloat16"))
+
+# deeper grad-accumulation for the giant configs (activation footprint)
+MICROBATCH_OVERRIDE = {"deepseek-v2-236b": 16, "mistral-large-123b": 16,
+                       "llama-3.2-vision-90b": 16}
+
+
+def input_specs(cfg, shape, ctx):
+    """ShapeDtypeStruct stand-ins (weak-type-correct, shardable, no
+    allocation) for every input of this cell's step function."""
+    b, s = shape.global_batch, shape.seq_len
+    aparams = lm.abstract_params(cfg)
+    pshard = sh.to_named_shardings(aparams, lm.param_specs(cfg), ctx)
+
+    if shape.kind == "train":
+        astate = tl.abstract_state(cfg, TRAIN_CFG)
+        sshard = sh.to_named_shardings(astate, tl.state_specs(cfg), ctx)
+        abatch = _abstract_batch(cfg, shape)
+        bshard = sh.to_named_shardings(abatch, tl.batch_specs(cfg), ctx)
+        return (_sds(astate, sshard), _sds(abatch, bshard)), sshard
+
+    acache = jax.eval_shape(lambda: lm.init_cache(cfg, b, s))
+    cshard = sh.to_named_shardings(acache, lm.cache_specs(cfg), ctx)
+    cache_sds = _sds(acache, cshard)
+
+    def dp_sharding(shape_tuple):
+        spec = sh.prune_spec(ctx.pspec(*(("dp",) + (None,) *
+                                         (len(shape_tuple) - 1))),
+                             shape_tuple, ctx.mesh)
+        return jax.sharding.NamedSharding(ctx.mesh, spec)
+
+    if shape.kind == "prefill":
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32,
+                                   sharding=dp_sharding((b, s)))
+        extra = {}
+        if cfg.is_encdec:
+            extra["frames"] = jax.ShapeDtypeStruct(
+                (b, s, cfg.d_model), jnp.float32,
+                sharding=dp_sharding((b, s, cfg.d_model)))
+        if cfg.n_img_tokens:
+            extra["memory"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_img_tokens, cfg.d_model), cfg.dtype,
+                sharding=dp_sharding((b, cfg.n_img_tokens, cfg.d_model)))
+        return (_sds(aparams, pshard), tok, cache_sds, extra), cshard
+
+    # decode: one new token against a seq_len cache
+    tok = jax.ShapeDtypeStruct((b, 1), jnp.int32,
+                               sharding=dp_sharding((b, 1)))
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return (_sds(aparams, pshard), tok, cache_sds, pos), cshard
+
+
+def lower_cell(cfg, shape, mesh, ctx):
+    """Returns (lowered, out_shardings_hint)."""
+    if shape.kind == "train":
+        (state_sds, batch_sds), sshard = input_specs(cfg, shape, ctx)
+        step = tl.make_train_step(cfg, TRAIN_CFG)
+        fn = jax.jit(step, out_shardings=(sshard, None),
+                     donate_argnums=(0,))          # state updated in place
+        return fn.lower(state_sds, batch_sds)
+    if shape.kind == "prefill":
+        (p_sds, tok, cache_sds, extra), cshard = input_specs(cfg, shape, ctx)
+        fn = jax.jit(lambda p, t, c, kw: lm.prefill(p, t, c, cfg, **kw),
+                     out_shardings=(None, cshard),
+                     donate_argnums=(2,))          # cache updated in place
+        return fn.lower(p_sds, tok, cache_sds, extra)
+    (p_sds, tok, cache_sds, pos), cshard = input_specs(cfg, shape, ctx)
+    fn = jax.jit(lambda p, t, c, i: lm.decode_step(p, t, c, i, cfg),
+                 out_shardings=(None, cshard), donate_argnums=(2,))
+    return fn.lower(p_sds, tok, cache_sds, pos)
+
+
+FCM_SHAPE = configs.ShapeConfig("fcm_1g", "fcm", 1 << 30, 1)
+
+
+def lower_fcm(mesh, ctx):
+    n = FCM_SHAPE.seq_len                       # 1 Gi voxels
+    spec = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec(tuple(mesh.axis_names)))
+    x = jax.ShapeDtypeStruct((n,), jnp.float32, sharding=spec)
+    w = jax.ShapeDtypeStruct((n,), jnp.float32, sharding=spec)
+    fit = fcm_dist.build_sharded_fit(mesh, FCMConfig())
+    return fit.lower(x, w)
+
+
+def run_cell(arch, shape, multi_pod, verbose=True, microbatches=8):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ctx = sh.make_parallelism(mesh)
+    label = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    with mesh, sh.parallelism(ctx):
+        if arch == "fcm-brainweb":
+            cfg, sh_obj = None, FCM_SHAPE
+            lowered = lower_fcm(mesh, ctx)
+            shape = FCM_SHAPE
+        else:
+            cfg = configs.get_config(arch)
+            if shape.kind == "train":
+                mb = MICROBATCH_OVERRIDE.get(arch, microbatches)
+                if mb > 1:
+                    cfg = dataclasses.replace(cfg, microbatches=mb)
+            lowered = lower_cell(cfg, shape, mesh, ctx)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    text = compiled.as_text()
+    # FCM's while-loop is data-dependent convergence, not a scan: report
+    # per-iteration roofline terms (override trip counts to 1).
+    rep = roofline.analyze(arch, shape, label, mesh.size, cost, mem,
+                           text, cfg,
+                           while_override=1 if arch == "fcm-brainweb"
+                           else None)
+    rec = rep.row()
+    rec.update(lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+               hlo_bytes=len(text))
+    if verbose:
+        print(f"  memory_analysis: args={rep.mem_args_gb:.3f}GiB "
+              f"temp={rep.mem_temp_gb:.3f}GiB out={rep.mem_out_gb:.3f}GiB "
+              f"fits_hbm={rep.fits_hbm}")
+        print(f"  cost_analysis: flops/dev={rep.flops_per_dev:.3e} "
+              f"bytes/dev={rep.bytes_per_dev:.3e}")
+        print(f"  collectives: wire={rep.wire_bytes:.3e}B "
+              f"terms (s): compute={rep.t_compute:.4f} "
+              f"memory={rep.t_memory:.4f} coll={rep.t_collective:.4f} "
+              f"-> {rep.bottleneck}-bound")
+    return rec
+
+
+def cells(arch_filter, shape_filter):
+    for arch in configs.list_archs() + ["fcm-brainweb"]:
+        if arch_filter != "all" and arch not in arch_filter.split(","):
+            continue
+        if arch == "fcm-brainweb":
+            yield arch, FCM_SHAPE
+            continue
+        cfg = configs.get_config(arch)
+        for s in configs.applicable_shapes(cfg):
+            if shape_filter != "all" and s.name not in shape_filter.split(","):
+                continue
+            yield arch, s
+
+
+def load_done(path):
+    done = set()
+    if os.path.exists(path):
+        with open(path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    pass
+    return done
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=os.path.normpath(DEFAULT_OUT))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=8,
+                    help="grad-accum microbatches for train cells")
+    args = ap.parse_args(argv)
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    todo = [(a, s, mp) for a, s in cells(args.arch, args.shape)
+            for mp in meshes]
+    if args.list:
+        for a, s, mp in todo:
+            print(a, s.name, "2x16x16" if mp else "16x16")
+        return 0
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    done = set() if args.force else load_done(args.out)
+    failures = []
+    for arch, shape, mp in todo:
+        label = "2x16x16" if mp else "16x16"
+        key = (arch, shape.name, label)
+        if key in done:
+            print(f"[skip] {arch} x {shape.name} x {label}")
+            continue
+        print(f"[cell] {arch} x {shape.name} x {label}")
+        try:
+            rec = run_cell(arch, shape, mp, microbatches=args.microbatches)
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+            print(f"  ok (lower {rec['lower_s']}s compile "
+                  f"{rec['compile_s']}s)")
+        except Exception as e:
+            failures.append((key, repr(e)))
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILED cells:")
+        for k, e in failures:
+            print(" ", k, e)
+        return 1
+    print("\nall cells OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,129 @@
+"""Production training launcher.
+
+Wires the full substrate: arch config + shape -> mesh (elastic-planned
+from the visible device count) -> sharded train state -> deterministic
+host-sharded data pipeline -> jitted train step (donated state) -> async
+checkpoints + straggler watchdog + crash-restart loop.
+
+On this container it runs real (small) configs on one CPU device; on a
+pod it is launched once per host with the same arguments (jax
+distributed init is picked up from the environment if present).
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+      --reduced --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ck
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data import pipeline
+from repro.models import sharding as sh
+from repro.training import checkpoint as ckpt
+from repro.training import elastic
+from repro.training import optimizer as opt
+from repro.training import train_loop as tl
+
+
+def build(cfg, tcfg, mesh, resume_dir=None):
+    ctx = sh.make_parallelism(mesh)
+    with sh.parallelism(ctx):
+        astate = tl.abstract_state(cfg, tcfg)
+        shardings = sh.to_named_shardings(astate, tl.state_specs(cfg), ctx)
+        if resume_dir and ckpt.latest_step(resume_dir) is not None:
+            state, manifest = ckpt.load_checkpoint(
+                resume_dir, astate, shardings=shardings)
+            start = manifest["step"]
+        else:
+            state = tl.init_state(jax.random.PRNGKey(0), cfg, tcfg)
+            if mesh is not None:
+                state = jax.tree_util.tree_map(jax.device_put, state,
+                                               shardings)
+            start = 0
+        step_fn = jax.jit(tl.make_train_step(cfg, tcfg),
+                          donate_argnums=(0,))
+    return state, step_fn, ctx, start
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.list_archs())
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized config of the same family")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--compress-cross-pod", action="store_true")
+    ap.add_argument("--max-restarts", type=int, default=2,
+                    help="crash-restart attempts (fault tolerance)")
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = dataclasses.replace(cfg, microbatches=args.microbatches)
+    shape = configs.ShapeConfig("train", "train", args.seq, args.batch)
+    tcfg = tl.TrainConfig(
+        optimizer=opt.OptimizerConfig(lr=args.lr, warmup_steps=20,
+                                      total_steps=args.steps),
+        compress_cross_pod=args.compress_cross_pod)
+
+    mesh = elastic.plan_mesh(len(jax.devices())) \
+        if len(jax.devices()) > 1 else None
+    print(f"arch={cfg.name} devices={len(jax.devices())} "
+          f"mesh={mesh.shape if mesh else None}")
+
+    restarts = 0
+    while True:
+        try:
+            state, step_fn, ctx, start = build(cfg, tcfg, mesh,
+                                               args.ckpt_dir)
+            saver = (ckpt.AsyncCheckpointer(args.ckpt_dir)
+                     if args.ckpt_dir else None)
+            timer = elastic.StepTimer()
+            with sh.parallelism(ctx):
+                for i, batch in enumerate(
+                        pipeline.batches(cfg, shape, start)):
+                    step = start + i
+                    if step >= args.steps:
+                        break
+                    timer.start()
+                    state, metrics = step_fn(
+                        state,
+                        {k: jnp.asarray(v) for k, v in batch.items()})
+                    slow = timer.stop()
+                    if step % 10 == 0 or step == args.steps - 1:
+                        print(f"step {step:5d} "
+                              f"loss={float(metrics['loss']):.4f} "
+                              f"gnorm={float(metrics['grad_norm']):.2f}"
+                              + (" [straggler]" if slow else ""))
+                    if saver and step and step % args.ckpt_every == 0:
+                        saver.save(state, step)
+            if saver:
+                saver.save(state, int(state["step"]))
+                saver.wait()
+            print("training complete")
+            return 0
+        except Exception as e:                          # noqa: BLE001
+            restarts += 1
+            if restarts > args.max_restarts or not args.ckpt_dir:
+                raise
+            print(f"[fault] {e!r}; restart {restarts}/"
+                  f"{args.max_restarts} from latest checkpoint",
+                  file=sys.stderr)
+            time.sleep(1.0)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,2 @@
+from . import (attention, blocks, layers, lm, moe, sharding,  # noqa: F401
+               ssm)

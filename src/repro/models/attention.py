@@ -1,0 +1,364 @@
+"""Attention mixers: GQA (flash-style chunked softmax in pure jnp) and
+MLA (DeepSeek-V2 multi-head latent attention with compressed KV cache and
+absorbed decode matmuls).
+
+Shapes: activations (B, S, D); q/k/v (B, H, S, hd); caches are per-layer
+dicts (stacked over scan groups by the caller).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import sharding as sh
+
+_NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Softmax attention cores
+# ---------------------------------------------------------------------------
+
+def _plain_attention(q, k, v, causal: bool, q_offset: int = 0,
+                     kv_len: Optional[jax.Array] = None):
+    """q (B,K,G,Sq,hd) grouped-query vs k/v (B,K,Skv,hd)."""
+    b, kh, g, sq, hd = q.shape
+    skv = k.shape[2]
+    scores = jnp.einsum("bkgqh,bkth->bkgqt", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(skv)
+        mask = kpos[None, :] <= qpos[:, None]
+        scores = jnp.where(mask[None, None, None], scores, _NEG_INF)
+    if kv_len is not None:
+        mask = jnp.arange(skv)[None, :] < kv_len[:, None]          # (B,Skv)
+        scores = jnp.where(mask[:, None, None, None], scores, _NEG_INF)
+    # softmax with f32 row-max/denominator but bf16 exponentials: the
+    # S x S tensors on the HBM path are half as wide (§Perf hillclimb
+    # #2, iteration c — max-subtracted exp is in [0,1], so bf16's 8
+    # mantissa bits cost ~1e-3 relative error on the normalized weights)
+    m = jax.lax.stop_gradient(jnp.max(scores, axis=-1, keepdims=True))
+    p = jnp.exp((scores - m).astype(q.dtype))           # bf16 exp in [0,1]
+    denom = jnp.sum(p, axis=-1, keepdims=True, dtype=jnp.float32)
+    w = p / denom.astype(q.dtype)
+    return jnp.einsum("bkgqt,bkth->bkgqh", w, v)
+
+
+def _flash_attention(q, k, v, causal: bool, q_chunk: int, kv_chunk: int):
+    """Online-softmax chunked attention: O(Sq*ckv) live memory instead of
+    O(Sq*Skv). Pure jnp (lax.scan over kv chunks inside a scan over q
+    chunks) — the TPU-native replacement for materialized scores."""
+    b, kh, g, sq, hd = q.shape
+    hd_v = v.shape[-1]                      # MLA: v head dim != q head dim
+    skv = k.shape[2]
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    assert sq % q_chunk == 0 and skv % kv_chunk == 0, (sq, skv)
+    nq, nk = sq // q_chunk, skv // kv_chunk
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+
+    kc = k.reshape(b, kh, nk, kv_chunk, hd)
+    vc = v.reshape(b, kh, nk, kv_chunk, hd_v)
+
+    def q_step(qi, q_blk):
+        # q_blk: (B,K,G,cq,hd)
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_index_in_dim(kc, kj, 2, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vc, kj, 2, keepdims=False)
+            s = jnp.einsum("bkgqh,bkth->bkgqt", q_blk, kb)
+            s = s.astype(jnp.float32) * scale
+            if causal:
+                qpos = qi * q_chunk + jnp.arange(q_chunk)
+                kpos = kj * kv_chunk + jnp.arange(kv_chunk)
+                mask = kpos[None, :] <= qpos[:, None]
+                s = jnp.where(mask[None, None, None], s, _NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,bkth->bkgqh", p.astype(vb.dtype), vb).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kh, g, q_chunk), _NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, q_chunk, hd_v), jnp.float32)
+        # causal: kv chunks beyond this q chunk contribute nothing but are
+        # still scanned (masked) — keeps the scan length static.
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(nk))
+        return acc / jnp.maximum(l[..., None], 1e-30)
+
+    qs = q.reshape(b, kh, g, nq, q_chunk, hd).transpose(3, 0, 1, 2, 4, 5)
+    out = jax.lax.map(lambda args: q_step(*args),
+                      (jnp.arange(nq), qs))
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(b, kh, g, sq, hd_v)
+    return out.astype(q.dtype)
+
+
+def grouped_attention(q, k, v, causal: bool, q_offset: int = 0,
+                      kv_len=None, flash_threshold: int = 4096,
+                      q_chunk: int = 512, kv_chunk: int = 1024):
+    """Dispatch between plain and flash paths. q (B,Hq,Sq,hd),
+    k/v (B,Hkv,Skv,hd); Hq % Hkv == 0.
+
+    K/V are expanded to the full query-head count first: a (Hkv, group)
+    reshape would break head sharding whenever Hkv < tp (GQA kv=8 on
+    tp=16 replicates the S x S score tensor on every device — measured
+    6.4 GiB/device on mistral-large). The repeat costs one K/V-sized
+    broadcast and keeps scores sharded over tp."""
+    b, hq, sq, hd = q.shape
+    hkv = k.shape[1]
+    if hkv != hq:
+        k = jnp.repeat(k, hq // hkv, axis=1)
+        v = jnp.repeat(v, hq // hkv, axis=1)
+    qg = q.reshape(b, hq, 1, sq, hd)
+    skv = k.shape[2]
+    flash_ok = (sq % min(q_chunk, sq) == 0
+                and skv % min(kv_chunk, skv) == 0 and skv > kv_chunk)
+    if not flash_ok or (sq * skv <= flash_threshold * flash_threshold
+                        and sq <= flash_threshold):
+        out = _plain_attention(qg, k, v, causal, q_offset, kv_len)
+    else:
+        assert kv_len is None, "flash path is for full-length prefill/train"
+        out = _flash_attention(qg, k, v, causal, q_chunk, kv_chunk)
+    return out.reshape(b, hq, sq, out.shape[-1])   # v head dim (MLA: != q's)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, cfg):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.init_dense(ks[0], (d, hq, hd), d),
+        "wk": L.init_dense(ks[1], (d, hkv, hd), d),
+        "wv": L.init_dense(ks[2], (d, hkv, hd), d),
+        "wo": L.init_dense(ks[3], (hq, hd, d), hq * hd),
+    }
+
+
+def spec_gqa():
+    return {"wq": ("fsdp", "tp", None), "wk": ("fsdp", "tp", None),
+            "wv": ("fsdp", "tp", None), "wo": ("tp", None, "fsdp")}
+
+
+def gqa_qkv(p, x, positions, cfg):
+    dtype = cfg.dtype
+    q = jnp.einsum("bsd,dhk->bhsk", x,
+                   L.gathered(p["wq"], dtype, None, "tp", None),
+                   preferred_element_type=dtype)
+    k = jnp.einsum("bsd,dhk->bhsk", x,
+                   L.gathered(p["wk"], dtype, None, "tp", None),
+                   preferred_element_type=dtype)
+    v = jnp.einsum("bsd,dhk->bhsk", x,
+                   L.gathered(p["wv"], dtype, None, "tp", None),
+                   preferred_element_type=dtype)
+    q = L.apply_rope(q.swapaxes(1, 2), positions, cfg.rope_theta).swapaxes(1, 2)
+    k = L.apply_rope(k.swapaxes(1, 2), positions, cfg.rope_theta).swapaxes(1, 2)
+    q = sh.shard(q, "dp", "tp", None, None)
+    k = sh.shard(k, "dp", "tp", None, None)
+    v = sh.shard(v, "dp", "tp", None, None)
+    return q, k, v
+
+
+def gqa_forward(p, x, positions, cfg, causal=True, return_kv=False):
+    """Train / prefill path."""
+    q, k, v = gqa_qkv(p, x, positions, cfg)
+    out = grouped_attention(q, k, v, causal,
+                            flash_threshold=cfg.flash_threshold,
+                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    y = jnp.einsum("bhsk,hkd->bsd", out,
+                   L.gathered(p["wo"], cfg.dtype, "tp", None, None),
+                   preferred_element_type=cfg.dtype)
+    y = sh.shard(y, "dp", None, None)
+    return (y, (k, v)) if return_kv else y
+
+
+def init_gqa_cache(cfg, batch, max_len, dtype):
+    shape = (batch, cfg.n_kv_heads, max_len, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_cache_spec(cfg):
+    """KV heads rarely divide tp=16 (GQA kv=8), so the long cache is
+    sequence-sharded over tp instead — decode attention then runs as
+    sequence-parallel partial-softmax with tiny all-reduces (GSPMD)."""
+    if cfg.n_kv_heads % 16 == 0:
+        kv = ("dp", "tp", None, None)
+    else:
+        kv = ("dp", None, "tp", None)
+    return {"k": kv, "v": kv}
+
+
+def gqa_decode(p, x, cache, pos, cfg):
+    """One-token decode: x (B,1,D); cache k/v (B,Hkv,Smax,hd); pos scalar."""
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    q, k_new, v_new = gqa_qkv(p, x, positions, cfg)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, pos, axis=2)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, pos, axis=2)
+    kv_len = jnp.full((x.shape[0],), pos + 1, jnp.int32)
+    out = grouped_attention(q, k, v, causal=False, kv_len=kv_len,
+                            flash_threshold=1 << 30)
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(cfg.dtype))
+    return y, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (whisper decoder / llama-vision gated cross blocks)
+# ---------------------------------------------------------------------------
+
+def init_cross(key, cfg, gated: bool):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.init_dense(ks[0], (d, hq, hd), d),
+        "wk": L.init_dense(ks[1], (d, hkv, hd), d),
+        "wv": L.init_dense(ks[2], (d, hkv, hd), d),
+        "wo": L.init_dense(ks[3], (hq, hd, d), hq * hd),
+    }
+    if gated:
+        p["gate"] = jnp.zeros((1,), jnp.float32)   # tanh-gated, starts closed
+    return p
+
+
+def spec_cross(gated: bool):
+    s = {"wq": ("fsdp", "tp", None), "wk": ("fsdp", "tp", None),
+         "wv": ("fsdp", "tp", None), "wo": ("tp", None, "fsdp")}
+    if gated:
+        s["gate"] = (None,)
+    return s
+
+
+def cross_kv(p, memory, cfg):
+    """Precompute K/V from encoder/image memory (B, M, D)."""
+    dtype = cfg.dtype
+    k = jnp.einsum("bmd,dhk->bhmk", memory, p["wk"].astype(dtype))
+    v = jnp.einsum("bmd,dhk->bhmk", memory, p["wv"].astype(dtype))
+    return sh.shard(k, "dp", "tp", None, None), sh.shard(v, "dp", "tp", None, None)
+
+
+def cross_forward(p, x, kv, cfg):
+    k, v = kv
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(cfg.dtype))
+    out = grouped_attention(q, k, v, causal=False,
+                            flash_threshold=cfg.flash_threshold,
+                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(cfg.dtype))
+    if "gate" in p:
+        y = jnp.tanh(p["gate"]).astype(cfg.dtype) * y
+    return sh.shard(y, "dp", None, None)
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_dq": L.init_dense(ks[0], (d, m.q_lora_rank), d),
+        "w_uq": L.init_dense(ks[1], (m.q_lora_rank, h,
+                                     m.qk_nope_head_dim + m.qk_rope_head_dim),
+                             m.q_lora_rank),
+        "w_dkv": L.init_dense(ks[2], (d, m.kv_lora_rank), d),
+        "w_uk": L.init_dense(ks[3], (m.kv_lora_rank, h, m.qk_nope_head_dim),
+                             m.kv_lora_rank),
+        "w_uv": L.init_dense(ks[4], (m.kv_lora_rank, h, m.v_head_dim),
+                             m.kv_lora_rank),
+        "w_kr": L.init_dense(ks[5], (d, m.qk_rope_head_dim), d),
+        "wo": L.init_dense(ks[6], (h, m.v_head_dim, d), h * m.v_head_dim),
+    }
+
+
+def spec_mla():
+    return {"w_dq": ("fsdp", None), "w_uq": (None, "tp", None),
+            "w_dkv": ("fsdp", None), "w_uk": (None, "tp", None),
+            "w_uv": (None, "tp", None), "w_kr": ("fsdp", None),
+            "wo": ("tp", None, "fsdp")}
+
+
+def _mla_q(p, x, positions, cfg):
+    m, dtype = cfg.mla, cfg.dtype
+    cq = jnp.einsum("bsd,dr->bsr", x, p["w_dq"].astype(dtype))
+    q = jnp.einsum("bsr,rhk->bhsk", cq, p["w_uq"].astype(dtype))
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = L.apply_rope(q[..., m.qk_nope_head_dim:].swapaxes(1, 2),
+                          positions, cfg.rope_theta).swapaxes(1, 2)
+    return q_nope, q_rope
+
+
+def _mla_ckv(p, x, positions, cfg):
+    dtype = cfg.dtype
+    c_kv = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(dtype))
+    k_rope = jnp.einsum("bsd,dk->bsk", x, p["w_kr"].astype(dtype))
+    k_rope = L.apply_rope(k_rope, positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_forward(p, x, positions, cfg, causal=True, return_kv=False):
+    """Training/prefill: decompress K,V and run standard MHA (flash)."""
+    m, dtype = cfg.mla, cfg.dtype
+    q_nope, q_rope = _mla_q(p, x, positions, cfg)
+    c_kv, k_rope = _mla_ckv(p, x, positions, cfg)
+    k_nope = jnp.einsum("bsr,rhk->bhsk", c_kv, p["w_uk"].astype(dtype))
+    v = jnp.einsum("bsr,rhk->bhsk", c_kv, p["w_uv"].astype(dtype))
+    kr = jnp.broadcast_to(k_rope[:, None], (x.shape[0], cfg.n_heads)
+                          + k_rope.shape[1:])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, kr], axis=-1)
+    out = grouped_attention(q, k, v, causal,
+                            flash_threshold=cfg.flash_threshold,
+                            q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk)
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(dtype))
+    y = sh.shard(y, "dp", None, None)
+    return (y, (c_kv, k_rope)) if return_kv else y
+
+
+def init_mla_cache(cfg, batch, max_len, dtype):
+    m = cfg.mla
+    return {"c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype)}
+
+
+def mla_cache_spec(cfg):
+    # compressed cache has no head dim: shard sequence over tp
+    return {"c_kv": ("dp", "tp", None), "k_rope": ("dp", "tp", None)}
+
+
+def mla_decode(p, x, cache, pos, cfg):
+    """Absorbed decode: scores and values computed against the compressed
+    cache; per-token cache is kv_lora+rope_dim (576 for DS-V2) instead of
+    2*H*hd — the MLA memory win, reproduced faithfully."""
+    m, dtype = cfg.mla, cfg.dtype
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, x, positions, cfg)      # (B,H,1,*)
+    c_new, kr_new = _mla_ckv(p, x, positions, cfg)     # (B,1,r), (B,1,kr)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_new, pos, 1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], kr_new,
+                                                 pos, 1)
+    # absorb W_uk into q:  (B,H,1,nope) x (r,H,nope) -> (B,H,1,r)
+    q_abs = jnp.einsum("bhsk,rhk->bhsr", q_nope, p["w_uk"].astype(dtype))
+    scores = (jnp.einsum("bhsr,btr->bhst", q_abs, c_kv)
+              + jnp.einsum("bhsk,btk->bhst", q_rope, k_rope))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(m.qk_nope_head_dim
+                                       + m.qk_rope_head_dim, jnp.float32))
+    scores = scores.astype(jnp.float32) * scale
+    mask = jnp.arange(c_kv.shape[1])[None, :] <= pos
+    scores = jnp.where(mask[:, None, None, :], scores, _NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(dtype)
+    ctx = jnp.einsum("bhst,btr->bhsr", w, c_kv)
+    out = jnp.einsum("bhsr,rhk->bhsk", ctx, p["w_uv"].astype(dtype))
+    y = jnp.einsum("bhsk,hkd->bsd", out, p["wo"].astype(dtype))
+    return y, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,242 @@
+"""Composable transformer/SSM blocks.
+
+A block = pre-norm mixer sub-layer (+ optional cross-attention sub-layer)
++ pre-norm FFN sub-layer, all residual. The mixer and FFN kinds are
+static strings from the arch config's group layout, so heterogeneous
+stacks (Jamba's 1:7 attn:mamba interleave, Llama-vision's every-5th
+cross block, Whisper's decoder) compose from one code path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from . import layers as L
+from . import moe as M
+from . import sharding as sh
+from . import ssm as S
+
+
+# --- gelu MLP (whisper) -----------------------------------------------------
+
+def init_gelu_mlp(key, d, f):
+    k1, k2 = jax.random.split(key)
+    return {"w_in": L.init_dense(k1, (d, f), d),
+            "w_out": L.init_dense(k2, (f, d), f)}
+
+
+def spec_gelu_mlp():
+    return {"w_in": ("fsdp", "tp"), "w_out": ("tp", "fsdp")}
+
+
+def gelu_mlp(p, x, dtype):
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(dtype)))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"].astype(dtype))
+
+
+# --- block ------------------------------------------------------------------
+
+def init_block(key, cfg, desc):
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {"norm1": L.init_rmsnorm(d), "norm2": L.init_rmsnorm(d)}
+    if desc.mixer == "gqa":
+        p["mixer"] = A.init_gqa(ks[0], cfg)
+    elif desc.mixer == "mla":
+        p["mixer"] = A.init_mla(ks[0], cfg)
+    elif desc.mixer == "cross":
+        p["mixer"] = A.init_cross(ks[0], cfg, gated=desc.gated)
+    elif desc.mixer == "rwkv6":
+        p["mixer"] = S.init_rwkv6(ks[0], cfg)
+    elif desc.mixer == "mamba":
+        p["mixer"] = S.init_mamba(ks[0], cfg)
+    else:
+        raise ValueError(desc.mixer)
+    if desc.cross:                      # extra cross sub-layer (whisper dec)
+        p["norm_x"] = L.init_rmsnorm(d)
+        p["cross"] = A.init_cross(ks[1], cfg, gated=desc.gated)
+    if desc.ffn == "swiglu":
+        p["ffn"] = L.init_mlp(ks[2], d, cfg.d_ff)
+    elif desc.ffn == "gelu":
+        p["ffn"] = init_gelu_mlp(ks[2], d, cfg.d_ff)
+    elif desc.ffn == "moe":
+        p["ffn"] = M.init_moe(ks[2], cfg)
+    elif desc.ffn == "rwkv_cm":
+        p["ffn"] = S.init_rwkv_cm(ks[2], cfg)
+    else:
+        raise ValueError(desc.ffn)
+    return p
+
+
+def spec_block(cfg, desc):
+    s = {"norm1": L.spec_rmsnorm(), "norm2": L.spec_rmsnorm()}
+    s["mixer"] = {"gqa": A.spec_gqa, "mla": A.spec_mla,
+                  "cross": lambda: A.spec_cross(desc.gated),
+                  "rwkv6": S.spec_rwkv6, "mamba": S.spec_mamba}[desc.mixer]()
+    if desc.cross:
+        s["norm_x"] = L.spec_rmsnorm()
+        s["cross"] = A.spec_cross(desc.gated)
+    s["ffn"] = {"swiglu": L.spec_mlp, "gelu": spec_gelu_mlp,
+                "moe": lambda: M.spec_moe(cfg),
+                "rwkv_cm": S.spec_rwkv_cm}[desc.ffn]()
+    return s
+
+
+def init_block_cache(cfg, desc, batch, max_len, n_memory):
+    """Decode-time state for one block (None-free: scan needs static
+    structure)."""
+    cache = {}
+    if desc.mixer == "gqa":
+        cache["attn"] = A.init_gqa_cache(cfg, batch, max_len, cfg.dtype)
+    elif desc.mixer == "mla":
+        cache["attn"] = A.init_mla_cache(cfg, batch, max_len, cfg.dtype)
+    elif desc.mixer == "rwkv6":
+        cache["rwkv"] = S.init_rwkv6_state(cfg, batch)
+        cache["cm_prev"] = jnp.zeros((batch, cfg.d_model), cfg.dtype)
+    elif desc.mixer == "mamba":
+        cache["mamba"] = S.init_mamba_state(cfg, batch)
+    if desc.mixer == "cross" or desc.cross:
+        hkv, hd = cfg.n_kv_heads, cfg.head_dim
+        cache["cross_kv"] = {
+            "k": jnp.zeros((batch, hkv, n_memory, hd), cfg.dtype),
+            "v": jnp.zeros((batch, hkv, n_memory, hd), cfg.dtype)}
+    if desc.ffn == "rwkv_cm":
+        cache["cm_prev"] = jnp.zeros((batch, cfg.d_model), cfg.dtype)
+    return cache
+
+
+def block_cache_spec(cfg, desc):
+    spec = {}
+    if desc.mixer in ("gqa", "mla"):
+        spec["attn"] = (A.gqa_cache_spec(cfg) if desc.mixer == "gqa"
+                        else A.mla_cache_spec(cfg))
+    elif desc.mixer == "rwkv6":
+        spec["rwkv"] = S.rwkv6_state_spec(cfg)
+        spec["cm_prev"] = ("dp", None)
+    elif desc.mixer == "mamba":
+        spec["mamba"] = S.mamba_state_spec(cfg)
+    if desc.mixer == "cross" or desc.cross:
+        kv = (("dp", "tp", None, None) if cfg.n_kv_heads % 16 == 0
+              else ("dp", None, "tp", None))
+        spec["cross_kv"] = {"k": kv, "v": kv}
+    if desc.ffn == "rwkv_cm":
+        spec["cm_prev"] = ("dp", None)
+    return spec
+
+
+def _apply_ffn(p, x, cfg, desc, cache, mode):
+    """Returns (out, aux, new_cm_prev or None)."""
+    if desc.ffn == "swiglu":
+        return L.mlp(p["ffn"], x, cfg.dtype), 0.0, None
+    if desc.ffn == "gelu":
+        return gelu_mlp(p["ffn"], x, cfg.dtype), 0.0, None
+    if desc.ffn == "moe":
+        out, aux = M.moe_ffn(p["ffn"], x, cfg)
+        return out, aux, None
+    if desc.ffn == "rwkv_cm":
+        prev = cache.get("cm_prev") if cache else None
+        out, new_prev = S.rwkv_cm_forward(p["ffn"], x, cfg, prev,
+                                          return_state=True)
+        return out, 0.0, new_prev
+    raise ValueError(desc.ffn)
+
+
+def block_forward(p, x, cfg, desc, *, positions=None, memory=None,
+                  causal=True):
+    """Train / encoder path: full sequence, no cache. Returns (x, aux)."""
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if desc.mixer == "gqa":
+        y = A.gqa_forward(p["mixer"], h, positions, cfg, causal=causal)
+    elif desc.mixer == "mla":
+        y = A.mla_forward(p["mixer"], h, positions, cfg, causal=causal)
+    elif desc.mixer == "cross":
+        kv = A.cross_kv(p["mixer"], memory, cfg)
+        y = A.cross_forward(p["mixer"], h, kv, cfg)
+    elif desc.mixer == "rwkv6":
+        y = S.rwkv6_forward(p["mixer"], h, cfg)
+    elif desc.mixer == "mamba":
+        y = S.mamba_forward(p["mixer"], h, cfg)
+    x = x + y
+    if desc.cross:
+        h = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        kv = A.cross_kv(p["cross"], memory, cfg)
+        x = x + A.cross_forward(p["cross"], h, kv, cfg)
+    h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+    out, aux, _ = _apply_ffn(p, h, cfg, desc, None, "train")
+    return x + out, aux
+
+
+def block_prefill(p, x, cfg, desc, cache, *, positions, memory=None):
+    """Prefill: full sequence, fills the decode cache. Returns (x, cache)."""
+    new_cache = dict(cache)
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if desc.mixer == "gqa":
+        y, (k, v) = A.gqa_forward(p["mixer"], h, positions, cfg, causal=True,
+                                  return_kv=True)
+        s = k.shape[2]
+        new_cache["attn"] = {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["attn"]["k"], k, 0, 2),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["attn"]["v"], v, 0, 2)}
+    elif desc.mixer == "mla":
+        y, (c_kv, k_rope) = A.mla_forward(p["mixer"], h, positions, cfg,
+                                          causal=True, return_kv=True)
+        new_cache["attn"] = {
+            "c_kv": jax.lax.dynamic_update_slice_in_dim(
+                cache["attn"]["c_kv"], c_kv, 0, 1),
+            "k_rope": jax.lax.dynamic_update_slice_in_dim(
+                cache["attn"]["k_rope"], k_rope, 0, 1)}
+    elif desc.mixer == "cross":
+        kv = A.cross_kv(p["mixer"], memory, cfg)
+        y = A.cross_forward(p["mixer"], h, kv, cfg)
+        new_cache["cross_kv"] = {"k": kv[0], "v": kv[1]}
+    elif desc.mixer == "rwkv6":
+        y, st = S.rwkv6_forward(p["mixer"], h, cfg, return_state=True)
+        new_cache["rwkv"] = st
+    elif desc.mixer == "mamba":
+        y, st = S.mamba_forward(p["mixer"], h, cfg, return_state=True)
+        new_cache["mamba"] = st
+    x = x + y
+    if desc.cross:
+        h = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        kv = A.cross_kv(p["cross"], memory, cfg)
+        x = x + A.cross_forward(p["cross"], h, kv, cfg)
+        new_cache["cross_kv"] = {"k": kv[0], "v": kv[1]}
+    h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+    out, _, cm_prev = _apply_ffn(p, h, cfg, desc, cache, "prefill")
+    if cm_prev is not None:
+        new_cache["cm_prev"] = cm_prev
+    return x + out, new_cache
+
+
+def block_decode(p, x, cfg, desc, cache, *, pos):
+    """One-token decode. x (B,1,D). Returns (x, new_cache)."""
+    new_cache = dict(cache)
+    h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+    if desc.mixer == "gqa":
+        y, new_cache["attn"] = A.gqa_decode(p["mixer"], h, cache["attn"],
+                                            pos, cfg)
+    elif desc.mixer == "mla":
+        y, new_cache["attn"] = A.mla_decode(p["mixer"], h, cache["attn"],
+                                            pos, cfg)
+    elif desc.mixer == "cross":
+        kv = (cache["cross_kv"]["k"], cache["cross_kv"]["v"])
+        y = A.cross_forward(p["mixer"], h, kv, cfg)
+    elif desc.mixer == "rwkv6":
+        y, new_cache["rwkv"] = S.rwkv6_forward(p["mixer"], h, cfg,
+                                               state=cache["rwkv"],
+                                               return_state=True)
+    elif desc.mixer == "mamba":
+        y, new_cache["mamba"] = S.mamba_forward(p["mixer"], h, cfg,
+                                                state=cache["mamba"],
+                                                return_state=True)
+    x = x + y
+    if desc.cross:
+        h = L.rmsnorm(p["norm_x"], x, cfg.norm_eps)
+        kv = (cache["cross_kv"]["k"], cache["cross_kv"]["v"])
+        x = x + A.cross_forward(p["cross"], h, kv, cfg)
+    h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+    out, _, cm_prev = _apply_ffn(p, h, cfg, desc, cache, "decode")
+    if cm_prev is not None:
+        new_cache["cm_prev"] = cm_prev
+    return x + out, new_cache

@@ -1,0 +1,134 @@
+"""Elementary layers: norms, embeddings, RoPE, SwiGLU MLP.
+
+Every module provides ``init_*(key, cfg) -> params`` and a structurally
+identical ``spec_*(cfg) -> logical-axis tuples`` tree (verified to match
+in tests/test_configs.py). Params are stored fp32 (master copy) and cast
+to the compute dtype at use.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import sharding as sh
+
+
+def _normal(key, shape, scale):
+    return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+
+def gathered(w, dtype, *use_spec):
+    """Cast a weight to compute dtype, optionally constraining it to its
+    use sharding. NOTE (§Perf hillclimb #2, refuted): forcing the
+    weights replicated over the fsdp axes (all-gather-at-use) was
+    measured WORSE on mistral-large train (wire +3%, compute +20%) —
+    GSPMD's partial-sum plan shards the contraction over data x tp (256
+    ways), which beats weight-gathering on compute and isn't worse on
+    wire once backward wgrad reductions are counted. Constraint disabled;
+    kept for documentation and future per-layer tuning."""
+    del use_spec
+    return w.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def spec_rmsnorm():
+    return {"scale": (None,)}
+
+
+def rmsnorm(p, x, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab, d):
+    return {"table": _normal(key, (vocab, d), d ** -0.5)}
+
+
+def spec_embedding():
+    return {"table": ("tp", "fsdp")}
+
+
+def embed(p, tokens, dtype):
+    out = jnp.take(p["table"].astype(dtype), tokens, axis=0)
+    return sh.shard(out, "dp", None, None)
+
+
+def unembed(p, x, dtype):
+    """Logits in fp32 (softmax stability), vocab sharded on tp."""
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(dtype),
+                        p["table"].astype(dtype)).astype(jnp.float32)
+    return sh.shard(logits, "dp", None, "tp")
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim, theta):
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)                      # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, head_dim) or (..., S, head_dim);
+    positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    # insert head axes between S and head_dim
+    while cos.ndim < x.ndim:
+        cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d, f):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _normal(k1, (d, f), d ** -0.5),
+        "w_up": _normal(k2, (d, f), d ** -0.5),
+        "w_down": _normal(k3, (f, d), f ** -0.5),
+    }
+
+
+def spec_mlp():
+    return {"w_gate": ("fsdp", "tp"), "w_up": ("fsdp", "tp"),
+            "w_down": ("tp", "fsdp")}
+
+
+def mlp(p, x, dtype):
+    h = jnp.einsum("bsd,df->bsf", x, gathered(p["w_gate"], dtype, None, "tp"),
+                   preferred_element_type=dtype)
+    u = jnp.einsum("bsd,df->bsf", x, gathered(p["w_up"], dtype, None, "tp"),
+                   preferred_element_type=dtype)
+    h = jax.nn.silu(h) * u
+    out = jnp.einsum("bsf,fd->bsd", h, gathered(p["w_down"], dtype, "tp", None),
+                     preferred_element_type=dtype)
+    return sh.shard(out, "dp", None, None)
+
+
+# ---------------------------------------------------------------------------
+# Dense projection helper
+# ---------------------------------------------------------------------------
+
+def init_dense(key, shape, fan_in):
+    return _normal(key, shape, fan_in ** -0.5)

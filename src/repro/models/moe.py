@@ -1,0 +1,169 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Dispatch strategy (TPU-native, see DESIGN.md §4): activations are already
+replicated across the "model" (tp) axis by the surrounding tensor
+parallelism, so expert parallelism needs **no all-to-all**: each tp rank
+owns E/tp experts, locally gathers the tokens routed to its experts into
+a capacity-bounded buffer (sort-free scatter via running-rank), runs the
+expert GEMMs, and the combine is a single psum over tp — the same
+collective shape as a TP MLP output reduction.
+
+Routers: "softmax" (learned top-k, the standard) and "fcm" — the paper's
+fuzzy-membership bridge: experts act as cluster centers over token
+embeddings and the gate is the FCM membership (Eq. 4, m=2) truncated to
+top-k. See DESIGN.md §5.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import sharding as sh
+
+
+def init_moe(key, cfg):
+    e = cfg.moe
+    d, f = cfg.d_model, e.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": L.init_dense(ks[0], (d, e.n_experts), d),
+        "w_gate": L.init_dense(ks[1], (e.n_experts, d, f), d),
+        "w_up": L.init_dense(ks[2], (e.n_experts, d, f), d),
+        "w_down": L.init_dense(ks[3], (e.n_experts, f, d), f),
+    }
+    if e.n_shared > 0:
+        p["shared"] = L.init_mlp(ks[4], d, e.n_shared * f)
+    return p
+
+
+def spec_moe(cfg):
+    s = {"router": ("fsdp", None),
+         "w_gate": ("tp", "fsdp", None), "w_up": ("tp", "fsdp", None),
+         "w_down": ("tp", None, "fsdp")}
+    if cfg.moe.n_shared > 0:
+        s["shared"] = L.spec_mlp()
+    return s
+
+
+def _route(xf, router_w, cfg):
+    """Token -> (top-k ids, gates, aux load-balance loss). xf (T, D)."""
+    e = cfg.moe
+    if e.router == "fcm":
+        # FCM bridge: router rows are cluster centers; gate = fuzzy
+        # membership with m=2 (Eq. 4 of the paper): u_e ∝ 1/d2_e.
+        centers = router_w.T.astype(jnp.float32)             # (E, D)
+        x32 = xf.astype(jnp.float32)
+        d2 = (jnp.sum(x32 * x32, -1, keepdims=True)
+              - 2.0 * x32 @ centers.T
+              + jnp.sum(centers * centers, -1)[None, :])
+        p = 1.0 / jnp.clip(d2, 1e-6, None)
+        probs = p / jnp.sum(p, axis=-1, keepdims=True)
+    else:
+        logits = (xf.astype(jnp.float32)
+                  @ router_w.astype(jnp.float32))             # (T, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, e.top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss.
+    density = jnp.mean(jax.nn.one_hot(idx[:, 0], e.n_experts,
+                                      dtype=jnp.float32), axis=0)
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = e.n_experts * jnp.sum(density * mean_prob)
+    return idx, gates.astype(xf.dtype), aux
+
+
+def _local_expert_ffn(xf, idx, gates, wg, wu, wd, e_start, capacity, dtype):
+    """Capacity-bounded local dispatch for the expert slice
+    [e_start, e_start+E_loc). xf (T, D); idx/gates (T, K)."""
+    t, dmodel = xf.shape
+    k = idx.shape[1]
+    e_loc = wg.shape[0]
+    flat_e = idx.reshape(-1)                                 # (T*K,)
+    le = flat_e - e_start
+    local = (le >= 0) & (le < e_loc)
+    le_c = jnp.where(local, le, e_loc)                       # overflow bucket
+    # running rank within each local expert (first-come capacity policy)
+    onehot = jax.nn.one_hot(le_c, e_loc, dtype=jnp.int32)    # (T*K, E_loc)
+    rank = jnp.cumsum(onehot, axis=0) - onehot               # entries before
+    pos = jnp.sum(rank * onehot, axis=-1)                    # (T*K,)
+    keep = local & (pos < capacity)
+    slot = jnp.where(keep, le_c * capacity + pos, e_loc * capacity)
+    # Index-based dispatch: scatter token *ids*, gather rows — avoids
+    # materializing the (T*K, D) repeated-token matrix.
+    tok_id = jnp.arange(t * k, dtype=jnp.int32) // k         # (T*K,)
+    buf_tok = jnp.full((e_loc * capacity + 1,), t, jnp.int32)
+    buf_tok = buf_tok.at[slot].set(jnp.where(keep, tok_id, t))
+    xf_ext = jnp.concatenate([xf.astype(dtype),
+                              jnp.zeros((1, dmodel), dtype)], axis=0)
+    xe = xf_ext[buf_tok[:-1]].reshape(e_loc, capacity, dmodel)
+    h = jnp.einsum("ecd,edf->ecf", xe, wg.astype(dtype))
+    u = jnp.einsum("ecd,edf->ecf", xe, wu.astype(dtype))
+    h = jax.nn.silu(h) * u
+    ye = jnp.einsum("ecf,efd->ecd", h, wd.astype(dtype))
+    rows = jnp.concatenate(
+        [ye.reshape(-1, dmodel), jnp.zeros((1, dmodel), dtype)], axis=0)
+    contrib = rows[slot] * jnp.where(keep, gates.reshape(-1), 0.0)[:, None]
+    return contrib.reshape(t, k, dmodel).sum(axis=1)         # (T, D)
+
+
+def _capacity(e, t_local: int) -> int:
+    return int(max(e.top_k * t_local / e.n_experts * e.capacity_factor, 4))
+
+
+def moe_ffn(p, x, cfg):
+    """x (B, S, D) -> (out (B, S, D), aux_loss scalar)."""
+    e = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    idx, gates, aux = _route(xf, p["router"], cfg)
+    ctx = sh.current()
+    tp = ctx.tp_size
+    if tp > 1:
+        # EP over the tp axis: expert stacks padded to a multiple of tp
+        # (granite's 40 experts on tp=16 -> 48 with 3 dead slots; dead
+        # experts are never routed to, so numerics are unchanged).
+        e_pad = -(-e.n_experts // tp) * tp
+        wg, wu, wd = (p["w_gate"], p["w_up"], p["w_down"])
+        if e_pad != e.n_experts:
+            padn = e_pad - e.n_experts
+            pad = lambda w: jnp.concatenate(
+                [w, jnp.zeros((padn,) + w.shape[1:], w.dtype)], axis=0)
+            wg, wu, wd = pad(wg), pad(wu), pad(wd)
+        e_loc = e_pad // tp
+        mesh = ctx.mesh
+        xspec = sh.prune_spec(
+            jax.sharding.PartitionSpec(ctx.resolve("dp"), None),
+            (t, d), mesh)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        entry = xspec[0]
+        t_loc = t
+        if entry is not None:
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                t_loc //= sizes[a]
+        capacity = _capacity(e, t_loc)
+        espec = jax.sharding.PartitionSpec(ctx.tp_axis)
+
+        def shard_body(xf_l, idx_l, gates_l, wg_l, wu_l, wd_l):
+            tp_rank = jax.lax.axis_index(ctx.tp_axis)
+            out = _local_expert_ffn(xf_l, idx_l, gates_l,
+                                    wg_l, wu_l, wd_l,
+                                    tp_rank * e_loc, capacity, cfg.dtype)
+            return jax.lax.psum(out, ctx.tp_axis)
+
+        out = jax.shard_map(
+            shard_body, mesh=mesh,
+            in_specs=(xspec, xspec, xspec, espec, espec, espec),
+            out_specs=xspec,
+            check_vma=False,
+        )(xf, idx, gates, wg, wu, wd)
+    else:
+        out = _local_expert_ffn(xf, idx, gates, p["w_gate"], p["w_up"],
+                                p["w_down"], 0, _capacity(e, t), cfg.dtype)
+    if "shared" in p:
+        out = out + L.mlp(p["shared"], x, cfg.dtype).reshape(b * s, d)
+    out = out.reshape(b, s, d)
+    return sh.shard(out, "dp", None, None), aux

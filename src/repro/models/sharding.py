@@ -1,0 +1,161 @@
+"""Logical-axis sharding for the model zoo.
+
+Parameters and activations are annotated with *logical* axes which a
+:class:`Parallelism` context resolves onto physical mesh axes:
+
+  "fsdp"  -> ("pod", "data") (multi-pod) / ("data",) — ZeRO-style weight
+             sharding over the batch axes
+  "tp"    -> "model" — tensor parallel (heads / d_ff / experts / vocab)
+  "dp"    -> ("pod", "data") — batch sharding
+  None    -> replicated
+
+On a single device (CPU tests) the context is empty and every annotation
+is a no-op, so the same model code runs everywhere.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from contextlib import contextmanager
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Logical = Union[str, Tuple[str, ...], None]
+
+
+@dataclasses.dataclass(frozen=True)
+class Parallelism:
+    mesh: Optional[Mesh] = None
+    fsdp_axes: Tuple[str, ...] = ()
+    tp_axis: Optional[str] = None
+    dp_axes: Tuple[str, ...] = ()
+
+    @property
+    def tp_size(self) -> int:
+        if self.mesh is None or self.tp_axis is None:
+            return 1
+        return self.mesh.shape[self.tp_axis]
+
+    def resolve(self, logical: Logical):
+        """Logical axis name(s) -> physical mesh axis entry for P(...)."""
+        if logical is None:
+            return None
+        if isinstance(logical, tuple):
+            out = []
+            for l in logical:
+                r = self.resolve(l)
+                if r is None:
+                    continue
+                out.extend(r if isinstance(r, tuple) else (r,))
+            return tuple(out) if out else None
+        if logical == "fsdp":
+            return self.fsdp_axes if self.fsdp_axes else None
+        if logical == "tp":
+            return self.tp_axis
+        if logical == "dp":
+            return self.dp_axes if self.dp_axes else None
+        raise ValueError(f"unknown logical axis {logical!r}")
+
+    def pspec(self, *logical: Logical) -> P:
+        return P(*(self.resolve(l) for l in logical))
+
+    def sharding(self, *logical: Logical) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.pspec(*logical))
+
+
+_STATE = threading.local()
+
+
+def current() -> Parallelism:
+    return getattr(_STATE, "ctx", None) or Parallelism()
+
+
+@contextmanager
+def parallelism(ctx: Parallelism):
+    prev = getattr(_STATE, "ctx", None)
+    _STATE.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _STATE.ctx = prev
+
+
+def make_parallelism(mesh: Optional[Mesh]) -> Parallelism:
+    """Infer logical->physical mapping from mesh axis names."""
+    if mesh is None:
+        return Parallelism()
+    names = tuple(mesh.axis_names)
+    batchy = tuple(n for n in names if n in ("pod", "data", "replica"))
+    tp = "model" if "model" in names else None
+    return Parallelism(mesh=mesh, fsdp_axes=batchy, tp_axis=tp,
+                       dp_axes=batchy)
+
+
+def prune_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop mesh axes that do not evenly divide the corresponding dim
+    (e.g. batch=1 on the dp axes, 24 heads on tp=16, vocab=49155). Axes
+    are dropped left-to-right ("pod" before "data") until the remainder
+    divides."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    for d, entry in enumerate(spec):
+        if entry is None or d >= len(shape):
+            out.append(entry)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        axes = list(axes)
+        while axes and shape[d] % _prod(sizes[a] for a in axes) != 0:
+            axes.pop(0)
+        out.append(tuple(axes) if len(axes) > 1 else (axes[0] if axes
+                                                      else None))
+    return P(*out)
+
+
+def _prod(it):
+    r = 1
+    for v in it:
+        r *= v
+    return r
+
+
+def shard(x: jax.Array, *logical: Logical) -> jax.Array:
+    """Activation sharding constraint (no-op without a mesh); prunes
+    annotations that don't divide the shape."""
+    ctx = current()
+    if ctx.mesh is None:
+        return x
+    spec = prune_spec(ctx.pspec(*logical), x.shape, ctx.mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+# --------------------------------------------------------------------------
+# Parameter trees with attached logical specs
+# --------------------------------------------------------------------------
+
+def to_named_shardings(abstract_tree, spec_tree, ctx: Parallelism):
+    """(ShapeDtypeStruct tree, logical-spec tree) -> NamedSharding tree,
+    with per-dim divisibility pruning."""
+    def conv(aval, spec):
+        if ctx.mesh is None:
+            return None
+        p = prune_spec(ctx.pspec(*spec), aval.shape, ctx.mesh)
+        return NamedSharding(ctx.mesh, p)
+
+    avals, tdef = jax.tree_util.tree_flatten(abstract_tree)
+    specs, _ = jax.tree_util.tree_flatten(
+        spec_tree, is_leaf=lambda s: isinstance(s, tuple))
+    assert len(avals) == len(specs), (len(avals), len(specs))
+    return jax.tree_util.tree_unflatten(tdef, [conv(a, s)
+                                               for a, s in zip(avals, specs)])
+
+
+def stack_spec(spec_tree):
+    """Prepend a replicated leading (scan/stack) dim to every leaf spec."""
+    return jax.tree_util.tree_map(lambda s: (None,) + s, spec_tree,
+                                  is_leaf=lambda s: isinstance(s, tuple))

@@ -1,0 +1,329 @@
+"""Attention-free mixers: RWKV6 ("Finch", data-dependent decay linear
+attention) and Mamba (selective SSM, used by Jamba's hybrid blocks).
+
+Both are implemented as exact linear recurrences with ``lax.scan`` over
+time for train/prefill and an O(1)-state single step for decode — which
+is why these archs (unlike full attention) take the ``long_500k`` shape:
+serve-state is O(d·state), independent of context length.
+
+States:
+  rwkv6: {"wkv": (B, nh, hd, hd), "x_prev": (B, D), "x_prev_cm": (B, D)}
+  mamba: {"ssm": (B, d_inner, d_state), "conv": (B, d_inner, k-1)}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import sharding as sh
+
+_TSZ = 32      # rwkv6 ddlerp lora rank
+_DSZ = 64      # rwkv6 decay lora rank
+
+
+# ===========================================================================
+# RWKV6 time-mix
+# ===========================================================================
+
+def init_rwkv6(key, cfg):
+    d = cfg.d_model
+    nh, hd = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    ks = jax.random.split(key, 12)
+    return {
+        "mu": jax.random.uniform(ks[0], (5, d), jnp.float32, 0.0, 1.0),
+        "ddlerp_a": L.init_dense(ks[1], (d, 5 * _TSZ), d),
+        "ddlerp_b": L.init_dense(ks[2], (5, _TSZ, d), _TSZ),
+        "w0": jnp.full((d,), -2.0, jnp.float32),
+        "w_a": L.init_dense(ks[3], (d, _DSZ), d),
+        "w_b": L.init_dense(ks[4], (_DSZ, d), _DSZ),
+        "u": jax.random.normal(ks[5], (nh, hd), jnp.float32) * 0.1,
+        "wr": L.init_dense(ks[6], (d, d), d),
+        "wk": L.init_dense(ks[7], (d, d), d),
+        "wv": L.init_dense(ks[8], (d, d), d),
+        "wg": L.init_dense(ks[9], (d, d), d),
+        "wo": L.init_dense(ks[10], (d, d), d),
+        "ln_x": jnp.ones((d,), jnp.float32),
+    }
+
+
+def spec_rwkv6():
+    return {"mu": (None, None), "ddlerp_a": ("fsdp", None),
+            "ddlerp_b": (None, None, "fsdp"), "w0": (None,),
+            "w_a": ("fsdp", None), "w_b": (None, "fsdp"),
+            "u": ("tp", None), "wr": ("fsdp", "tp"), "wk": ("fsdp", "tp"),
+            "wv": ("fsdp", "tp"), "wg": ("fsdp", "tp"), "wo": ("tp", "fsdp"),
+            "ln_x": (None,)}
+
+
+def _rwkv_inputs(p, x, x_prev, cfg):
+    """Data-dependent token-shift (ddlerp) + projections.
+    x (B,S,D); x_prev (B,D) is the token before x[:,0]."""
+    dtype = cfg.dtype
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    xx = shifted - x
+    base = x + xx * p["mu"][0].astype(dtype)
+    lora = jnp.tanh(jnp.einsum("bsd,dr->bsr", base,
+                               p["ddlerp_a"].astype(dtype)))
+    lora = lora.reshape(*lora.shape[:-1], 5, _TSZ)
+    offs = jnp.einsum("bsir,ird->ibsd", lora, p["ddlerp_b"].astype(dtype))
+    mixed = [x + xx * (p["mu"][i].astype(dtype) + offs[i]) for i in range(5)]
+    xw, xk, xv, xr, xg = mixed
+    # data-dependent per-channel decay w_t in (0,1)
+    dw = jnp.einsum("bsr,rd->bsd", jnp.tanh(
+        jnp.einsum("bsd,dr->bsr", xw, p["w_a"].astype(dtype))),
+        p["w_b"].astype(dtype))
+    logw = -jnp.exp(jnp.clip(p["w0"].astype(jnp.float32)
+                             + dw.astype(jnp.float32), -8.0, 4.0))
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dtype))
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"].astype(dtype))
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["wg"].astype(dtype)))
+    return r, k, v, g, logw
+
+
+def _heads(t, nh, hd):
+    return t.reshape(*t.shape[:-1], nh, hd)
+
+
+def _group_norm(y, scale, nh, eps):
+    """Per-head layer norm on (B,S,nh,hd) flattened output."""
+    b, s, d = y.shape
+    yh = y.reshape(b, s, nh, d // nh).astype(jnp.float32)
+    mean = yh.mean(axis=-1, keepdims=True)
+    var = yh.var(axis=-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + eps)
+    return (yh.reshape(b, s, d) * scale).astype(y.dtype)
+
+
+def _wkv_scan(r, k, v, logw, u, s0):
+    """Exact WKV6 recurrence. r/k/v (B,S,nh,hd); logw (B,S,nh,hd) log-decay;
+    u (nh,hd); s0 (B,nh,hd,hd). Returns (y (B,S,nh,hd), s_final)."""
+    def step(s, inp):
+        r_t, k_t, v_t, lw_t = inp                      # (B,nh,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)     # rank-1 update
+        y_t = jnp.einsum("bhk,bhkv->bhv", r_t, s + u[None, :, :, None] * kv)
+        s = jnp.exp(lw_t)[..., None] * s + kv
+        return s, y_t
+
+    xs = jax.tree_util.tree_map(lambda t: t.swapaxes(0, 1).astype(jnp.float32),
+                                (r, k, v, logw))
+    s_f, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return ys.swapaxes(0, 1), s_f
+
+
+def rwkv6_forward(p, x, cfg, state=None, return_state=False):
+    """x (B,S,D). state carries (wkv, x_prev) across segments/decode."""
+    b, s, d = x.shape
+    nh, hd = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    if state is None:
+        x_prev = jnp.zeros((b, d), cfg.dtype)
+        s0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+    else:
+        x_prev, s0 = state["x_prev"], state["wkv"]
+    r, k, v, g, logw = _rwkv_inputs(p, x, x_prev, cfg)
+    y, s_f = _wkv_scan(_heads(r, nh, hd), _heads(k, nh, hd),
+                       _heads(v, nh, hd), _heads(logw, nh, hd),
+                       p["u"].astype(jnp.float32), s0)
+    y = y.reshape(b, s, d).astype(cfg.dtype)
+    y = _group_norm(y, p["ln_x"].astype(jnp.float32), nh, cfg.norm_eps) * g
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"].astype(cfg.dtype))
+    out = sh.shard(out, "dp", None, None)
+    if return_state:
+        return out, {"x_prev": x[:, -1].astype(cfg.dtype), "wkv": s_f}
+    return out
+
+
+def init_rwkv6_state(cfg, batch):
+    d = cfg.d_model
+    nh, hd = d // cfg.rwkv_head_dim, cfg.rwkv_head_dim
+    return {"x_prev": jnp.zeros((batch, d), cfg.dtype),
+            "wkv": jnp.zeros((batch, nh, hd, hd), jnp.float32)}
+
+
+def rwkv6_state_spec(cfg):
+    return {"x_prev": ("dp", None), "wkv": ("dp", "tp", None, None)}
+
+
+# --- rwkv channel-mix (its FFN counterpart; token-shifted squared relu) ----
+
+def init_rwkv_cm(key, cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {"mu_k": jax.random.uniform(ks[0], (d,), jnp.float32, 0, 1),
+            "mu_r": jax.random.uniform(ks[1], (d,), jnp.float32, 0, 1),
+            "wk": L.init_dense(ks[0], (d, f), d),
+            "wv": L.init_dense(ks[1], (f, d), f),
+            "wr": L.init_dense(ks[2], (d, d), d)}
+
+
+def spec_rwkv_cm():
+    return {"mu_k": (None,), "mu_r": (None,), "wk": ("fsdp", "tp"),
+            "wv": ("tp", "fsdp"), "wr": ("fsdp", None)}
+
+
+def rwkv_cm_forward(p, x, cfg, x_prev=None, return_state=False):
+    dtype = cfg.dtype
+    b = x.shape[0]
+    if x_prev is None:
+        x_prev = jnp.zeros((b, x.shape[-1]), dtype)
+    shifted = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    xx = shifted - x
+    xk = x + xx * p["mu_k"].astype(dtype)
+    xr = x + xx * p["mu_r"].astype(dtype)
+    kk = jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(dtype))
+    kk = jnp.square(jax.nn.relu(kk))
+    out = jnp.einsum("bsf,fd->bsd", kk, p["wv"].astype(dtype))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dtype)))
+    out = r * out
+    out = sh.shard(out, "dp", None, None)
+    if return_state:
+        return out, x[:, -1].astype(dtype)
+    return out
+
+
+# ===========================================================================
+# Mamba (selective SSM) — Jamba's dominant mixer
+# ===========================================================================
+
+def init_mamba(key, cfg):
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    ds, kconv = cfg.mamba_d_state, cfg.mamba_conv
+    dt_rank = max(d // 16, 1)
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": L.init_dense(ks[0], (d, 2 * di), d),
+        "conv_w": L.init_dense(ks[1], (di, kconv), kconv),
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": L.init_dense(ks[2], (di, dt_rank + 2 * ds), di),
+        "dt_proj": L.init_dense(ks[3], (dt_rank, di), dt_rank),
+        "dt_bias": jnp.log(jnp.expm1(  # softplus^-1 of dt in [1e-3, 1e-1]
+            jnp.exp(jax.random.uniform(ks[4], (di,), jnp.float32,
+                                       jnp.log(1e-3), jnp.log(1e-1))))),
+        "a_log": jnp.log(a),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": L.init_dense(ks[5], (di, d), di),
+    }
+
+
+def spec_mamba():
+    return {"in_proj": ("fsdp", "tp"), "conv_w": ("tp", None),
+            "conv_b": ("tp",), "x_proj": ("tp", None),
+            "dt_proj": (None, "tp"), "dt_bias": ("tp",),
+            "a_log": ("tp", None), "d_skip": ("tp",),
+            "out_proj": ("tp", "fsdp")}
+
+
+def _causal_depthwise_conv(x, w, b, conv_state=None):
+    """x (B,S,di); w (di,k). Returns conv output and new conv state
+    (last k-1 inputs)."""
+    bsz, s, di = x.shape
+    k = w.shape[1]
+    if conv_state is None:
+        conv_state = jnp.zeros((bsz, k - 1, di), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)          # (B, S+k-1, di)
+    out = jnp.zeros((bsz, s, di), jnp.float32)
+    for i in range(k):                                      # k is tiny (4)
+        out = out + (xp[:, i:i + s] * w[:, i]).astype(jnp.float32)
+    out = out + b
+    new_state = xp[:, -(k - 1):] if k > 1 else conv_state
+    return out.astype(x.dtype), new_state
+
+
+def _ssm_scan(u, dt, bmat, cmat, a, d_skip, h0):
+    """Selective-SSM recurrence.
+    u (B,S,di) conv'd input; dt (B,S,di); bmat/cmat (B,S,ds); a (di,ds);
+    h0 (B,di,ds). Returns y (B,S,di), h_final."""
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[..., None] * a[None])            # (B,di,ds)
+        h = da * h + (dt_t * u_t)[..., None] * b_t[:, None, :]
+        y_t = jnp.einsum("bds,bs->bd", h, c_t) + d_skip * u_t
+        return h, y_t
+
+    xs = jax.tree_util.tree_map(
+        lambda t: t.swapaxes(0, 1).astype(jnp.float32), (u, dt, bmat, cmat))
+    h_f, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return ys.swapaxes(0, 1), h_f
+
+
+@jax.custom_vjp
+def _selscan_fused(u, dt, bmat, cmat, a):
+    """Pallas selective-scan (kernels/selective_scan.py): state resident
+    in VMEM, HBM traffic = kernel IO. Backward recomputes through the
+    exact lax.scan reference (standard recompute-VJP until the mirror
+    backward kernel lands)."""
+    from repro.kernels.selective_scan import selective_scan_pallas
+    interp = jax.default_backend() != "tpu"
+    return selective_scan_pallas(u, dt, bmat, cmat, a, interpret=interp)
+
+
+def _selscan_ref(u, dt, bmat, cmat, a):
+    b, _, di = u.shape
+    h0 = jnp.zeros((b, di, bmat.shape[-1]), jnp.float32)
+    y, _ = _ssm_scan(u, dt, bmat, cmat, a, jnp.zeros((di,), jnp.float32),
+                     h0)
+    return y
+
+
+def _selscan_fwd(u, dt, bmat, cmat, a):
+    return _selscan_fused(u, dt, bmat, cmat, a), (u, dt, bmat, cmat, a)
+
+
+def _selscan_bwd(res, g):
+    _, vjp = jax.vjp(_selscan_ref, *res)
+    return vjp(g)
+
+
+_selscan_fused.defvjp(_selscan_fwd, _selscan_bwd)
+
+
+def mamba_forward(p, x, cfg, state=None, return_state=False):
+    dtype = cfg.dtype
+    b, s, d = x.shape
+    di = cfg.mamba_expand * d
+    ds = cfg.mamba_d_state
+    dt_rank = max(d // 16, 1)
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dtype))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = sh.shard(xin, "dp", None, "tp")
+    conv_state = state["conv"] if state is not None else None
+    xc, conv_state = _causal_depthwise_conv(
+        xin, p["conv_w"].astype(dtype), p["conv_b"].astype(dtype), conv_state)
+    xc = jax.nn.silu(xc)
+    proj = jnp.einsum("bse,er->bsr", xc, p["x_proj"].astype(dtype))
+    dt, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,re->bse", dt,
+                                    p["dt_proj"].astype(dtype)).astype(
+        jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    h0 = (state["ssm"] if state is not None
+          else jnp.zeros((b, di, ds), jnp.float32))
+    if (cfg.mamba_pallas and state is None and not return_state
+            and s % 64 == 0 and di % 64 == 0):
+        y = (_selscan_fused(xc.astype(jnp.float32), dt,
+                            bmat.astype(jnp.float32),
+                            cmat.astype(jnp.float32), a)
+             + p["d_skip"] * xc.astype(jnp.float32))
+        h_f = h0
+    else:
+        y, h_f = _ssm_scan(xc, dt, bmat.astype(jnp.float32),
+                           cmat.astype(jnp.float32), a, p["d_skip"], h0)
+    y = (y.astype(dtype) * jax.nn.silu(z))
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dtype))
+    out = sh.shard(out, "dp", None, None)
+    if return_state:
+        return out, {"conv": conv_state, "ssm": h_f}
+    return out
+
+
+def init_mamba_state(cfg, batch):
+    di = cfg.mamba_expand * cfg.d_model
+    return {"conv": jnp.zeros((batch, cfg.mamba_conv - 1, di), cfg.dtype),
+            "ssm": jnp.zeros((batch, di, cfg.mamba_d_state), jnp.float32)}
+
+
+def mamba_state_spec(cfg):
+    return {"conv": ("dp", None, "tp"), "ssm": ("dp", "tp", None)}

@@ -1,0 +1,2 @@
+from . import (checkpoint, elastic, grad_compress, optimizer,  # noqa: F401
+               train_loop)

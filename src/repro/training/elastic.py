@@ -1,0 +1,98 @@
+"""Elastic scaling + straggler mitigation.
+
+When nodes fail, the coordinator re-forms a mesh over the surviving
+device set, restores the latest checkpoint with the new shardings, and
+continues — checkpoints are mesh-agnostic (see checkpoint.py). The FCM
+path is even cheaper: its whole state is c floats, so any surviving pod
+resumes from centers alone.
+
+``plan_mesh`` picks the largest usable (data, model) factorization for a
+device count; ``reshard_state`` moves a restored state onto a new mesh.
+``StepTimer`` is the straggler watchdog: per-step durations, outlier
+flagging (> k x rolling median), and a hook the launcher uses to decide
+when to checkpoint-and-rebalance.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+
+from repro.models import sharding as sh
+
+
+def plan_mesh(n_devices: int, model_parallel: Optional[int] = None,
+              pods: int = 1):
+    """Largest mesh (pod, data, model) using <= n_devices. Prefers tp=16
+    (one v5e tray), degrading to the largest power-of-two divisor."""
+    per_pod = n_devices // pods
+    if model_parallel is None:
+        for tp in (16, 8, 4, 2, 1):
+            if per_pod % tp == 0 and per_pod >= tp:
+                model_parallel = tp
+                break
+    data = per_pod // model_parallel
+    assert data >= 1
+    devs = jax.devices()[:pods * data * model_parallel]
+    import numpy as np
+    if pods > 1:
+        arr = np.array(devs).reshape(pods, data, model_parallel)
+        return jax.sharding.Mesh(arr, ("pod", "data", "model"))
+    arr = np.array(devs).reshape(data, model_parallel)
+    return jax.sharding.Mesh(arr, ("data", "model"))
+
+
+def reshard_state(state, specs, new_mesh) -> Tuple[object, sh.Parallelism]:
+    """Move a (host or device) state tree onto a new mesh per logical
+    specs. Returns (state, new Parallelism ctx)."""
+    ctx = sh.make_parallelism(new_mesh)
+    abstract = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    shardings = sh.to_named_shardings(abstract, specs, ctx)
+    state = jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s), state, shardings)
+    return state, ctx
+
+
+class StepTimer:
+    """Rolling straggler detector: flags steps slower than
+    ``threshold`` x the rolling median and counts consecutive slow steps
+    so the launcher can trigger a checkpoint + re-mesh."""
+
+    def __init__(self, window: int = 32, threshold: float = 2.0,
+                 consecutive_limit: int = 5,
+                 on_straggler: Optional[Callable[[float, float], None]] = None):
+        self.durations = deque(maxlen=window)
+        self.threshold = threshold
+        self.consecutive_limit = consecutive_limit
+        self.consecutive_slow = 0
+        self.total_flagged = 0
+        self.on_straggler = on_straggler
+        self._t0: Optional[float] = None
+
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self) -> bool:
+        """Record; returns True if rebalance is recommended."""
+        assert self._t0 is not None
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        med = self.median()
+        self.durations.append(dt)
+        if med is not None and dt > self.threshold * med:
+            self.total_flagged += 1
+            self.consecutive_slow += 1
+            if self.on_straggler:
+                self.on_straggler(dt, med)
+        else:
+            self.consecutive_slow = 0
+        return self.consecutive_slow >= self.consecutive_limit
+
+    def median(self) -> Optional[float]:
+        if len(self.durations) < 4:
+            return None
+        s = sorted(self.durations)
+        return s[len(s) // 2]

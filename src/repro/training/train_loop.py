@@ -1,0 +1,192 @@
+"""Train step assembly: loss, microbatch gradient accumulation, optional
+int8 cross-pod gradient sync, AdamW update.
+
+``make_train_step`` returns a pure (state, batch) -> (state, metrics)
+function plus the logical sharding specs for state and batch, ready for
+``jax.jit(..., in_shardings=..., out_shardings=...)`` — the launcher and
+the dry-run both consume it. Build/trace it under
+``sharding.parallelism(ctx)`` so activation constraints resolve.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.models import sharding as sh
+from . import grad_compress as gc
+from . import optimizer as opt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: opt.OptimizerConfig = opt.OptimizerConfig()
+    aux_loss_weight: float = 0.01
+    # int8-compress the cross-pod gradient mean (pods become pure DP
+    # replicas: fsdp stays within a pod). See grad_compress.py.
+    compress_cross_pod: bool = False
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+XENT_CHUNK = 512      # sequence positions per streamed-xent chunk
+
+
+def _chunked_xent(params, x, labels, cfg: ModelConfig) -> jax.Array:
+    """Streaming cross-entropy: unembed + softmax one sequence chunk at a
+    time under remat, so the (B, S, V) fp32 logits tensor (3-6 GiB/dev on
+    100k-vocab configs) never exists; backward recomputes per chunk."""
+    from repro.models import layers as L
+    b, s, d = x.shape
+    chunk = min(XENT_CHUNK, s)
+    if s % chunk != 0:
+        chunk = s
+    n = s // chunk
+    xc = x.reshape(b, n, chunk, d).swapaxes(0, 1)          # (n,B,c,D)
+    yc = labels.reshape(b, n, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(acc, xs):
+        x_c, y_c = xs
+        logits = L.unembed(params["embed"], x_c, cfg.dtype)
+        logits = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, y_c[..., None], -1)[..., 0]
+        return acc + jnp.sum(lse - tgt), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (xc, yc))
+    return total / (b * s)
+
+
+def loss_fn(params, batch: Dict[str, Any], cfg: ModelConfig,
+            aux_weight: float):
+    kwargs = {}
+    if cfg.is_encdec:
+        kwargs["frames"] = batch["frames"]
+    if cfg.n_img_tokens:
+        kwargs["memory"] = batch["image_embeds"]
+    x, aux = lm.forward(params, batch["tokens"], cfg,
+                        return_features=True, **kwargs)
+    loss = _chunked_xent(params, x, batch["labels"], cfg)
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux_loss": aux,
+                   "perplexity": jnp.exp(jnp.clip(loss, 0, 20.0))}
+
+
+def _microbatch_grads(params, batch, cfg: ModelConfig, tcfg: TrainConfig):
+    """Gradient accumulation over cfg.microbatches via lax.scan; the
+    reduce-scatter of each microbatch's grads overlaps the next
+    microbatch's compute under XLA's scheduler."""
+    nmb = cfg.microbatches
+    vg = jax.value_and_grad(loss_fn, has_aux=True)
+    if nmb <= 1:
+        (_, metrics), grads = vg(params, batch, cfg, tcfg.aux_loss_weight)
+        return grads, metrics
+
+    def split(x):
+        return x.reshape((nmb, x.shape[0] // nmb) + x.shape[1:])
+
+    mb = jax.tree_util.tree_map(split, batch)
+    gz = jax.eval_shape(lambda p: vg(p, jax.tree_util.tree_map(
+        lambda x: x[0], mb), cfg, tcfg.aux_loss_weight)[1], params)
+    grads0 = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), gz)
+
+    def body(carry, mbatch):
+        grads_acc, metrics_acc = carry
+        (_, metrics), grads = vg(params, mbatch, cfg, tcfg.aux_loss_weight)
+        grads_acc = jax.tree_util.tree_map(jnp.add, grads_acc, grads)
+        metrics_acc = jax.tree_util.tree_map(jnp.add, metrics_acc, metrics)
+        return (grads_acc, metrics_acc), None
+
+    m0 = {"loss": jnp.zeros(()), "aux_loss": jnp.zeros(()),
+          "perplexity": jnp.zeros(())}
+    (grads, metrics), _ = jax.lax.scan(body, (grads0, m0), mb)
+    grads = jax.tree_util.tree_map(lambda g: g / nmb, grads)
+    metrics = jax.tree_util.tree_map(lambda m: m / nmb, metrics)
+    return grads, metrics
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def init_state(key, cfg: ModelConfig,
+               tcfg: TrainConfig = TrainConfig()):
+    params = lm.init_params(key, cfg)
+    return {"params": params,
+            "opt": opt.init_opt_state(params,
+                                      tcfg.optimizer.moment_dtype),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_state(cfg: ModelConfig, tcfg: TrainConfig = TrainConfig()):
+    return jax.eval_shape(lambda k: init_state(k, cfg, tcfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def state_specs(cfg: ModelConfig):
+    pspec = lm.param_specs(cfg)
+    return {"params": pspec,
+            "opt": {"m": pspec, "v": pspec},
+            "step": ()}
+
+
+def batch_specs(cfg: ModelConfig):
+    spec = {"tokens": ("dp", None), "labels": ("dp", None)}
+    if cfg.is_encdec:
+        spec["frames"] = ("dp", None, None)
+    if cfg.n_img_tokens:
+        spec["image_embeds"] = ("dp", None, None)
+    return spec
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig = TrainConfig()):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def train_step(state, batch):
+        ctx = sh.current()
+        use_pod_compress = (tcfg.compress_cross_pod and ctx.mesh is not None
+                            and "pod" in ctx.mesh.axis_names)
+        if use_pod_compress:
+            # Pods are pure DP replicas: grads computed per pod under
+            # manual-'pod' shard_map (auto GSPMD within the pod), then
+            # int8-compressed mean over the DCN axis.
+            from jax.sharding import PartitionSpec as P
+
+            def per_pod(params, batch):
+                grads, metrics = _microbatch_grads(params, batch, cfg, tcfg)
+                grads = gc.compressed_psum_mean(grads, "pod")
+                metrics = jax.tree_util.tree_map(
+                    lambda m: jax.lax.pmean(m, "pod"), metrics)
+                return grads, metrics
+
+            n_leaves_s = len(jax.tree_util.tree_leaves(state["params"]))
+            n_leaves_b = len(jax.tree_util.tree_leaves(batch))
+            grads, metrics = jax.shard_map(
+                per_pod, mesh=ctx.mesh,
+                in_specs=(jax.tree_util.tree_map(lambda _: P(), state["params"]),
+                          jax.tree_util.tree_map(lambda _: P("pod"), batch)),
+                out_specs=(jax.tree_util.tree_map(lambda _: P(), state["params"]),
+                           {"loss": P(), "aux_loss": P(), "perplexity": P()}),
+                axis_names={"pod"}, check_vma=False,
+            )(state["params"], batch)
+        else:
+            grads, metrics = _microbatch_grads(state["params"], batch,
+                                               cfg, tcfg)
+        params, opt_state, om = opt.adamw_step(
+            state["params"], grads, state["opt"], state["step"],
+            tcfg.optimizer)
+        metrics = dict(metrics, **om)
+        new_state = {"params": params, "opt": opt_state,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step

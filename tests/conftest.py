@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Make `import repro` work regardless of PYTHONPATH (tests are normally
+# run with PYTHONPATH=src). Deliberately does NOT touch XLA_FLAGS: unit
+# tests run on the single real CPU device; multi-device tests spawn
+# subprocesses with their own flags (see tests/_dist_runner.py).
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

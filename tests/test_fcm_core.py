@@ -1,0 +1,157 @@
+"""Behavioural tests for the FCM core: invariants, equivalence of the
+paper-faithful baseline with every optimized variant, and equivalence
+with the literal sequential port."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import fcm as F
+from repro.core import histogram as H
+from repro.core import sequential as S
+from repro.data import phantom
+
+
+@pytest.fixture(scope="module")
+def slice_image():
+    img, labels = phantom.phantom_slice(96, 96, slice_pos=0.5, seed=3)
+    return img.ravel().astype(np.float32), labels.ravel()
+
+
+def _sorted_centers(v):
+    return np.sort(np.asarray(v).ravel())
+
+
+def test_membership_is_a_partition(slice_image):
+    x, _ = slice_image
+    v = jnp.asarray([10.0, 60.0, 110.0, 170.0])
+    u = F.update_membership(jnp.asarray(x), v, 2.0)
+    assert u.shape == (4, x.size)
+    np.testing.assert_allclose(np.asarray(jnp.sum(u, axis=0)), 1.0, atol=1e-5)
+    assert float(jnp.min(u)) >= 0.0 and float(jnp.max(u)) <= 1.0
+
+
+def test_membership_zero_distance_onehot():
+    x = jnp.asarray([50.0, 100.0, 75.0])
+    v = jnp.asarray([50.0, 100.0])
+    u = F.update_membership(x, v, 2.0)
+    np.testing.assert_allclose(np.asarray(u[:, 0]), [1.0, 0.0], atol=1e-6)
+    np.testing.assert_allclose(np.asarray(u[:, 1]), [0.0, 1.0], atol=1e-6)
+    np.testing.assert_allclose(np.asarray(u[:, 2]), [0.5, 0.5], atol=1e-6)
+
+
+def test_center_update_closed_form():
+    x = jnp.asarray([0.0, 1.0, 10.0, 11.0])
+    u = jnp.asarray([[1.0, 1.0, 0.0, 0.0], [0.0, 0.0, 1.0, 1.0]])
+    v = F.update_centers(x, u, 2.0)
+    np.testing.assert_allclose(np.asarray(v), [0.5, 10.5], atol=1e-6)
+
+
+def test_objective_monotone_decreasing(slice_image):
+    x, _ = slice_image
+    x = jnp.asarray(x[:4096])
+    key = jax.random.PRNGKey(0)
+    u = F.random_membership(key, 4, x.shape[0])
+    objs = []
+    for _ in range(12):
+        v = F.update_centers(x, u, 2.0)
+        u = F.update_membership(x, v, 2.0)
+        objs.append(float(F.objective(x, u, v, 2.0)))
+    assert all(objs[i + 1] <= objs[i] * (1 + 1e-6) for i in range(len(objs) - 1))
+
+
+def test_baseline_converges_and_segments(slice_image):
+    x, gt = slice_image
+    res = F.fit_baseline(x, F.FCMConfig(max_iters=100))
+    assert res.n_iters < 100
+    assert res.final_delta < 5e-3
+    # 4 clusters found, mapped by intensity rank -> decent DSC per class
+    pred = phantom.match_labels_to_classes(np.asarray(res.labels), res.centers)
+    dscs = phantom.dice_per_class(pred, gt)
+    assert min(dscs) > 0.80, dscs
+
+
+def test_fused_matches_baseline(slice_image):
+    x, _ = slice_image
+    base = F.fit_baseline(x, F.FCMConfig(max_iters=150))
+    fused = F.fit_fused(x, F.FCMConfig(max_iters=300))
+    np.testing.assert_allclose(_sorted_centers(base.centers),
+                               _sorted_centers(fused.centers), atol=1.0)
+    pred_b = phantom.match_labels_to_classes(np.asarray(base.labels), base.centers)
+    pred_f = phantom.match_labels_to_classes(np.asarray(fused.labels), fused.centers)
+    agreement = (pred_b == pred_f).mean()
+    assert agreement > 0.995, agreement
+
+
+def test_histogram_matches_fused(slice_image):
+    x, _ = slice_image
+    fused = F.fit_fused(x, F.FCMConfig(max_iters=300))
+    hist = H.fit_histogram(x, F.FCMConfig(max_iters=300))
+    np.testing.assert_allclose(_sorted_centers(fused.centers),
+                               _sorted_centers(hist.centers), atol=0.5)
+    agreement = (np.asarray(fused.labels) == np.asarray(hist.labels)).mean()
+    assert agreement > 0.999, agreement
+
+
+def test_histogram_is_algebraically_exact():
+    # On already-quantized data a single weighted step == a full step.
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(0, 256, size=5000).astype(np.float32))
+    v = jnp.asarray([30.0, 90.0, 150.0, 210.0])
+    full = F.fused_center_step(x, v, 2.0)
+    hist = H.intensity_histogram(x)
+    vals = jnp.arange(256, dtype=jnp.float32)
+    compressed = H.weighted_center_step(vals, hist, v, 2.0)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(compressed),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_sequential_python_vs_numpy():
+    rng = np.random.default_rng(1)
+    x = rng.integers(0, 256, size=400).astype(np.float64)
+    v_py, lab_py, it_py = S.fcm_sequential_python(x, c=3, seed=7, max_iters=60)
+    v_np, lab_np, it_np = S.fcm_sequential_numpy(x, c=3, seed=7, max_iters=60)
+    np.testing.assert_allclose(np.sort(v_py), np.sort(v_np), atol=1e-6)
+    assert (lab_py == lab_np).mean() > 0.999
+    assert it_py == it_np
+
+
+def test_sequential_vs_jax_baseline(slice_image):
+    """Identical init => the float32 JAX pipeline must track the float64
+    sequential reference step-for-step to convergence."""
+    x, _ = slice_image
+    x = x[:8192]
+    rng = np.random.default_rng(5)
+    u0 = rng.uniform(1e-3, 1.0, size=(4, x.size))
+    u0 /= u0.sum(axis=0, keepdims=True)
+    v_np, lab_np, it_np = S.fcm_sequential_numpy(x, c=4, max_iters=200, u0=u0)
+    res = F.fit_baseline(x, F.FCMConfig(max_iters=200), u0=u0)
+    np.testing.assert_allclose(np.sort(v_np), _sorted_centers(res.centers),
+                               atol=0.5)
+    assert (lab_np == np.asarray(res.labels)).mean() > 0.999
+    assert abs(it_np - res.n_iters) <= 2
+
+
+def test_pallas_baseline_matches_jnp_baseline(slice_image):
+    x, _ = slice_image
+    x = x[:8192]
+    a = F.fit_baseline(x, F.FCMConfig(max_iters=40), use_pallas=False)
+    b = F.fit_baseline(x, F.FCMConfig(max_iters=40), use_pallas=True)
+    assert a.n_iters == b.n_iters
+    np.testing.assert_allclose(np.asarray(a.centers), np.asarray(b.centers),
+                               rtol=1e-4, atol=1e-3)
+    assert (np.asarray(a.labels) == np.asarray(b.labels)).mean() > 0.9999
+
+
+def test_feature_dim_generalization():
+    # (N, F) features (used by the MoE fuzzy router bridge).
+    rng = np.random.default_rng(2)
+    a = rng.normal((0, 0), 0.2, size=(100, 2))
+    b = rng.normal((3, 3), 0.2, size=(100, 2))
+    x = jnp.asarray(np.concatenate([a, b]), jnp.float32)
+    v0 = jnp.asarray([[0.5, 0.5], [2.5, 2.5]], jnp.float32)
+    res = F.fit_fused(x, F.FCMConfig(n_clusters=2, max_iters=50), v0=v0)
+    labels = np.asarray(res.labels)
+    assert (labels[:100] == labels[0]).all()
+    assert (labels[100:] == labels[100]).all()
+    assert labels[0] != labels[100]

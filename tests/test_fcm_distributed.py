@@ -1,0 +1,21 @@
+"""Multi-device FCM: shard_map fit on an 8-device fake mesh must match
+the single-device fused fit. Runs in a subprocess because device count is
+locked at first jax init."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+@pytest.mark.slow
+def test_sharded_fcm_matches_single_device():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "_dist_runner.py")],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, proc.stdout + "\n" + proc.stderr
+    assert "DIST_OK" in proc.stdout

@@ -1,0 +1,91 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs ref.py jnp
+oracles, swept over shapes, cluster counts, fuzziness and dtypes."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+SHAPES = [96, 8192, 8192 + 17, 40000]          # incl. non-multiple-of-tile
+CLUSTERS = [2, 4, 7]
+FUZZ = [2.0, 1.6]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _data(n, c, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 256, size=n).astype(np.float32)
+    v = np.sort(rng.uniform(5, 250, size=c)).astype(np.float32)
+    return jnp.asarray(x, dtype), jnp.asarray(v, jnp.float32)
+
+
+@pytest.mark.parametrize("n", SHAPES)
+@pytest.mark.parametrize("c", CLUSTERS)
+def test_membership_kernel_shapes(n, c):
+    x, v = _data(n, c, jnp.float32)
+    got = ops.membership(x, v, 2.0, interpret=True)
+    want = ref.membership_ref(x, v, 2.0)
+    assert got.shape == (c, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("m", FUZZ)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_membership_kernel_dtypes_fuzz(m, dtype):
+    x, v = _data(8192, 4, dtype, seed=1)
+    got = ops.membership(x, v, m, interpret=True)
+    want = ref.membership_ref(x, v, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_membership_kernel_zero_distance():
+    x = jnp.asarray(np.full(300, 77.0, np.float32))
+    v = jnp.asarray([77.0, 150.0])
+    got = ops.membership(x, v, 2.0, interpret=True)
+    np.testing.assert_allclose(np.asarray(got[0]), 1.0, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got[1]), 0.0, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", SHAPES)
+@pytest.mark.parametrize("m", FUZZ)
+def test_center_partials_kernel(n, m):
+    x, v = _data(n, 4, jnp.float32, seed=2)
+    u = ref.membership_ref(x, v, m)
+    num, den = ops.center_partials(x, u, m, interpret=True)
+    wnum, wden = ref.center_partials_ref(x, u, m)
+    assert num.shape == (4, 1)
+    np.testing.assert_allclose(np.asarray(num[:, 0]), np.asarray(wnum),
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(den), np.asarray(wden), rtol=1e-4)
+
+
+@pytest.mark.parametrize("n", SHAPES)
+@pytest.mark.parametrize("c", CLUSTERS)
+@pytest.mark.parametrize("m", FUZZ)
+def test_fused_step_kernel(n, c, m):
+    x, v = _data(n, c, jnp.float32, seed=3)
+    got = ops.fused_step(x, v, m, interpret=True)
+    want = ref.fused_step_ref(x, v, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("block_rows", [8, 32, 64])
+def test_block_shape_sweep(block_rows):
+    x, v = _data(50000, 4, jnp.float32, seed=4)
+    got = ops.fused_step(x, v, 2.0, block_rows=block_rows, interpret=True)
+    want = ref.fused_step_ref(x, v, 2.0)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_fused_iteration_fixed_point_matches_two_stage():
+    """The fused kernel must equal membership-kernel -> partials-kernel."""
+    x, v = _data(8192, 4, jnp.float32, seed=5)
+    u = ops.membership(x, v, 2.0, interpret=True)
+    num2, den2 = ops.center_partials(x, u, 2.0, interpret=True)
+    v_two = np.asarray(num2[:, 0] / jnp.maximum(den2, 1e-12))
+    v_fused = np.asarray(ops.fused_step(x, v, 2.0, interpret=True))
+    np.testing.assert_allclose(v_fused, v_two, rtol=1e-4, atol=1e-3)

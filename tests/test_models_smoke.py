@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests: every assigned arch instantiates a
+reduced same-family config and runs forward + one train-like grad step +
+prefill/decode on CPU, asserting shapes and finiteness."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import lm
+
+ARCHS = configs.list_archs()
+
+
+def _batch_inputs(cfg, batch=2, seq=16, seed=0):
+    rng = np.random.default_rng(seed)
+    kwargs = {}
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)),
+                         jnp.int32)
+    if cfg.is_encdec:
+        kwargs["frames"] = jnp.asarray(
+            rng.normal(0, 1, (batch, seq, cfg.d_model)), jnp.float32)
+    if cfg.n_img_tokens:
+        kwargs["memory"] = jnp.asarray(
+            rng.normal(0, 1, (batch, cfg.n_img_tokens, cfg.d_model)),
+            cfg.dtype)
+    return tokens, kwargs
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = configs.get_config(arch).reduced()
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    tokens, kwargs = _batch_inputs(cfg)
+    logits, aux = jax.jit(
+        lambda p, t, kw: lm.forward(p, t, cfg, **kw))(params, tokens, kwargs)
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert logits.dtype == jnp.float32
+    assert bool(jnp.isfinite(logits).all()), arch
+    assert bool(jnp.isfinite(aux)), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step_grads_finite(arch):
+    cfg = configs.get_config(arch).reduced()
+    params = lm.init_params(jax.random.PRNGKey(1), cfg)
+    tokens, kwargs = _batch_inputs(cfg, seed=1)
+    labels = jnp.roll(tokens, -1, axis=1)
+
+    def loss_fn(p):
+        logits, aux = lm.forward(p, tokens, cfg, **kwargs)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], -1).mean()
+        return nll + 0.01 * aux
+
+    loss, grads = jax.jit(jax.value_and_grad(loss_fn))(params)
+    assert bool(jnp.isfinite(loss))
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat), arch
+    # embedding must receive signal
+    gnorm = float(jnp.linalg.norm(grads["embed"]["table"]))
+    assert gnorm > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    """Greedy decode after prefill must match teacher-forced argmax of the
+    train forward on the same token stream (cache correctness)."""
+    cfg = configs.get_config(arch).reduced()
+    params = lm.init_params(jax.random.PRNGKey(2), cfg)
+    batch, prompt_len, total_len = 2, 8, 12
+    tokens, kwargs = _batch_inputs(cfg, batch, total_len, seed=2)
+
+    logits_full, _ = jax.jit(
+        lambda p, t, kw: lm.forward(p, t, cfg, **kw))(params, tokens, kwargs)
+
+    cache = lm.init_cache(cfg, batch, total_len)
+    pre_logits, cache = jax.jit(
+        lambda p, t, c, kw: lm.prefill(p, t, c, cfg, **kw))(
+        params, tokens[:, :prompt_len], cache, kwargs)
+    np.testing.assert_allclose(
+        np.asarray(pre_logits[:, 0]),
+        np.asarray(logits_full[:, prompt_len - 1]), rtol=2e-2, atol=2e-2)
+
+    step = jax.jit(lambda p, t, c, pos: lm.decode_step(p, t, c, pos, cfg))
+    for pos in range(prompt_len, total_len):
+        logits_t, cache = step(params, tokens[:, pos:pos + 1], cache, pos)
+        np.testing.assert_allclose(np.asarray(logits_t[:, 0]),
+                                   np.asarray(logits_full[:, pos]),
+                                   rtol=2e-2, atol=2e-2)
+
+
+def test_param_spec_trees_match_param_trees():
+    """Every arch: the logical-spec tree must be structurally identical to
+    the param tree (guards spec drift)."""
+    for arch in ARCHS:
+        cfg = configs.get_config(arch).reduced()
+        params = lm.abstract_params(cfg)
+        specs = lm.param_specs(cfg)
+        ps = jax.tree_util.tree_structure(params)
+        ss = jax.tree_util.tree_structure(
+            specs, is_leaf=lambda x: isinstance(x, tuple))
+        assert ps == ss, arch
+
+
+def test_cache_spec_trees_match_cache_trees():
+    for arch in ARCHS:
+        cfg = configs.get_config(arch).reduced()
+        cache = jax.eval_shape(lambda: lm.init_cache(cfg, 2, 8))
+        specs = lm.cache_specs(cfg)
+        cs = jax.tree_util.tree_structure(cache)
+        ss = jax.tree_util.tree_structure(
+            specs, is_leaf=lambda x: isinstance(x, tuple))
+        assert cs == ss, arch
+
+
+def test_full_configs_match_assignment():
+    """Pin the exact assigned hyper-parameters."""
+    c = configs.get_config("mistral-nemo-12b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (40, 5120, 32, 8, 14336, 131072)
+    c = configs.get_config("mistral-large-123b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab_size) == (88, 12288, 96, 8, 28672, 32768)
+    c = configs.get_config("deepseek-v2-236b")
+    assert c.moe.n_experts == 160 and c.moe.top_k == 6
+    assert c.mla.kv_lora_rank == 512 and c.moe.n_shared == 2
+    c = configs.get_config("granite-moe-3b-a800m")
+    assert c.moe.n_experts == 40 and c.moe.top_k == 8
+    c = configs.get_config("jamba-v0.1-52b")
+    assert c.moe.n_experts == 16 and c.moe.top_k == 2
+    mixers = [d.mixer for d in c.group_layout]
+    assert mixers.count("gqa") == 1 and mixers.count("mamba") == 7
+    c = configs.get_config("llama-3.2-vision-90b")
+    assert c.n_layers == 100
+    assert sum(d.mixer == "cross" for d in c.group_layout) == 1
+    c = configs.get_config("rwkv6-1.6b")
+    assert c.sub_quadratic and c.group_layout[0].mixer == "rwkv6"

@@ -1,0 +1,36 @@
+import numpy as np
+
+from repro.data import phantom
+
+
+def test_phantom_has_all_classes_and_right_stats():
+    img, labels = phantom.phantom_slice(128, 128, seed=0)
+    assert img.shape == (128, 128) and img.dtype == np.uint8
+    assert set(np.unique(labels)) == {0, 1, 2, 3}
+    for k in range(4):
+        mean_k = img[labels == k].mean()
+        assert abs(mean_k - phantom.CLASS_MEANS[k]) < 8.0, (k, mean_k)
+
+
+def test_phantom_of_bytes_sizes():
+    for nbytes in [20 * 1024, 100 * 1024]:
+        img, lab = phantom.phantom_of_bytes(nbytes)
+        assert img.size == nbytes // 256 * 256
+        assert img.size == lab.size
+
+
+def test_dice_metric():
+    a = np.zeros((10, 10), bool)
+    a[:5] = True
+    assert phantom.dice(a, a) == 1.0
+    assert phantom.dice(a, ~a) == 0.0
+    b = np.zeros((10, 10), bool)
+    b[:5, :5] = True
+    assert abs(phantom.dice(a, b) - 2 * 25 / (50 + 25)) < 1e-9
+
+
+def test_match_labels_to_classes():
+    labels = np.array([0, 1, 2, 3])
+    centers = np.array([160.0, 0.0, 100.0, 50.0])  # ranks: 3,0,2,1
+    out = phantom.match_labels_to_classes(labels, centers)
+    assert list(out) == [3, 0, 2, 1]

@@ -1,0 +1,73 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import fcm as F
+from repro.core import histogram as H
+from repro.training import grad_compress as gc
+
+_settings = dict(max_examples=25, deadline=None)
+
+
+@given(st.integers(2, 6), st.integers(16, 400),
+       st.floats(1.3, 4.0), st.integers(0, 10 ** 6))
+@settings(**_settings)
+def test_membership_always_a_partition(c, n, m, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(0, 255, n), jnp.float32)
+    v = jnp.asarray(np.sort(rng.uniform(0, 255, c)), jnp.float32)
+    u = F.update_membership(x, v, m)
+    assert u.shape == (c, n)
+    np.testing.assert_allclose(np.asarray(jnp.sum(u, axis=0)), 1.0,
+                               atol=1e-4)
+    assert float(jnp.min(u)) >= 0.0
+
+
+@given(st.integers(2, 5), st.integers(32, 300), st.integers(0, 10 ** 6))
+@settings(**_settings)
+def test_centers_stay_in_data_hull(c, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(10, 200, n), jnp.float32)
+    res = F.fit_fused(x, F.FCMConfig(n_clusters=c, max_iters=50))
+    v = np.asarray(res.centers)
+    assert (v >= float(jnp.min(x)) - 1e-3).all()
+    assert (v <= float(jnp.max(x)) + 1e-3).all()
+
+
+@given(st.integers(0, 10 ** 6))
+@settings(**_settings)
+def test_histogram_step_equals_full_step_on_quantized(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 256, 512).astype(np.float32))
+    v = jnp.asarray(np.sort(rng.uniform(1, 254, 4)), jnp.float32)
+    full = F.fused_center_step(x, v, 2.0)
+    comp = H.weighted_center_step(jnp.arange(256, dtype=jnp.float32),
+                                  H.intensity_histogram(x), v, 2.0)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(comp),
+                               rtol=1e-4, atol=1e-2)
+
+
+@given(st.integers(1, 64), st.integers(1, 64), st.integers(0, 10 ** 6),
+       st.floats(1e-3, 1e3))
+@settings(**_settings)
+def test_int8_roundtrip_error_bound(rows, cols, seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, scale, (rows, cols)), jnp.float32)
+    q, s = gc.quantize_int8(x)
+    back = gc.dequantize_int8(q, s)
+    assert float(jnp.max(jnp.abs(back - x))) <= float(s) * 0.5 + 1e-9
+
+
+@given(st.integers(2, 4), st.integers(64, 256), st.integers(0, 10 ** 6))
+@settings(**_settings)
+def test_objective_never_increases_across_one_iteration(c, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(0, 255, n), jnp.float32)
+    key = __import__("jax").random.PRNGKey(seed % (2 ** 31))
+    u = F.random_membership(key, c, n)
+    v1 = F.update_centers(x, u, 2.0)
+    u1 = F.update_membership(x, v1, 2.0)
+    j0 = float(F.objective(x, u, v1, 2.0))
+    j1 = float(F.objective(x, u1, v1, 2.0))
+    assert j1 <= j0 * (1 + 1e-5)

@@ -1,0 +1,107 @@
+"""HLO cost walker: trip-count multipliers, dot flops, collective wire
+math — validated against hand-counted jitted programs."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import hlo_cost, roofline
+
+
+def _text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_dot_flops_exact():
+    a = jnp.zeros((128, 256), jnp.float32)
+    b = jnp.zeros((256, 512), jnp.float32)
+    c = hlo_cost.analyze_text(_text(lambda x, y: x @ y, a, b), 1)
+    assert c.flops == 2 * 128 * 256 * 512
+
+
+def test_scan_trip_count_multiplies():
+    a = jnp.zeros((64, 64), jnp.float32)
+
+    def body(x, _):
+        return jnp.tanh(x @ x), None
+
+    def once(x):
+        return jnp.tanh(x @ x)
+
+    def scanned(x):
+        y, _ = jax.lax.scan(body, x, None, length=17)
+        return y
+
+    f1 = hlo_cost.analyze_text(_text(once, a), 1).flops
+    f17 = hlo_cost.analyze_text(_text(scanned, a), 1).flops
+    assert f1 == 2 * 64 ** 3
+    assert f17 == pytest.approx(17 * f1, rel=1e-6)
+
+
+def test_while_override():
+    a = jnp.zeros((64, 64), jnp.float32)
+
+    def scanned(x):
+        y, _ = jax.lax.scan(lambda c, _: (jnp.tanh(c @ c), None), x,
+                            None, length=9)
+        return y
+
+    txt = _text(scanned, a)
+    f_override = hlo_cost.analyze_text(txt, 1, while_override=1).flops
+    assert f_override == pytest.approx(2 * 64 ** 3, rel=1e-6)
+
+
+def test_collective_wire_ring_math():
+    model = hlo_cost.HloCostModel("", 8)
+    # all-reduce of 100 bytes over 8: 2*(7/8)*100
+    assert model._collective_wire("all-reduce", "f32[25]", "") == \
+        pytest.approx(2 * 7 / 8 * 100)
+    assert model._collective_wire("all-gather", "f32[25]", "") == \
+        pytest.approx(7 / 8 * 100)
+    assert model._collective_wire("reduce-scatter", "f32[25]", "") == \
+        pytest.approx(7 * 100)
+    assert model._collective_wire("collective-permute", "f32[25]", "") \
+        == 100
+
+
+def test_group_size_parsing():
+    model = hlo_cost.HloCostModel("", 16)
+    line = "x = f32[4] all-reduce(y), replica_groups=[4,4]"
+    assert model._group_size(line) == 4
+    line2 = "x = f32[4] all-reduce(y), replica_groups={{0,1,2,3,4,5,6,7}}"
+    assert model._group_size(line2) == 8
+    assert model._group_size("x = f32[4] all-reduce(y)") == 16
+
+
+def test_bytes_counted_at_fusion_boundaries():
+    a = jnp.zeros((1024,), jnp.float32)
+    c = hlo_cost.analyze_text(_text(lambda x: jnp.tanh(x) * 2 + 1, a), 1)
+    # one fused elementwise chain: ~input + output = 8 KB (allow copies)
+    assert 4096 <= c.bytes <= 32768, c.bytes
+
+
+def test_model_flops_moe_active_params():
+    from repro import configs
+    cfg = configs.get_config("granite-moe-3b-a800m")
+    n = roofline.count_params(cfg)
+    assert n["active"] < 0.55 * n["total"]      # 8/40 experts active
+    shape = configs.SHAPES["train_4k"]
+    mf = roofline.model_flops(cfg, shape)
+    assert mf == pytest.approx(6 * n["active"] * 4096 * 256)
+
+
+def test_dryrun_jsonl_exists_and_complete():
+    """The committed dry-run results must cover every (arch x applicable
+    shape x mesh) cell, all compiled OK."""
+    import os
+    from benchmarks.roofline_report import load
+    from repro import configs as C
+    rows = load()
+    if not rows:
+        pytest.skip("dryrun.jsonl not generated in this checkout")
+    have = {(r["arch"], r["shape"], r["mesh"]) for r in rows}
+    for arch in C.list_archs():
+        for s in C.applicable_shapes(C.get_config(arch)):
+            for mesh in ("16x16", "2x16x16"):
+                assert (arch, s.name, mesh) in have, (arch, s.name, mesh)
+    assert ("fcm-brainweb", "fcm_1g", "16x16") in have
