@@ -1,0 +1,93 @@
+"""Batched segmentation throughput: images/sec vs batch size.
+
+The one-at-a-time baseline is ``fit_fused`` per image (the paper's
+optimized single-image path, one device launch sequence per image).
+Against it:
+
+* sequential ``fit_histogram`` per image — histogram compression alone;
+* ``fit_batched`` — one vmapped ``(B, 256)`` fixed point per batch, the
+  serving engine's hot path;
+* ``FCMServeEngine.segment`` — the full request path (ingest + bucketing
+  + cache + defuzzify LUT), cache cold.
+
+Run:  PYTHONPATH=src python -m benchmarks.batched_throughput
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import batched as B
+from repro.core import fcm as F
+from repro.core import histogram as H
+from repro.data import phantom
+from repro.serving.fcm_engine import FCMServeEngine
+
+try:
+    from .common import emit, time_fn
+except ImportError:                      # run as a plain script
+    from common import emit, time_fn
+
+BATCH_SIZES = (1, 8, 64)
+H_IMG, W_IMG = 128, 128
+CFG = F.FCMConfig(max_iters=300)
+
+
+def _make_batch(b: int):
+    """b distinct slices (distinct seeds/positions so nothing caches)."""
+    return [phantom.phantom_slice(H_IMG, W_IMG,
+                                  slice_pos=0.3 + 0.4 * i / max(b, 2),
+                                  noise=3.0 + (i % 5), seed=i)[0]
+            for i in range(b)]
+
+
+def run():
+    print("# batched_throughput: name,us_per_image,derived "
+          f"(slice={H_IMG}x{W_IMG}, c={CFG.n_clusters})")
+    speedups = {}
+    for b in BATCH_SIZES:
+        imgs = _make_batch(b)
+        flats = [im.ravel().astype(np.float32) for im in imgs]
+        hists = B.histograms_of(imgs)
+
+        def seq_fused():
+            for x in flats:
+                F.fit_fused(x, CFG)
+
+        def seq_hist():
+            for x in flats:
+                H.fit_histogram(x, CFG)
+
+        def batched():
+            B.fit_batched(hists, CFG)
+
+        def engine():
+            # fresh engine each call: cold cache, so the fit really runs
+            FCMServeEngine(CFG, batch_sizes=BATCH_SIZES,
+                           cache_size=0).segment(imgs)
+
+        iters = 1 if b >= 64 else 2
+        t_sf = time_fn(seq_fused, warmup=1, iters=iters)
+        t_sh = time_fn(seq_hist, warmup=1, iters=iters)
+        t_ba = time_fn(batched, warmup=1, iters=3)
+        t_en = time_fn(engine, warmup=1, iters=iters)
+        sp = t_sf / t_ba
+        speedups[b] = sp
+        emit(f"batched/B={b}/seq_fused", t_sf / b * 1e6,
+             f"{b / t_sf:.1f} img/s")
+        emit(f"batched/B={b}/seq_hist", t_sh / b * 1e6,
+             f"{b / t_sh:.1f} img/s")
+        emit(f"batched/B={b}/fit_batched", t_ba / b * 1e6,
+             f"{b / t_ba:.1f} img/s speedup_vs_seq_fused={sp:.1f}x")
+        emit(f"batched/B={b}/serve_engine", t_en / b * 1e6,
+             f"{b / t_en:.1f} img/s")
+    if speedups.get(64, 0.0) <= 2.0:
+        raise SystemExit(
+            f"FAIL: batched speedup at B=64 is {speedups[64]:.2f}x "
+            "(expected > 2x over one-at-a-time fit_fused)")
+    print(f"# OK: B=64 batched throughput {speedups[64]:.1f}x the "
+          "one-at-a-time fit_fused baseline")
+    return speedups
+
+
+if __name__ == "__main__":
+    run()

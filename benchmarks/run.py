@@ -1,20 +1,23 @@
 """Benchmark harness: one module per paper table/figure. Prints
 ``name,us_per_call,derived`` CSV lines.
 
-  table1_variants  — paper Table 1 analogue (variant ladder)
-  fig7_dsc         — paper Fig. 7 DSC parity (parallel == sequential)
-  table3_speedup   — paper Table 3 exec times + Fig. 8 speedup curve
-  roofline_report  — §Roofline summary from the dry-run JSONL
+  table1_variants    — paper Table 1 analogue (variant ladder)
+  fig7_dsc           — paper Fig. 7 DSC parity (parallel == sequential)
+  table3_speedup     — paper Table 3 exec times + Fig. 8 speedup curve
+  roofline_report    — §Roofline summary from the dry-run JSONL
+  batched_throughput — beyond-paper: images/sec vs batch size (serving)
 """
 
 
 def main() -> None:
-    from . import fig7_dsc, roofline_report, table1_variants, table3_speedup
+    from . import (batched_throughput, fig7_dsc, roofline_report,
+                   table1_variants, table3_speedup)
     print("benchmark,us_per_call,derived")
     table1_variants.run()
     fig7_dsc.run()
     table3_speedup.run()
     roofline_report.run()
+    batched_throughput.run()
 
 
 if __name__ == '__main__':

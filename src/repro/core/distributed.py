@@ -29,9 +29,22 @@ from . import fcm as F
 from . import histogram as H
 
 try:                                  # jax >= 0.6 exposes shard_map at top level
-    shard_map = jax.shard_map
+    _shard_map = jax.shard_map
 except AttributeError:                # pragma: no cover
-    from jax.experimental.shard_map import shard_map  # type: ignore
+    from jax.experimental.shard_map import shard_map as _shard_map  # type: ignore
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """Version-tolerant shard_map: older jax has no replication rule for
+    ``while`` and needs ``check_rep=False``; newer jax renamed/removed
+    the flag. Our bodies run while_loops, so disable the check wherever
+    the installed jax still spells it ``check_rep``."""
+    try:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=False)
+    except TypeError:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs)
 
 
 def mesh_axes(mesh: Mesh) -> Tuple[str, ...]:

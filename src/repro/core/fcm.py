@@ -221,6 +221,10 @@ def fit_baseline(x: jax.Array, cfg: FCMConfig = FCMConfig(),
         n_iters = it + 1
         if delta < cfg.eps:
             break
+    if v is None:
+        # max_iters=0: centers from the initial membership, so the result
+        # is still well-defined.
+        v = update_centers(x, u, cfg.m)
     return FCMResult(centers=v, labels=defuzzify(u), n_iters=n_iters,
                      final_delta=delta, membership=u)
 
@@ -243,8 +247,7 @@ def _fused_loop(x, v0, c, m, eps, max_iters):
 
     def body(state):
         v, _, it = state
-        u = update_membership(x, v, m)
-        v_new = update_centers(x, u, m)
+        v_new = fused_center_step(x, v, m)
         delta = jnp.max(jnp.abs(v_new - v))
         return v_new, delta, it + 1
 

@@ -1,2 +1,3 @@
-from . import engine  # noqa: F401
+from . import engine, fcm_engine  # noqa: F401
 from .engine import ServeEngine  # noqa: F401
+from .fcm_engine import FCMServeEngine, SegmentationResult  # noqa: F401

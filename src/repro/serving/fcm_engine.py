@@ -1,0 +1,246 @@
+"""Request-batching segmentation engine over the batched FCM core.
+
+The LM :class:`~repro.serving.engine.ServeEngine` amortizes device
+launches across a token batch; this engine does the same across *images*.
+Histogram compression makes heterogeneous traffic regular: a request of
+any pixel count reduces on ingest to one ``(n_bins,)`` vector, so a whole
+queue becomes one ``(B, n_bins)`` :func:`repro.core.batched.fit_batched`
+call. Two batching tricks keep XLA recompilation at zero:
+
+* **Bucketing** — queued requests are padded up to the nearest size in
+  ``batch_sizes`` (padding lanes are uniform histograms, dropped on
+  output), so only ``len(batch_sizes)`` jit signatures ever compile.
+* **Histogram-keyed LRU cache** — identical intensity histograms hit an
+  exact-key lookup; near-identical ones (adjacent slices of a volume,
+  repeat studies with fresh noise — L1 distance between normalized
+  histograms below ``cache_tol``) hit a nearest-match scan. Either way
+  the fit is skipped; only the cheap per-pixel defuzzification LUT
+  gather runs. On phantom traffic, same-anatomy re-submissions sit at
+  L1 ~ 0.1 while genuinely different content sits at ~0.5, so the
+  default tolerance of 0.15 separates them with wide margin.
+
+Results are hard labels per request (same shape as the input image) plus
+the fitted centers; :meth:`FCMServeEngine.stats` exposes queue /
+throughput / cache-hit counters for the ops dashboards every traffic-
+scaling PR after this one will need.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import batched as B
+from repro.core import fcm as F
+
+
+@dataclasses.dataclass
+class SegmentationResult:
+    """Per-request output."""
+    request_id: int
+    labels: np.ndarray            # same shape as the submitted image
+    centers: np.ndarray           # (c,)
+    n_iters: int                  # 0 for cache hits
+    cache_hit: bool
+
+
+@dataclasses.dataclass
+class _Pending:
+    request_id: int
+    shape: Tuple[int, ...]
+    flat: np.ndarray              # clipped int image, flattened
+    hist: np.ndarray              # (n_bins,) float32
+    key: bytes
+
+
+class FCMServeEngine:
+    """Static-bucket batching engine for FCM segmentation requests.
+
+    ``submit`` ingests an image (any 2-D/3-D shape, 8-bit-range values),
+    histograms it, and either answers from the cache or queues it.
+    ``flush`` drains the queue through bucketed ``fit_batched`` calls.
+    ``segment`` is the submit-all-then-flush convenience wrapper.
+    """
+
+    def __init__(self, cfg: F.FCMConfig = F.FCMConfig(),
+                 batch_sizes: Sequence[int] = (1, 8, 64),
+                 n_bins: int = 256,
+                 cache_size: int = 256,
+                 cache_tol: float = 0.15):
+        if not batch_sizes or any(b <= 0 for b in batch_sizes):
+            raise ValueError(f"bad batch_sizes {batch_sizes!r}")
+        self.cfg = cfg
+        self.batch_sizes = tuple(sorted(set(int(b) for b in batch_sizes)))
+        self.n_bins = n_bins
+        self.cache_size = cache_size
+        # Max L1 distance between normalized histograms for a near-match
+        # cache hit; 0 restricts the cache to exact-histogram hits.
+        self.cache_tol = cache_tol
+        # key (exact histogram bytes) -> (centers, normalized histogram)
+        self._cache: "collections.OrderedDict[bytes, Tuple[np.ndarray, np.ndarray]]" = \
+            collections.OrderedDict()
+        self._queue: List[_Pending] = []
+        self._next_id = 0
+        self._stats = {
+            "requests": 0, "cache_hits": 0, "batches": 0,
+            "batched_images": 0, "padded_lanes": 0,
+            "fit_seconds": 0.0, "fit_iters": 0,
+        }
+
+    # -- ingest ------------------------------------------------------------
+
+    def submit(self, img: np.ndarray) -> int:
+        """Queue one image; returns its request id. Cache hits are still
+        materialized at flush time (the defuzzify LUT needs the pixels)."""
+        img = np.asarray(img)
+        flat = np.clip(img.reshape(-1).astype(np.int64), 0, self.n_bins - 1)
+        hist = np.bincount(flat, minlength=self.n_bins
+                           ).astype(np.float32)[:self.n_bins]
+        rid = self._next_id
+        self._next_id += 1
+        self._stats["requests"] += 1
+        self._queue.append(_Pending(rid, img.shape, flat, hist,
+                                    hist.tobytes()))
+        return rid
+
+    @staticmethod
+    def _normalize(hist: np.ndarray) -> np.ndarray:
+        return hist / max(float(hist.sum()), 1.0)
+
+    # -- drain -------------------------------------------------------------
+
+    def flush(self) -> List[SegmentationResult]:
+        """Run every queued request; returns results in submit order."""
+        results: Dict[int, SegmentationResult] = {}
+        # 1. answer what the cache already knows
+        misses: List[_Pending] = []
+        for p in self._queue:
+            centers = self._cache_get(p.key, p.hist)
+            if centers is not None:
+                self._stats["cache_hits"] += 1
+                results[p.request_id] = self._materialize(
+                    p, centers, n_iters=0, cache_hit=True)
+            else:
+                misses.append(p)
+        self._queue.clear()
+        # 2. intra-flush dedup: fit one representative per histogram key
+        uniq: Dict[bytes, _Pending] = {}
+        dups: List[_Pending] = []
+        for p in misses:
+            if p.key in uniq:
+                dups.append(p)
+            else:
+                uniq[p.key] = p
+        # 3. bucketed batched fits for the representatives; keep this
+        # flush's centers locally so duplicates don't depend on the LRU
+        # cache (which may be disabled, or evict mid-flush).
+        fitted: Dict[bytes, np.ndarray] = {}
+        reps = list(uniq.values())
+        i = 0
+        while i < len(reps):
+            chunk = reps[i:i + self.batch_sizes[-1]]
+            bucket = self._bucket_for(len(chunk))
+            i += len(chunk)
+            self._run_bucket(chunk, bucket, results, fitted)
+        # 4. duplicates ride on their representative's centers
+        for p in dups:
+            self._stats["cache_hits"] += 1
+            results[p.request_id] = self._materialize(
+                p, fitted[p.key], n_iters=0, cache_hit=True)
+        return [results[rid] for rid in sorted(results)]
+
+    def segment(self, imgs: Sequence[np.ndarray]) -> List[SegmentationResult]:
+        ids = [self.submit(im) for im in imgs]
+        by_id = {r.request_id: r for r in self.flush()}
+        return [by_id[i] for i in ids]
+
+    def _bucket_for(self, n: int) -> int:
+        for b in self.batch_sizes:
+            if n <= b:
+                return b
+        return self.batch_sizes[-1]
+
+    def _run_bucket(self, chunk: List[_Pending], bucket: int,
+                    results: Dict[int, SegmentationResult],
+                    fitted: Dict[bytes, np.ndarray]):
+        hists = np.stack([p.hist for p in chunk])
+        n_pad = bucket - len(chunk)
+        if n_pad:
+            # Uniform-histogram padding lanes converge fast and are dropped.
+            pad = np.ones((n_pad, self.n_bins), np.float32)
+            hists = np.concatenate([hists, pad])
+        t0 = time.perf_counter()
+        res = B.fit_batched(jnp.asarray(hists), self.cfg,
+                            n_bins=self.n_bins, compute_labels=False)
+        centers = np.asarray(res.centers)
+        self._stats["fit_seconds"] += time.perf_counter() - t0
+        self._stats["batches"] += 1
+        self._stats["batched_images"] += len(chunk)
+        self._stats["padded_lanes"] += n_pad
+        self._stats["fit_iters"] += int(res.total_iters)
+        for lane, p in enumerate(chunk):
+            fitted[p.key] = centers[lane]
+            self._cache_put(p.key, centers[lane], p.hist)
+            results[p.request_id] = self._materialize(
+                p, centers[lane], n_iters=int(res.n_iters[lane]),
+                cache_hit=False)
+
+    def _materialize(self, p: _Pending, centers: np.ndarray,
+                     n_iters: int, cache_hit: bool) -> SegmentationResult:
+        # Defuzzify via a n_bins-entry LUT: label each bin once, gather.
+        vals = jnp.arange(self.n_bins, dtype=jnp.float32)
+        lut = np.asarray(F.labels_from_centers(vals, jnp.asarray(centers)))
+        labels = lut[p.flat].reshape(p.shape)
+        return SegmentationResult(p.request_id, labels,
+                                  np.asarray(centers), n_iters, cache_hit)
+
+    # -- cache -------------------------------------------------------------
+
+    def _cache_get(self, key: bytes,
+                   hist: Optional[np.ndarray] = None) -> Optional[np.ndarray]:
+        if self.cache_size <= 0:
+            return None
+        entry = self._cache.get(key)
+        if entry is not None:
+            self._cache.move_to_end(key)
+            return entry[0]
+        if hist is None or self.cache_tol <= 0:
+            return None
+        # Nearest-match scan, most-recent first (the cache is small and a
+        # 256-float L1 is trivial next to an FCM fit).
+        q = self._normalize(hist)
+        for k in reversed(self._cache):
+            centers, dist = self._cache[k]
+            if float(np.abs(dist - q).sum()) <= self.cache_tol:
+                self._cache.move_to_end(k)
+                return centers
+        return None
+
+    def _cache_put(self, key: bytes, centers: np.ndarray, hist: np.ndarray):
+        if self.cache_size <= 0:
+            return
+        self._cache[key] = (np.asarray(centers), self._normalize(hist))
+        self._cache.move_to_end(key)
+        while len(self._cache) > self.cache_size:
+            self._cache.popitem(last=False)
+
+    # -- observability -----------------------------------------------------
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    def stats(self) -> Dict[str, float]:
+        s = dict(self._stats)
+        s["queue_depth"] = self.queue_depth
+        s["cache_entries"] = len(self._cache)
+        s["cache_hit_rate"] = (s["cache_hits"] / s["requests"]
+                               if s["requests"] else 0.0)
+        s["images_per_sec"] = (s["batched_images"] / s["fit_seconds"]
+                               if s["fit_seconds"] > 0 else 0.0)
+        return s

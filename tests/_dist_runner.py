@@ -12,14 +12,18 @@ import numpy as np  # noqa: E402
 import jax  # noqa: E402
 
 from repro.core import fcm as F  # noqa: E402
+from repro.core import batched as B  # noqa: E402
 from repro.core import distributed as D  # noqa: E402
 from repro.data import phantom  # noqa: E402
 
 
 def main():
     assert len(jax.devices()) == 8, jax.devices()
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # axis_types only exists on newer jax; explicit-Auto is its default.
+    kwargs = {}
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,) * 2
+    mesh = jax.make_mesh((4, 2), ("data", "model"), **kwargs)
     img, _ = phantom.phantom_slice(256, 256, seed=11)
     x = img.ravel().astype(np.float32)
 
@@ -42,6 +46,19 @@ def main():
     np.testing.assert_allclose(np.sort(np.asarray(s2.centers)),
                                np.sort(np.asarray(f2.centers)), atol=0.75)
     assert s2.labels.shape[0] == 50021
+
+    # Batched multi-image fit with the batch axis split over the mesh:
+    # every lane must match the unsharded batched fit, including the
+    # pad-to-mesh-size path (10 lanes on 8 devices -> 6 padding lanes).
+    imgs = [phantom.phantom_slice(64 + 8 * (z % 3), 96,
+                                  slice_pos=0.3 + 0.04 * z, seed=z)[0]
+            for z in range(10)]
+    hists = B.histograms_of(imgs)
+    local = B.fit_batched(hists, F.FCMConfig(max_iters=300))
+    shard = B.fit_batched_sharded(hists, mesh, F.FCMConfig(max_iters=300))
+    np.testing.assert_allclose(np.asarray(shard.centers),
+                               np.asarray(local.centers), atol=1e-4)
+    np.testing.assert_array_equal(shard.n_iters, local.n_iters)
 
     print("DIST_OK")
 

@@ -1,0 +1,105 @@
+"""Batched multi-image FCM: every lane of ``fit_batched`` must reproduce
+what the single-image histogram fit would have computed for that image
+alone — including lanes that converge at different iteration counts."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import batched as B
+from repro.core import fcm as F
+from repro.core import histogram as H
+from repro.data import phantom
+
+
+@pytest.fixture(scope="module")
+def mixed_batch():
+    """Heterogeneous sizes + noise levels so convergence speeds differ."""
+    specs = [(96, 96, 4.0, 0.3), (128, 96, 6.0, 0.5),
+             (64, 64, 2.0, 0.7), (96, 128, 8.0, 0.4),
+             (80, 80, 12.0, 0.6)]
+    return [phantom.phantom_slice(h, w, slice_pos=sp, noise=nz, seed=i)[0]
+            for i, (h, w, nz, sp) in enumerate(specs)]
+
+
+CFG = F.FCMConfig(max_iters=300)
+
+
+def test_batched_matches_per_image_fit_histogram(mixed_batch):
+    res = B.fit_batched(mixed_batch, CFG)
+    assert res.centers.shape == (len(mixed_batch), CFG.n_clusters)
+    for i, img in enumerate(mixed_batch):
+        single = H.fit_histogram(img.ravel().astype(np.float32), CFG)
+        np.testing.assert_allclose(np.asarray(res.centers[i]),
+                                   np.asarray(single.centers), atol=1e-4)
+        assert res.n_iters[i] == single.n_iters
+        assert (res.labels[i] ==
+                np.asarray(single.labels).reshape(img.shape)).all()
+
+
+def test_batched_lanes_converge_independently(mixed_batch):
+    res = B.fit_batched(mixed_batch, CFG)
+    # The whole point of per-lane masking: a mixed batch must show mixed
+    # iteration counts, and the loop runs exactly max(lane iters) times.
+    assert len(set(res.n_iters.tolist())) > 1, res.n_iters
+    assert res.total_iters == int(res.n_iters.max())
+    assert (res.final_delta < np.inf).all()
+
+
+def test_batched_accepts_prebuilt_histograms(mixed_batch):
+    hists = B.histograms_of(mixed_batch)
+    res_h = B.fit_batched(hists, CFG)
+    res_i = B.fit_batched(mixed_batch, CFG)
+    np.testing.assert_allclose(np.asarray(res_h.centers),
+                               np.asarray(res_i.centers), atol=0)
+    assert res_h.labels is None          # no pixels to defuzzify
+    assert res_i.labels is not None
+
+
+def test_batched_single_lane_degenerates_to_single_image(mixed_batch):
+    img = mixed_batch[0]
+    res = B.fit_batched([img], CFG)
+    single = H.fit_histogram(img.ravel().astype(np.float32), CFG)
+    np.testing.assert_allclose(np.asarray(res.centers[0]),
+                               np.asarray(single.centers), atol=1e-4)
+    assert res.n_iters[0] == single.n_iters
+
+
+def test_batched_pixels_same_shape_batch():
+    xs, gts = [], []
+    for z in range(4):
+        img, gt = phantom.phantom_slice(96, 96, slice_pos=0.4 + 0.05 * z,
+                                        seed=10 + z)
+        xs.append(img)
+        gts.append(gt)
+    res = B.fit_batched_pixels(np.stack(xs), CFG)
+    assert res.centers.shape == (4, CFG.n_clusters)
+    for i in range(4):
+        pred = phantom.match_labels_to_classes(
+            res.labels[i].reshape(96, 96), np.asarray(res.centers[i]))
+        dscs = phantom.dice_per_class(pred, gts[i])
+        assert min(dscs) > 0.80, (i, dscs)
+
+
+def test_batched_max_iters_zero_is_safe(mixed_batch):
+    res = B.fit_batched(mixed_batch[:2], F.FCMConfig(max_iters=0))
+    assert res.total_iters == 0
+    assert (res.n_iters == 0).all()
+    assert res.centers.shape == (2, 4)
+    assert np.isfinite(np.asarray(res.centers)).all()   # linspace init
+
+
+def test_masked_while_freezes_converged_lanes():
+    # Lane 0's eps is huge, so it is "converged" after one step even though
+    # its step keeps drifting (+10/iter); lane 1 contracts to 100. If the
+    # mask failed to freeze lane 0 it would keep accumulating +10s.
+    v0 = jnp.asarray([[10.0, 200.0], [10.0, 200.0]])
+    eps_v = jnp.asarray([1e9, 1e-3])
+
+    def step(v):
+        return v * jnp.asarray([[1.0], [0.5]]) + jnp.asarray([[10.0], [50.0]])
+
+    v, delta, iters, it = B._masked_while(step, v0, eps_v, 50)
+    assert iters[0] == 1 and iters[1] > 1
+    assert int(it) == int(iters[1])
+    np.testing.assert_allclose(np.asarray(v[0]), [20.0, 210.0])   # frozen
+    np.testing.assert_allclose(np.asarray(v[1]), [100.0, 100.0], atol=0.01)

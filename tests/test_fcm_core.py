@@ -71,6 +71,17 @@ def test_baseline_converges_and_segments(slice_image):
     assert min(dscs) > 0.80, dscs
 
 
+def test_baseline_max_iters_zero_returns_centers(slice_image):
+    """Regression: centers used to come back None when the loop body
+    never ran; now they derive from the initial membership."""
+    x, _ = slice_image
+    res = F.fit_baseline(x[:2048], F.FCMConfig(max_iters=0))
+    assert res.centers is not None
+    assert res.centers.shape == (4,)
+    assert np.isfinite(np.asarray(res.centers)).all()
+    assert res.n_iters == 0 and res.final_delta == np.inf
+
+
 def test_fused_matches_baseline(slice_image):
     x, _ = slice_image
     base = F.fit_baseline(x, F.FCMConfig(max_iters=150))

@@ -1,0 +1,140 @@
+"""FCMServeEngine: bucketing, caching, and correctness of served labels
+against the single-image histogram fit."""
+import numpy as np
+import pytest
+
+from repro.core import fcm as F
+from repro.core import histogram as H
+from repro.data import phantom
+from repro.serving.fcm_engine import FCMServeEngine
+
+
+CFG = F.FCMConfig(max_iters=300)
+
+
+@pytest.fixture(scope="module")
+def volume():
+    """12 heterogeneous-size slices (volumetric traffic)."""
+    return [phantom.phantom_slice(64 + 8 * (z % 4), 96,
+                                  slice_pos=0.3 + 0.4 * z / 12,
+                                  noise=4.0, seed=z)[0] for z in range(12)]
+
+
+def test_served_labels_match_single_image_fit(volume):
+    eng = FCMServeEngine(CFG, batch_sizes=(1, 8, 64), cache_size=0)
+    results = eng.segment(volume)
+    assert [r.request_id for r in results] == list(range(12))
+    for img, r in zip(volume, results):
+        assert r.labels.shape == img.shape
+        single = H.fit_histogram(img.ravel().astype(np.float32), CFG)
+        np.testing.assert_allclose(r.centers, np.asarray(single.centers),
+                                   atol=1e-4)
+        assert (r.labels == np.asarray(single.labels).reshape(img.shape)).all()
+        assert r.n_iters == single.n_iters
+
+
+def test_bucketing_pads_to_fixed_shapes(volume):
+    eng = FCMServeEngine(CFG, batch_sizes=(4, 16), cache_size=0)
+    eng.segment(volume)                      # 12 requests -> one 16-bucket
+    s = eng.stats()
+    assert s["batches"] == 1
+    assert s["padded_lanes"] == 4
+    assert s["batched_images"] == 12
+    assert s["queue_depth"] == 0
+
+
+def test_oversize_flush_splits_into_max_buckets(volume):
+    eng = FCMServeEngine(CFG, batch_sizes=(4,), cache_size=0)
+    eng.segment(volume)                      # 12 requests -> three 4-buckets
+    assert eng.stats()["batches"] == 3
+
+
+def test_cache_hit_on_identical_resubmission(volume):
+    eng = FCMServeEngine(CFG, batch_sizes=(1, 8, 64))
+    first = eng.segment([volume[0]])[0]
+    assert not first.cache_hit
+    again = eng.segment([volume[0]])[0]
+    assert again.cache_hit and again.n_iters == 0
+    assert (again.labels == first.labels).all()
+    np.testing.assert_allclose(again.centers, first.centers, atol=0)
+    assert eng.stats()["cache_hits"] == 1
+
+
+def test_intra_flush_dedup(volume):
+    eng = FCMServeEngine(CFG, batch_sizes=(1, 8, 64))
+    results = eng.segment([volume[0]] * 5)   # 5 identical in one flush
+    s = eng.stats()
+    assert s["batched_images"] == 1          # one representative fit
+    assert s["cache_hits"] == 4
+    assert all((r.labels == results[0].labels).all() for r in results)
+
+
+def test_duplicates_with_cache_disabled_all_answered(volume):
+    """Regression: with cache_size=0, duplicate submissions in one flush
+    used to collapse in the dedup dict and lose requests."""
+    eng = FCMServeEngine(CFG, batch_sizes=(1, 8), cache_size=0)
+    results = eng.segment([volume[0]] * 3)
+    assert len(results) == 3
+    assert all((r.labels == results[0].labels).all() for r in results)
+
+
+def test_duplicates_survive_intra_flush_lru_eviction(volume):
+    """Regression: a duplicate's centers come from this flush's fits, not
+    the LRU cache, which may already have evicted the representative."""
+    eng = FCMServeEngine(CFG, batch_sizes=(8,), cache_size=1, cache_tol=0.0)
+    imgs = [phantom.phantom_slice(64, 64, noise=2.0 + 3 * i, seed=i)[0]
+            for i in range(3)]
+    results = eng.segment([imgs[0], imgs[1], imgs[2], imgs[0]])
+    assert len(results) == 4
+    np.testing.assert_allclose(results[3].centers, results[0].centers,
+                               atol=0)
+
+
+def test_near_identical_histograms_hit_cache():
+    # Same anatomy, fresh noise draw (L1 ~ 0.08 between normalized
+    # histograms): the nearest-match scan must serve it from cache.
+    a = phantom.phantom_slice(96, 96, slice_pos=0.5, noise=4.0, seed=1)[0]
+    b, gt = phantom.phantom_slice(96, 96, slice_pos=0.5, noise=4.0, seed=2)
+    eng = FCMServeEngine(CFG)
+    ra = eng.segment([a])[0]
+    rb = eng.segment([b])[0]
+    assert not ra.cache_hit and rb.cache_hit
+    # served-from-cache labels are still per-pixel correct for image b
+    pred = phantom.match_labels_to_classes(rb.labels, rb.centers)
+    assert min(phantom.dice_per_class(pred, gt)) > 0.80
+
+
+def test_distinct_content_does_not_hit_cache():
+    # Different anatomy/noise (L1 ~ 0.5) must NOT near-match.
+    a = phantom.phantom_slice(96, 96, slice_pos=0.5, noise=4.0, seed=1)[0]
+    b = phantom.phantom_slice(96, 96, slice_pos=0.9, noise=8.0, seed=2)[0]
+    eng = FCMServeEngine(CFG)
+    eng.segment([a])
+    assert not eng.segment([b])[0].cache_hit
+
+
+def test_lru_eviction():
+    eng = FCMServeEngine(CFG, cache_size=2)
+    imgs = [phantom.phantom_slice(64, 64, noise=2.0 + 3 * i, seed=i)[0]
+            for i in range(3)]
+    eng.segment(imgs)                        # fills + evicts oldest
+    assert eng.stats()["cache_entries"] == 2
+    assert eng.segment([imgs[0]])[0].cache_hit is False   # evicted
+    assert eng.segment([imgs[2]])[0].cache_hit is True    # still resident
+
+
+def test_stats_shape():
+    eng = FCMServeEngine(CFG)
+    s = eng.stats()
+    for k in ("requests", "cache_hits", "batches", "batched_images",
+              "padded_lanes", "queue_depth", "cache_entries",
+              "cache_hit_rate", "images_per_sec"):
+        assert k in s
+    assert s["requests"] == 0 and s["cache_hit_rate"] == 0.0
+
+
+def test_bad_batch_sizes_rejected():
+    with pytest.raises(ValueError):
+        FCMServeEngine(CFG, batch_sizes=())
+    with pytest.raises(ValueError):
+        FCMServeEngine(CFG, batch_sizes=(0, 8))

@@ -1,7 +1,11 @@
 """Property-based tests (hypothesis) on system invariants."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dep: pip install hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import fcm as F
 from repro.core import histogram as H
