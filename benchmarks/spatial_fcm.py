@@ -1,0 +1,108 @@
+"""Noise-robustness + wall-clock benchmark: plain FCM vs FCM_S.
+
+Sweeps the (gaussian sigma, impulse fraction) noise levels from
+``repro.data.phantom.NOISE_LEVELS`` on a phantom slice and compares
+
+* ``plain``        — histogram-blind fused FCM (``fit_fused``),
+* ``spatial_ref``  — FCM_S with the pure-jnp stencil reference,
+* ``spatial_pallas`` — FCM_S with the fused Pallas stencil kernel
+  (interpret mode off-TPU, so its wall clock on CPU measures the
+  Python interpreter, not the kernel),
+
+on per-tissue DSC and median fit wall-clock. Writes
+``benchmarks/out/spatial_fcm.json``.
+
+  PYTHONPATH=src python -m benchmarks.spatial_fcm [--size 128] [--no-pallas]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.configs.fcm_brainweb import make_config
+from repro.core import fcm as F
+from repro.core import spatial as S
+from repro.data import phantom
+
+
+def _dsc(labels, centers, gt):
+    pred = phantom.match_labels_to_classes(np.asarray(labels),
+                                           np.asarray(centers))
+    d = phantom.dice_per_class(pred, gt)
+    return {name: round(float(v), 4)
+            for name, v in zip(phantom.CLASS_NAMES, d)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", type=int, default=128)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="skip the (interpret-mode-slow on CPU) Pallas fits")
+    args = ap.parse_args()
+
+    job = make_config()
+    cfg, scfg = job.fcm, job.spatial
+    report = {"backend": jax.default_backend(),
+              "size": args.size, "seed": args.seed,
+              "alpha": scfg.alpha, "neighbors": scfg.neighbors,
+              "levels": []}
+    for sigma, impulse in job.noise_levels:
+        img, gt = phantom.noisy_phantom_slice(args.size, args.size,
+                                              noise=sigma, impulse=impulse,
+                                              seed=args.seed)
+        x = img.ravel().astype(np.float32)
+        imgf = img.astype(np.float32)
+        level = {"sigma": sigma, "impulse": impulse, "fits": {}}
+
+        rp = F.fit_fused(x, cfg)
+        level["fits"]["plain"] = {
+            "dsc": _dsc(np.asarray(rp.labels).reshape(img.shape), rp.centers,
+                        gt),
+            "n_iters": rp.n_iters,
+            "seconds": time_fn(lambda: F.fit_fused(x, cfg)),
+        }
+        rs = S.fit_spatial(imgf, scfg)
+        level["fits"]["spatial_ref"] = {
+            "dsc": _dsc(rs.labels, rs.centers, gt),
+            "n_iters": rs.n_iters,
+            "seconds": time_fn(lambda: S.fit_spatial(imgf, scfg)),
+        }
+        if not args.no_pallas:
+            rk = S.fit_spatial(imgf, scfg, use_pallas=True)
+            level["fits"]["spatial_pallas"] = {
+                "dsc": _dsc(rk.labels, rk.centers, gt),
+                "n_iters": rk.n_iters,
+                "seconds": time_fn(
+                    lambda: S.fit_spatial(imgf, scfg, use_pallas=True)),
+                "interpret": jax.default_backend() != "tpu",
+            }
+        report["levels"].append(level)
+        print(f"sigma={sigma:5.1f} impulse={impulse:4.0%}  " + "  ".join(
+            f"{k}: WM={v['dsc']['WM']:.3f} GM={v['dsc']['GM']:.3f} "
+            f"CSF={v['dsc']['CSF']:.3f} ({v['seconds'] * 1e3:.0f} ms)"
+            for k, v in level["fits"].items()))
+
+    out_dir = os.path.join(os.path.dirname(__file__), "out")
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, "spatial_fcm.json")
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {out_path}")
+
+    worst = report["levels"][-1]["fits"]
+    for cls in ("CSF", "GM", "WM"):
+        gain = worst["spatial_ref"]["dsc"][cls] - worst["plain"]["dsc"][cls]
+        print(f"highest-noise DSC gain {cls}: {gain:+.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Noisy-MRI demo: plain FCM vs spatially-regularized FCM_S.
+
+Corrupts a phantom slice with heavy Gaussian + salt-and-pepper noise,
+segments it with the histogram fast path (plain FCM, spatial-blind) and
+with :func:`repro.core.spatial.fit_spatial` (8-neighbor FCM_S, both
+through the serving engine's ``method="spatial"`` route and directly),
+then reports per-tissue DSC. Outputs land in the gitignored
+``examples/out/``.
+
+  PYTHONPATH=src python examples/segment_noisy.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs.fcm_brainweb import make_config
+from repro.data import phantom
+from repro.serving.fcm_engine import FCMServeEngine
+
+
+def write_pgm(path, img):
+    img = np.asarray(img, np.uint8)
+    with open(path, "wb") as f:
+        f.write(b"P5\n%d %d\n255\n" % (img.shape[1], img.shape[0]))
+        f.write(img.tobytes())
+
+
+def main():
+    out_dir = os.path.join(os.path.dirname(__file__), "out")
+    os.makedirs(out_dir, exist_ok=True)
+    job = make_config()
+
+    sigma, impulse = job.noise_levels[-1]
+    img, gt = phantom.noisy_phantom_slice(217, 181, noise=sigma,
+                                          impulse=impulse, seed=7)
+    print(f"noisy slice: {img.shape}, gaussian sigma={sigma}, "
+          f"impulse={impulse:.0%}")
+
+    eng = FCMServeEngine(job.fcm, spatial_cfg=job.spatial)
+    plain = eng.segment([img])[0]                       # histogram fast path
+    spatial = eng.segment([img], method="spatial")[0]   # FCM_S route
+
+    for tag, res in [("plain-histogram", plain), ("spatial-fcm_s", spatial)]:
+        pred = phantom.match_labels_to_classes(res.labels, res.centers)
+        dscs = phantom.dice_per_class(pred, gt)
+        print(f"  {tag:16s} ({res.n_iters} iters) DSC:",
+              {c: round(d, 3) for c, d in zip(phantom.CLASS_NAMES, dscs)})
+        write_pgm(os.path.join(out_dir, f"noisy_{tag}.pgm"),
+                  (pred * 85).astype(np.uint8))
+    write_pgm(os.path.join(out_dir, "noisy_input.pgm"), img)
+    s = eng.stats()
+    print(f"engine: {s['requests']} requests, {s['spatial_requests']} "
+          f"spatial, cache entries {s['cache_entries']}")
+    print(f"wrote {out_dir}/noisy_input.pgm and noisy_*.pgm")
+
+
+if __name__ == "__main__":
+    main()

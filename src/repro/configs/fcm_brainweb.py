@@ -1,16 +1,26 @@
 """The paper's own configuration: FCM segmentation of brain phantom
 slices into WM/GM/CSF/background (c=4, m=2, eps=0.005), dataset scaled
 20 KB -> 1 MB (paper Table 3), plus a pod-scale 1 GB volume cell for the
-dry-run."""
+dry-run, and the spatially-regularized (FCM_S) cell for the noisy-MRI
+workload."""
 import dataclasses
 
 from repro.core.fcm import FCMConfig
+from repro.core.spatial import SpatialFCMConfig  # noqa: F401  (re-export)
+from repro.data.phantom import NOISE_LEVELS
 
 
 @dataclasses.dataclass(frozen=True)
 class FCMJobConfig:
     name: str = "fcm-brainweb"
     fcm: FCMConfig = FCMConfig(n_clusters=4, m=2.0, eps=5e-3, max_iters=300)
+    # FCM_S for the noisy-MRI workload: 8-neighbor stencil, alpha=1
+    # (the sweep in benchmarks/spatial_fcm.py backs these choices).
+    spatial: SpatialFCMConfig = SpatialFCMConfig(
+        n_clusters=4, m=2.0, eps=5e-3, max_iters=300,
+        alpha=1.0, neighbors=8)
+    # (gaussian sigma, impulse fraction) noise sweep for robustness evals
+    noise_levels = NOISE_LEVELS
     # paper Table 3 dataset sizes (bytes)
     table3_sizes = tuple(int(k * 1024) for k in
                          (20, 40, 60, 80, 100, 120, 140, 160, 180, 200,

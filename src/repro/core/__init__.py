@@ -1,6 +1,6 @@
 # The paper's primary contribution: Fuzzy C-Means, paper-faithful and
 # beyond-paper variants. See DESIGN.md §2 and §6.
-from . import batched, distributed, fcm, histogram, sequential  # noqa: F401
+from . import batched, distributed, fcm, histogram, sequential, spatial  # noqa: F401,E501
 from .fcm import (FCMConfig, FCMResult, defuzzify, fit_baseline,  # noqa: F401
                   fit_fused, labels_from_centers, objective,
                   update_centers, update_membership)
@@ -8,3 +8,4 @@ from .histogram import fit_histogram  # noqa: F401
 from .distributed import fit_sharded  # noqa: F401
 from .batched import (BatchedFCMResult, fit_batched,  # noqa: F401
                       fit_batched_pixels, fit_batched_sharded)
+from .spatial import SpatialFCMConfig, fit_spatial  # noqa: F401

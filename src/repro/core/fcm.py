@@ -239,22 +239,31 @@ def fused_center_step(x: jax.Array, v: jax.Array, m: float) -> jax.Array:
     return update_centers(x, u, m)
 
 
-@partial(jax.jit, static_argnames=("c", "m", "max_iters"))
-def _fused_loop(x, v0, c, m, eps, max_iters):
+def _while_centers(step, v0, eps, max_iters):
+    """Generic device-resident center fixed point: iterate ``v -> step(v)``
+    until ``max|v' - v| < eps`` or ``max_iters``. Shared by the fused and
+    spatial (FCM_S) fit paths so the convergence test cannot drift.
+    Returns (v, delta, it)."""
     def cond(state):
         _, delta, it = state
         return jnp.logical_and(delta >= eps, it < max_iters)
 
     def body(state):
         v, _, it = state
-        v_new = fused_center_step(x, v, m)
+        v_new = step(v)
         delta = jnp.max(jnp.abs(v_new - v))
         return v_new, delta, it + 1
 
-    v0 = jnp.asarray(v0, jnp.float32)
-    state = (v0, jnp.asarray(jnp.inf, jnp.float32), jnp.asarray(0, jnp.int32))
-    v, delta, it = jax.lax.while_loop(cond, body, state)
-    return v, delta, it
+    state = (jnp.asarray(v0, jnp.float32),
+             jnp.asarray(jnp.inf, jnp.float32),
+             jnp.asarray(0, jnp.int32))
+    return jax.lax.while_loop(cond, body, state)
+
+
+@partial(jax.jit, static_argnames=("c", "m", "max_iters"))
+def _fused_loop(x, v0, c, m, eps, max_iters):
+    return _while_centers(lambda v: fused_center_step(x, v, m), v0, eps,
+                          max_iters)
 
 
 def fit_fused(x: jax.Array, cfg: FCMConfig = FCMConfig(),

@@ -1,0 +1,212 @@
+"""Spatially-regularized Fuzzy C-Means (FCM_S, Ahmed-style).
+
+The histogram fast path (:mod:`repro.core.histogram`) discards pixel
+positions, so it cannot penalize spatially-isolated misclassifications —
+exactly the failure mode of plain FCM on noisy MRI (salt-and-pepper
+impulses land in whichever cluster their corrupted intensity is nearest
+to). FCM_S (Ahmed et al. 2002; cf. the 3DPIFCM/IFCM line,
+arXiv:2002.01985) adds a neighborhood penalty to the objective:
+
+    J = sum_ji u_ji^m [ d2_ji + (alpha/|N_i|) sum_{r in N_i} d2_jr ]
+
+which changes the two update equations to
+
+    u_ji  ∝ (d2_ji + alpha * mean_{r in N_i} d2_jr)^(-1/(m-1))      (Eq. 4')
+    v_j   = sum_i u_ji^m (x_i + alpha * xbar_i)
+            / ((1 + alpha) sum_i u_ji^m)                            (Eq. 3')
+
+with ``xbar_i`` the mean intensity of pixel i's neighborhood. Border
+pixels use their true (smaller) neighborhoods — |N_i| is per-pixel.
+
+Neighborhoods: 4- or 8-connected for 2-D slices, 6-connected for 3-D
+volumes. With ``alpha = 0`` every formula degenerates bitwise to plain
+FCM, so :func:`fit_spatial` reproduces :func:`repro.core.fcm.fit_fused`
+exactly (validated in tests).
+
+Two step implementations drive the same fused ``while_loop``:
+
+* the pure-``jnp`` reference in this module (shifted-array stencil), and
+* the Pallas stencil kernel in :mod:`repro.kernels.fcm_spatial`
+  (``use_pallas=True``), which fuses the stencil average, the membership
+  update, and the center reduction into one VMEM pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import fcm as F
+
+_D2_FLOOR = 1e-12
+
+OFFSETS_2D_4 = ((-1, 0), (1, 0), (0, -1), (0, 1))
+OFFSETS_2D_8 = OFFSETS_2D_4 + ((-1, -1), (-1, 1), (1, -1), (1, 1))
+OFFSETS_3D_6 = ((-1, 0, 0), (1, 0, 0), (0, -1, 0), (0, 1, 0),
+                (0, 0, -1), (0, 0, 1))
+
+
+@dataclasses.dataclass(frozen=True)
+class SpatialFCMConfig(F.FCMConfig):
+    """FCM_S hyper-parameters on top of the plain-FCM set.
+
+    ``alpha`` weighs the neighborhood term (0 = plain FCM; the FCM_S
+    literature uses 0.5–2 for moderate-to-heavy noise). ``neighbors``
+    is the 2-D stencil arity (4 or 8); 3-D volumes always use the
+    6-connected stencil.
+    """
+    alpha: float = 1.0
+    neighbors: int = 4
+
+
+def neighbor_offsets(ndim: int, neighbors: int) -> Tuple[Tuple[int, ...], ...]:
+    """The symmetric stencil offset set for an image rank + arity."""
+    if ndim == 2:
+        if neighbors == 4:
+            return OFFSETS_2D_4
+        if neighbors == 8:
+            return OFFSETS_2D_8
+        raise ValueError(f"2-D neighborhoods are 4 or 8, got {neighbors}")
+    if ndim == 3:
+        if neighbors != 6:
+            raise ValueError(f"3-D neighborhoods are 6-connected, "
+                             f"got {neighbors}")
+        return OFFSETS_3D_6
+    raise ValueError(f"expected a 2-D image or 3-D volume, rank {ndim}")
+
+
+def _shift(a: jax.Array, off: Tuple[int, ...]) -> jax.Array:
+    """Zero-filled shift: out[i] = a[i - off] (per axis)."""
+    pads, slices = [], []
+    for ax, o in enumerate(off):
+        n = a.shape[ax]
+        if o >= 0:
+            pads.append((o, 0))
+            slices.append(slice(0, n))
+        else:
+            pads.append((0, -o))
+            slices.append(slice(-o, None))
+    return jnp.pad(a, pads)[tuple(slices)]
+
+
+def neighbor_fields(img: jax.Array, v: jax.Array, neighbors: int):
+    """The three stencil fields of FCM_S, computed by shifted arrays.
+
+    Returns ``(d2, nb_d2_mean, xbar)``: the plain squared distances
+    ``(c, *img.shape)``, the per-pixel neighborhood mean of the
+    per-cluster squared distances (same shape), and the neighborhood
+    mean intensity ``img.shape``. Borders average over the in-image
+    neighbors only.
+    """
+    img = jnp.asarray(img, jnp.float32)
+    v = jnp.asarray(v, jnp.float32)
+    offsets = neighbor_offsets(img.ndim, neighbors)
+    vb = v.reshape((-1,) + (1,) * img.ndim)
+    w = jnp.ones(img.shape, jnp.float32)
+    nb_d2 = jnp.zeros((v.shape[0],) + img.shape, jnp.float32)
+    cnt = jnp.zeros(img.shape, jnp.float32)
+    sx = jnp.zeros(img.shape, jnp.float32)
+    for off in offsets:
+        xs = _shift(img, off)
+        ws = _shift(w, off)
+        nb_d2 = nb_d2 + ws[None] * (vb - xs[None]) ** 2
+        cnt = cnt + ws
+        sx = sx + ws * xs
+    cnt = jnp.maximum(cnt, 1.0)
+    d2 = (vb - img[None]) ** 2
+    return d2, nb_d2 / cnt[None], sx / cnt
+
+
+def spatial_membership(img: jax.Array, v: jax.Array, m: float = 2.0,
+                       alpha: float = 1.0, neighbors: int = 4) -> jax.Array:
+    """Eq. 4' memberships from the spatially-effective distances;
+    shape ``(c,) + img.shape``."""
+    d2, nb, _ = neighbor_fields(img, v, neighbors)
+    return F.membership_from_d2(d2 + alpha * nb, m)
+
+
+def spatial_center_step(img: jax.Array, v: jax.Array, m: float = 2.0,
+                        alpha: float = 1.0, neighbors: int = 4) -> jax.Array:
+    """One fused v -> v' FCM_S iteration (pure-jnp stencil reference).
+
+    Eq. 3' is plain Eq. 3 on the effective pixels
+    ``(x + alpha * xbar) / (1 + alpha)``, so the update reuses
+    :func:`repro.core.fcm.update_centers` — with ``alpha = 0`` the
+    effective pixels equal ``x`` bitwise and the step degenerates to
+    :func:`repro.core.fcm.fused_center_step`.
+    """
+    d2, nb, xbar = neighbor_fields(img, v, neighbors)
+    c = v.shape[0]
+    u = F.membership_from_d2((d2 + alpha * nb).reshape(c, -1), m)
+    x_eff = ((jnp.asarray(img, jnp.float32) + alpha * xbar)
+             / (1.0 + alpha)).reshape(-1)
+    return F.update_centers(x_eff, u, m)
+
+
+# ---------------------------------------------------------------------------
+# Fused while_loop drivers (share core.fcm's convergence loop)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("m", "alpha", "neighbors", "max_iters"))
+def _spatial_loop_ref(img, v0, m, alpha, neighbors, eps, max_iters):
+    step = lambda v: spatial_center_step(img, v, m, alpha, neighbors)
+    return F._while_centers(step, v0, eps, max_iters)
+
+
+@partial(jax.jit, static_argnames=("m", "alpha", "neighbors", "max_iters",
+                                   "block_rows", "interpret"))
+def _spatial_loop_pallas(xpad, wpad, v0, m, alpha, neighbors, eps,
+                         max_iters, block_rows, interpret):
+    from repro.kernels import ops as kops
+
+    def step(v):
+        num, den = kops.spatial_partials(xpad, wpad, v, m, alpha, neighbors,
+                                         block_rows, interpret)
+        return num / jnp.maximum((1.0 + alpha) * den, _D2_FLOOR)
+
+    return F._while_centers(step, v0, eps, max_iters)
+
+
+def fit_spatial(img, cfg: SpatialFCMConfig = SpatialFCMConfig(),
+                use_pallas: bool = False,
+                v0: Optional[jax.Array] = None,
+                keep_membership: bool = False,
+                block_rows: int = 64,
+                interpret: Optional[bool] = None) -> F.FCMResult:
+    """Spatially-regularized FCM over a 2-D image or 3-D volume.
+
+    Unlike the flat-pixel fit paths, ``labels`` (and ``membership``
+    when kept) retain the input's spatial shape. ``use_pallas=True``
+    drives the loop with the fused stencil kernel of
+    :mod:`repro.kernels.fcm_spatial`; the padding to tile shapes
+    happens once, outside the loop.
+    """
+    img = jnp.asarray(img, jnp.float32)
+    if img.ndim not in (2, 3):
+        raise ValueError(f"fit_spatial needs (H, W) or (D, H, W) input, "
+                         f"got shape {img.shape}")
+    neighbors = cfg.neighbors if img.ndim == 2 else 6
+    neighbor_offsets(img.ndim, neighbors)   # validate arity early
+    x = img.ravel()
+    if v0 is None:
+        v0 = F.linspace_centers(x, cfg.n_clusters)
+    # Same center-movement tolerance scaling as fit_fused.
+    rng = float(jnp.max(x) - jnp.min(x)) or 1.0
+    eps_v = cfg.eps * rng * 0.1
+    if use_pallas:
+        from repro.kernels import ops as kops
+        xpad, wpad = kops.tile_grid(img, block_rows)
+        v, delta, it = _spatial_loop_pallas(
+            xpad, wpad, v0, cfg.m, cfg.alpha, neighbors, eps_v,
+            cfg.max_iters, block_rows, interpret)
+    else:
+        v, delta, it = _spatial_loop_ref(
+            img, v0, cfg.m, cfg.alpha, neighbors, eps_v, cfg.max_iters)
+    u = spatial_membership(img, v, cfg.m, cfg.alpha, neighbors)
+    labels = F.defuzzify(u.reshape(cfg.n_clusters, -1)).reshape(img.shape)
+    return F.FCMResult(centers=v, labels=labels, n_iters=int(it),
+                       final_delta=float(delta),
+                       membership=u if keep_membership else None)

@@ -69,6 +69,54 @@ def phantom_slice(height: int = 217, width: int = 181,
     return img.astype(np.uint8), labels
 
 
+def add_impulse_noise(img: np.ndarray, frac: float = 0.05, seed: int = 0,
+                      salt: int = 255, pepper: int = 0) -> np.ndarray:
+    """Salt-and-pepper corruption: a ``frac`` fraction of pixels is
+    replaced by ``salt`` or ``pepper`` (50/50). Returns a copy."""
+    rng = np.random.default_rng(seed)
+    out = np.array(img, copy=True)
+    n = out.size
+    k = int(round(frac * n))
+    if k == 0:
+        return out
+    idx = rng.choice(n, size=k, replace=False)
+    vals = np.where(rng.random(k) < 0.5, salt, pepper).astype(out.dtype)
+    out.reshape(-1)[idx] = vals
+    return out
+
+
+# (gaussian sigma, salt-and-pepper fraction) sweep for the noise-
+# robustness benchmark; the last level is the headline noisy-MRI case.
+NOISE_LEVELS = ((4.0, 0.0), (8.0, 0.02), (12.0, 0.05), (16.0, 0.10))
+
+
+def noisy_phantom_slice(height: int = 217, width: int = 181,
+                        slice_pos: float = 0.5, noise: float = 12.0,
+                        impulse: float = 0.05, seed: int = 0):
+    """The noisy-MRI workload: a phantom slice with heavier Gaussian
+    noise plus salt-and-pepper impulse corruption, and exact ground
+    truth. Returns (image uint8 (H, W), labels int32 (H, W))."""
+    img, labels = phantom_slice(height, width, slice_pos, noise, seed)
+    return add_impulse_noise(img, impulse, seed=seed + 1), labels
+
+
+def noisy_phantom_volume(depth: int = 8, height: int = 64, width: int = 64,
+                         noise: float = 12.0, impulse: float = 0.05,
+                         seed: int = 0):
+    """A small noisy volume (stacked noisy slices with drifting anatomy)
+    for the 3-D 6-neighbor spatial path. Returns (uint8 (D, H, W),
+    int32 (D, H, W))."""
+    imgs, labs = [], []
+    for z in range(depth):
+        im, la = noisy_phantom_slice(height, width,
+                                     slice_pos=0.3 + 0.4 * z / max(depth, 1),
+                                     noise=noise, impulse=impulse,
+                                     seed=seed + z)
+        imgs.append(im)
+        labs.append(la)
+    return np.stack(imgs), np.stack(labs)
+
+
 def phantom_of_bytes(n_bytes: int, noise: float = 4.0, seed: int = 0):
     """A phantom whose uint8 image is exactly ``n_bytes`` (paper Table 3
     scales the dataset from 20 KB to 1 MB; 1 byte per pixel)."""

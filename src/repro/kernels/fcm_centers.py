@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .fcm_membership import membership_from_d2_tile
+
 LANES = 128
 _D2_FLOOR = 1e-12
 
@@ -58,12 +60,7 @@ def _fused_partials_kernel(x_ref, w_ref, v_ref, num_ref, den_ref,
     w = w_ref[...].astype(jnp.float32)
     v = v_ref[...][:, 0].astype(jnp.float32)        # (c,)
     d2 = (v[:, None, None] - x[None, :, :]) ** 2
-    p = jnp.clip(d2, _D2_FLOOR, None) ** (-1.0 / (m - 1.0))
-    u = p / jnp.sum(p, axis=0, keepdims=True)
-    zero = (d2 <= 0.0)
-    any_zero = jnp.any(zero, axis=0, keepdims=True)
-    zcount = jnp.maximum(jnp.sum(zero, axis=0, keepdims=True), 1)
-    u = jnp.where(any_zero, zero.astype(u.dtype) / zcount.astype(u.dtype), u)
+    u = membership_from_d2_tile(d2, m)
     um = (u ** m) * w[None, :, :]
     pnum = jnp.sum(um * x[None, :, :], axis=1)
     pden = jnp.sum(um, axis=1)

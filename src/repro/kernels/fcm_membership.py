@@ -19,16 +19,24 @@ LANES = 128
 _D2_FLOOR = 1e-12
 
 
-def _membership_kernel(x_ref, v_ref, u_ref, *, m: float, c: int):
-    x = x_ref[...].astype(jnp.float32)              # (R, 128)
-    v = v_ref[...][:, 0].astype(jnp.float32)        # (c,)
-    d2 = (v[:, None, None] - x[None, :, :]) ** 2    # (c, R, 128)
+def membership_from_d2_tile(d2: jax.Array, m: float) -> jax.Array:
+    """Eq. 4 membership from a (c, ...) tile of squared distances, with
+    the exact-zero one-hot handling. Shared by every kernel body that
+    computes memberships in VMEM (plain, fused, and spatial)."""
     p = jnp.clip(d2, _D2_FLOOR, None) ** (-1.0 / (m - 1.0))
     u = p / jnp.sum(p, axis=0, keepdims=True)
     zero = (d2 <= 0.0)
     any_zero = jnp.any(zero, axis=0, keepdims=True)
     zcount = jnp.maximum(jnp.sum(zero, axis=0, keepdims=True), 1)
-    u = jnp.where(any_zero, zero.astype(u.dtype) / zcount.astype(u.dtype), u)
+    return jnp.where(any_zero,
+                     zero.astype(u.dtype) / zcount.astype(u.dtype), u)
+
+
+def _membership_kernel(x_ref, v_ref, u_ref, *, m: float, c: int):
+    x = x_ref[...].astype(jnp.float32)              # (R, 128)
+    v = v_ref[...][:, 0].astype(jnp.float32)        # (c,)
+    d2 = (v[:, None, None] - x[None, :, :]) ** 2    # (c, R, 128)
+    u = membership_from_d2_tile(d2, m)
     u_ref[...] = u.astype(u_ref.dtype)
 
 

@@ -1,0 +1,193 @@
+"""Pallas TPU stencil kernels for spatially-regularized FCM (FCM_S).
+
+One grid step loads a pixel tile plus its grid-overlapped neighbor
+tiles (the halo), forms the 4/8-neighbor (2-D) or 6-neighbor (3-D)
+stencil average of per-cluster squared distances entirely in VMEM,
+applies the Eq. 4' membership update on the effective distances
+``d2 + alpha * mean_r d2_r``, and immediately accumulates the Eq. 3'
+partial sums — neither the (c, N) membership nor the (c, N) neighbor
+distance field ever touches HBM, so one FCM_S iteration stays a single
+O(N)-read kernel launch like :func:`fcm_centers.fused_partials_pallas`.
+
+Halo rows via grid overlap: the pixel and validity arrays are each
+passed three times with clamped index maps (block ``i-1``, ``i``,
+``i+1`` for 2-D row blocks; slice ``i-1``, ``i``, ``i+1`` for 3-D
+volumes), so every step also sees the row/slice just outside its tile.
+At the grid edges the clamped neighbor tile aliases the center tile and
+its contribution is zeroed through the validity weights (gated on
+``pl.program_id``). Lane-direction (W) neighbors never cross a tile
+boundary because tiles span the full padded width.
+
+Border pixels need no special casing: each stencil direction carries
+the shifted validity weights, so a pixel's neighbor count is the number
+of *valid in-image* neighbors it actually has and the stencil mean is
+exact at edges, corners, and against padding.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fcm_centers import _accumulate
+from .fcm_membership import membership_from_d2_tile
+
+LANES = 128
+_D2_FLOOR = 1e-12
+
+
+# -- in-tile shifts (zero fill; validity weights make the fill inert) --------
+
+def _shift_right(a):
+    """out[..., j] = a[..., j-1]."""
+    z = jnp.zeros_like(a[..., :1])
+    return jnp.concatenate([z, a[..., :-1]], axis=-1)
+
+
+def _shift_left(a):
+    """out[..., j] = a[..., j+1]."""
+    z = jnp.zeros_like(a[..., :1])
+    return jnp.concatenate([a[..., 1:], z], axis=-1)
+
+
+def _reduce_tile(xc, wc, pairs, v_ref, num_ref, den_ref, *, m, alpha):
+    """Shared tail of both kernels: stencil-average the per-cluster
+    distances over ``pairs`` of (shifted pixels, shifted validity),
+    run the membership update on the effective distances, and
+    accumulate the center partial sums. xc/wc are (R, W) tiles."""
+    v = v_ref[...][:, 0].astype(jnp.float32)        # (c,)
+    vb = v[:, None, None]
+    nb_d2 = jnp.zeros((v.shape[0],) + xc.shape, jnp.float32)
+    cnt = jnp.zeros_like(xc)
+    sx = jnp.zeros_like(xc)
+    for xs, ws in pairs:
+        nb_d2 = nb_d2 + ws[None] * (vb - xs[None]) ** 2
+        cnt = cnt + ws
+        sx = sx + ws * xs
+    cnt = jnp.maximum(cnt, 1.0)
+    d2_eff = (vb - xc[None]) ** 2 + alpha * (nb_d2 / cnt[None])
+    # Eq. 4' on the effective distances (same zero handling as the
+    # plain-FCM kernels).
+    u = membership_from_d2_tile(d2_eff, m)
+    um = (u ** m) * wc[None]
+    x_eff = xc + alpha * (sx / cnt)
+    pnum = jnp.sum(um * x_eff[None], axis=1)        # (c, W) per-lane partials
+    pden = jnp.sum(um, axis=1)
+    _accumulate(num_ref, den_ref, pnum, pden)
+
+
+def _spatial2d_kernel(xp_ref, xc_ref, xn_ref, wp_ref, wc_ref, wn_ref, v_ref,
+                      num_ref, den_ref, *, m, alpha, neighbors):
+    i = pl.program_id(0)
+    xc = xc_ref[...].astype(jnp.float32)            # (R, Wp)
+    wc = wc_ref[...].astype(jnp.float32)
+    # Halo rows: last row of the previous block / first row of the next,
+    # with validity zeroed where the clamped index map aliased us.
+    gp = jnp.where(i == 0, 0.0, 1.0)
+    gn = jnp.where(i == pl.num_programs(0) - 1, 0.0, 1.0)
+    top_x = xp_ref[...][-1:, :].astype(jnp.float32)
+    top_w = wp_ref[...][-1:, :].astype(jnp.float32) * gp
+    bot_x = xn_ref[...][:1, :].astype(jnp.float32)
+    bot_w = wn_ref[...][:1, :].astype(jnp.float32) * gn
+    x_u = jnp.concatenate([top_x, xc[:-1]], axis=0)   # up neighbor of row r
+    w_u = jnp.concatenate([top_w, wc[:-1]], axis=0)
+    x_d = jnp.concatenate([xc[1:], bot_x], axis=0)    # down neighbor
+    w_d = jnp.concatenate([wc[1:], bot_w], axis=0)
+    pairs = [(x_u, w_u), (x_d, w_d),
+             (_shift_right(xc), _shift_right(wc)),    # left neighbor
+             (_shift_left(xc), _shift_left(wc))]      # right neighbor
+    if neighbors == 8:
+        for xs, ws in ((x_u, w_u), (x_d, w_d)):
+            pairs.append((_shift_right(xs), _shift_right(ws)))
+            pairs.append((_shift_left(xs), _shift_left(ws)))
+    _reduce_tile(xc, wc, pairs, v_ref, num_ref, den_ref, m=m, alpha=alpha)
+
+
+def _spatial3d_kernel(xp_ref, xc_ref, xn_ref, wp_ref, wc_ref, wn_ref, v_ref,
+                      num_ref, den_ref, *, m, alpha):
+    i = pl.program_id(0)
+    xc = xc_ref[...][0].astype(jnp.float32)         # (Hp, Wp) slice
+    wc = wc_ref[...][0].astype(jnp.float32)
+    # z-neighbors are whole halo slices from the grid-overlapped blocks.
+    gp = jnp.where(i == 0, 0.0, 1.0)
+    gn = jnp.where(i == pl.num_programs(0) - 1, 0.0, 1.0)
+    xz0 = xp_ref[...][0].astype(jnp.float32)
+    wz0 = wp_ref[...][0].astype(jnp.float32) * gp
+    xz1 = xn_ref[...][0].astype(jnp.float32)
+    wz1 = wn_ref[...][0].astype(jnp.float32) * gn
+    # y-neighbors: the full slice is resident, so shift with zero fill.
+    zr = jnp.zeros_like(xc[:1])
+    x_u = jnp.concatenate([zr, xc[:-1]], axis=0)
+    w_u = jnp.concatenate([zr, wc[:-1]], axis=0)
+    x_d = jnp.concatenate([xc[1:], zr], axis=0)
+    w_d = jnp.concatenate([wc[1:], zr], axis=0)
+    pairs = [(xz0, wz0), (xz1, wz1), (x_u, w_u), (x_d, w_d),
+             (_shift_right(xc), _shift_right(wc)),
+             (_shift_left(xc), _shift_left(wc))]
+    _reduce_tile(xc, wc, pairs, v_ref, num_ref, den_ref, m=m, alpha=alpha)
+
+
+# -- pallas_call wrappers ----------------------------------------------------
+
+def _call_spatial(kernel, grid, block, arrays, v, wp, interpret):
+    """Common pallas_call plumbing: each pixel/validity array goes in
+    three times under clamped prev/cur/next index maps (the grid
+    overlap), centers are broadcast, partials accumulate in (c, Wp)."""
+    c = v.shape[0]
+    g = grid[0]
+    ndim = len(block)
+    tail = (0,) * (ndim - 1)
+    prev = lambda i: (jnp.maximum(i - 1, 0),) + tail
+    cur = lambda i: (i,) + tail
+    nxt = lambda i: (jnp.minimum(i + 1, g - 1),) + tail
+    vb = jnp.broadcast_to(v.astype(jnp.float32)[:, None], (c, LANES))
+    x, w = arrays
+    num, den = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(block, prev), pl.BlockSpec(block, cur),
+            pl.BlockSpec(block, nxt),
+            pl.BlockSpec(block, prev), pl.BlockSpec(block, cur),
+            pl.BlockSpec(block, nxt),
+            pl.BlockSpec((c, LANES), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((c, wp), lambda i: (0, 0)),
+            pl.BlockSpec((c, wp), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, wp), jnp.float32),
+            jax.ShapeDtypeStruct((c, wp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, x, x, w, w, w, vb)
+    return jnp.sum(num, axis=1), jnp.sum(den, axis=1)
+
+
+def spatial_partials_pallas_2d(x2d, w2d, v, m: float, alpha: float,
+                               neighbors: int = 4, block_rows: int = 64,
+                               interpret: bool = False):
+    """x2d/w2d (Hp, Wp) padded image + validity, v (c,) ->
+    (num (c,), den (c,)) of Eq. 3'; caller divides num / ((1+alpha) den).
+    Hp must divide by block_rows and Wp by 128 (ops.tile_grid pads)."""
+    hp, wp = x2d.shape
+    assert hp % block_rows == 0 and wp % LANES == 0, (x2d.shape, block_rows)
+    assert neighbors in (4, 8), neighbors
+    kernel = partial(_spatial2d_kernel, m=m, alpha=alpha, neighbors=neighbors)
+    return _call_spatial(kernel, (hp // block_rows,), (block_rows, wp),
+                         (x2d, w2d), v, wp, interpret)
+
+
+def spatial_partials_pallas_3d(x3d, w3d, v, m: float, alpha: float,
+                               interpret: bool = False):
+    """x3d/w3d (D, Hp, Wp) padded volume + validity, v (c,) -> 6-neighbor
+    FCM_S partials (num (c,), den (c,)). One depth slice per grid step;
+    Wp must divide by 128."""
+    d, hp, wp = x3d.shape
+    assert wp % LANES == 0, x3d.shape
+    kernel = partial(_spatial3d_kernel, m=m, alpha=alpha)
+    return _call_spatial(kernel, (d,), (1, hp, wp), (x3d, w3d), v, wp,
+                         interpret)

@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from . import fcm_centers as KC
 from . import fcm_membership as KM
+from . import fcm_spatial as KS
 
 LANES = KM.LANES
 
@@ -32,6 +33,23 @@ def _tile(x: jax.Array, block_rows: int):
                          jnp.zeros((n_pad,), jnp.float32)])
     m_rows = (n + n_pad) // LANES
     return xp.reshape(m_rows, LANES), w.reshape(m_rows, LANES), n
+
+
+def tile_grid(img: jax.Array, block_rows: int = 64):
+    """Shape-preserving analogue of :func:`_tile` for stencil kernels:
+    pads a 2-D image to (Hp % block_rows == 0, Wp % 128 == 0) or a 3-D
+    volume to (D, Hp % 8 == 0, Wp % 128 == 0) and returns the padded
+    pixels plus matching validity weights (0 on padding)."""
+    img = jnp.asarray(img, jnp.float32)
+    if img.ndim == 2:
+        h, w = img.shape
+        pad = ((0, (-h) % block_rows), (0, (-w) % LANES))
+    elif img.ndim == 3:
+        _, h, w = img.shape
+        pad = ((0, 0), (0, (-h) % 8), (0, (-w) % LANES))
+    else:
+        raise ValueError(f"tile_grid needs rank 2 or 3, got {img.shape}")
+    return jnp.pad(img, pad), jnp.pad(jnp.ones(img.shape, jnp.float32), pad)
 
 
 @partial(jax.jit, static_argnames=("m", "block_rows", "interpret"))
@@ -92,3 +110,39 @@ def fused_partials(x2d, w2d, v, m: float = 2.0, block_rows: int = 64,
     if interpret is None:
         interpret = _interpret_default()
     return KC.fused_partials_pallas(x2d, w2d, v, m, block_rows, interpret)
+
+
+def spatial_partials(xpad, wpad, v, m: float = 2.0, alpha: float = 1.0,
+                     neighbors: int = 4, block_rows: int = 64,
+                     interpret=None):
+    """Raw pre-tiled FCM_S partials (Eq. 3' numerator/denominator) from
+    the fused stencil kernel; inputs from :func:`tile_grid`. 3-D volumes
+    always use the 6-connected stencil."""
+    if interpret is None:
+        interpret = _interpret_default()
+    if xpad.ndim == 2:
+        return KS.spatial_partials_pallas_2d(xpad, wpad, v, m, alpha,
+                                             neighbors, block_rows, interpret)
+    if neighbors != 6:
+        raise ValueError(f"3-D neighborhoods are 6-connected, "
+                         f"got {neighbors}")
+    return KS.spatial_partials_pallas_3d(xpad, wpad, v, m, alpha, interpret)
+
+
+@partial(jax.jit, static_argnames=("m", "alpha", "neighbors", "block_rows",
+                                   "interpret"))
+def _spatial_step_impl(img, v, m, alpha, neighbors, block_rows, interpret):
+    xpad, wpad = tile_grid(img, block_rows)
+    num, den = spatial_partials(xpad, wpad, v, m, alpha, neighbors,
+                                block_rows, interpret)
+    return num / jnp.maximum((1.0 + alpha) * den, 1e-12)
+
+
+def spatial_step(img, v, m: float = 2.0, alpha: float = 1.0,
+                 neighbors: int = 4, block_rows: int = 64, interpret=None):
+    """One fused FCM_S v -> v' iteration over a 2-D image or 3-D volume
+    (stencil average + membership + center reduction, single launch)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _spatial_step_impl(img, v, m, alpha, neighbors, block_rows,
+                              interpret)

@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core import batched as B
 from repro.core import fcm as F
+from repro.core import spatial as SP
 
 
 @dataclasses.dataclass
@@ -47,6 +48,7 @@ class SegmentationResult:
     centers: np.ndarray           # (c,)
     n_iters: int                  # 0 for cache hits
     cache_hit: bool
+    method: str = "histogram"
 
 
 @dataclasses.dataclass
@@ -56,6 +58,15 @@ class _Pending:
     flat: np.ndarray              # clipped int image, flattened
     hist: np.ndarray              # (n_bins,) float32
     key: bytes
+
+
+@dataclasses.dataclass
+class _PendingSpatial:
+    """A spatial request carries the full pixel payload: FCM_S needs the
+    pixel grid, so it can neither histogram-compress nor share the
+    histogram cache."""
+    request_id: int
+    pixels: np.ndarray            # original 2-D/3-D image, unreduced
 
 
 class FCMServeEngine:
@@ -71,10 +82,14 @@ class FCMServeEngine:
                  batch_sizes: Sequence[int] = (1, 8, 64),
                  n_bins: int = 256,
                  cache_size: int = 256,
-                 cache_tol: float = 0.15):
+                 cache_tol: float = 0.15,
+                 spatial_cfg: Optional[SP.SpatialFCMConfig] = None):
         if not batch_sizes or any(b <= 0 for b in batch_sizes):
             raise ValueError(f"bad batch_sizes {batch_sizes!r}")
         self.cfg = cfg
+        self.spatial_cfg = spatial_cfg or SP.SpatialFCMConfig(
+            n_clusters=cfg.n_clusters, m=cfg.m, eps=cfg.eps,
+            max_iters=cfg.max_iters)
         self.batch_sizes = tuple(sorted(set(int(b) for b in batch_sizes)))
         self.n_bins = n_bins
         self.cache_size = cache_size
@@ -85,25 +100,45 @@ class FCMServeEngine:
         self._cache: "collections.OrderedDict[bytes, Tuple[np.ndarray, np.ndarray]]" = \
             collections.OrderedDict()
         self._queue: List[_Pending] = []
+        self._spatial_queue: List[_PendingSpatial] = []
         self._next_id = 0
         self._stats = {
             "requests": 0, "cache_hits": 0, "batches": 0,
             "batched_images": 0, "padded_lanes": 0,
             "fit_seconds": 0.0, "fit_iters": 0,
+            "spatial_requests": 0, "spatial_seconds": 0.0,
+            "spatial_iters": 0,
         }
 
     # -- ingest ------------------------------------------------------------
 
-    def submit(self, img: np.ndarray) -> int:
+    def submit(self, img: np.ndarray, method: str = "histogram") -> int:
         """Queue one image; returns its request id. Cache hits are still
-        materialized at flush time (the defuzzify LUT needs the pixels)."""
+        materialized at flush time (the defuzzify LUT needs the pixels).
+
+        ``method="spatial"`` requests spatially-regularized FCM_S: the
+        request keeps its full pixel payload and bypasses the histogram
+        LRU cache entirely (FCM_S depends on pixel *positions*, which
+        two histogram-identical images need not share).
+        """
+        if method not in ("histogram", "spatial"):
+            raise ValueError(f"unknown method {method!r}")
         img = np.asarray(img)
-        flat = np.clip(img.reshape(-1).astype(np.int64), 0, self.n_bins - 1)
-        hist = np.bincount(flat, minlength=self.n_bins
-                           ).astype(np.float32)[:self.n_bins]
+        if method == "spatial" and img.ndim not in (2, 3):
+            # Reject at ingest: a bad request failing inside flush() would
+            # discard the whole drained batch's results.
+            raise ValueError(f"spatial requests need a (H, W) or (D, H, W) "
+                             f"pixel grid, got shape {img.shape}")
         rid = self._next_id
         self._next_id += 1
         self._stats["requests"] += 1
+        if method == "spatial":
+            self._stats["spatial_requests"] += 1
+            self._spatial_queue.append(_PendingSpatial(rid, img))
+            return rid
+        flat = np.clip(img.reshape(-1).astype(np.int64), 0, self.n_bins - 1)
+        hist = np.bincount(flat, minlength=self.n_bins
+                           ).astype(np.float32)[:self.n_bins]
         self._queue.append(_Pending(rid, img.shape, flat, hist,
                                     hist.tobytes()))
         return rid
@@ -152,10 +187,17 @@ class FCMServeEngine:
             self._stats["cache_hits"] += 1
             results[p.request_id] = self._materialize(
                 p, fitted[p.key], n_iters=0, cache_hit=True)
+        # 5. spatial requests: per-image FCM_S fits on full pixel grids,
+        # never consulting or populating the histogram cache.
+        spatial = self._spatial_queue
+        self._spatial_queue = []
+        for sp in spatial:
+            results[sp.request_id] = self._run_spatial(sp)
         return [results[rid] for rid in sorted(results)]
 
-    def segment(self, imgs: Sequence[np.ndarray]) -> List[SegmentationResult]:
-        ids = [self.submit(im) for im in imgs]
+    def segment(self, imgs: Sequence[np.ndarray],
+                method: str = "histogram") -> List[SegmentationResult]:
+        ids = [self.submit(im, method=method) for im in imgs]
         by_id = {r.request_id: r for r in self.flush()}
         return [by_id[i] for i in ids]
 
@@ -189,6 +231,15 @@ class FCMServeEngine:
             results[p.request_id] = self._materialize(
                 p, centers[lane], n_iters=int(res.n_iters[lane]),
                 cache_hit=False)
+
+    def _run_spatial(self, sp: _PendingSpatial) -> SegmentationResult:
+        t0 = time.perf_counter()
+        res = SP.fit_spatial(sp.pixels.astype(np.float32), self.spatial_cfg)
+        self._stats["spatial_seconds"] += time.perf_counter() - t0
+        self._stats["spatial_iters"] += res.n_iters
+        return SegmentationResult(sp.request_id, np.asarray(res.labels),
+                                  np.asarray(res.centers), res.n_iters,
+                                  cache_hit=False, method="spatial")
 
     def _materialize(self, p: _Pending, centers: np.ndarray,
                      n_iters: int, cache_hit: bool) -> SegmentationResult:
@@ -233,14 +284,17 @@ class FCMServeEngine:
 
     @property
     def queue_depth(self) -> int:
-        return len(self._queue)
+        return len(self._queue) + len(self._spatial_queue)
 
     def stats(self) -> Dict[str, float]:
         s = dict(self._stats)
         s["queue_depth"] = self.queue_depth
         s["cache_entries"] = len(self._cache)
-        s["cache_hit_rate"] = (s["cache_hits"] / s["requests"]
-                               if s["requests"] else 0.0)
+        # Hit rate over cacheable (histogram) traffic only — spatial
+        # requests bypass the cache by design and must not dilute it.
+        cacheable = s["requests"] - s["spatial_requests"]
+        s["cache_hit_rate"] = (s["cache_hits"] / cacheable
+                               if cacheable else 0.0)
         s["images_per_sec"] = (s["batched_images"] / s["fit_seconds"]
                                if s["fit_seconds"] > 0 else 0.0)
         return s

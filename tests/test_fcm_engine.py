@@ -5,6 +5,7 @@ import pytest
 
 from repro.core import fcm as F
 from repro.core import histogram as H
+from repro.core import spatial as S
 from repro.data import phantom
 from repro.serving.fcm_engine import FCMServeEngine
 
@@ -121,6 +122,83 @@ def test_lru_eviction():
     assert eng.stats()["cache_entries"] == 2
     assert eng.segment([imgs[0]])[0].cache_hit is False   # evicted
     assert eng.segment([imgs[2]])[0].cache_hit is True    # still resident
+
+
+def test_spatial_route_bypasses_histogram_cache():
+    """method="spatial" requests carry full pixel payloads around the
+    LRU cache; histogram requests in the same flush still hit it."""
+    eng = FCMServeEngine(CFG)
+    img, _ = phantom.noisy_phantom_slice(48, 48, noise=10.0, impulse=0.05,
+                                         seed=0)
+    first = eng.segment([img])[0]            # histogram fit, fills cache
+    assert first.method == "histogram"
+    hits0 = eng.stats()["cache_hits"]
+    entries0 = eng.stats()["cache_entries"]
+
+    # Mixed batch: one identical histogram request + one spatial request.
+    rid_h = eng.submit(img)
+    rid_s = eng.submit(img, method="spatial")
+    assert eng.queue_depth == 2
+    res = {r.request_id: r for r in eng.flush()}
+    assert eng.queue_depth == 0
+    assert res[rid_h].cache_hit and res[rid_h].method == "histogram"
+    sp = res[rid_s]
+    assert sp.method == "spatial"
+    assert not sp.cache_hit and sp.n_iters > 0
+    assert sp.labels.shape == img.shape
+
+    s = eng.stats()
+    assert s["cache_hits"] == hits0 + 1      # only the histogram request
+    assert s["cache_entries"] == entries0    # spatial never populated it
+    assert s["spatial_requests"] == 1
+    assert s["spatial_iters"] == sp.n_iters
+
+    # An identical spatial resubmission must run the fit again — pixel
+    # positions matter, histogram identity is not segmentation identity.
+    sp2 = eng.segment([img], method="spatial")[0]
+    assert not sp2.cache_hit and sp2.n_iters > 0
+    assert eng.stats()["cache_hits"] == hits0 + 1
+    np.testing.assert_allclose(sp2.centers, sp.centers, atol=1e-5)
+    assert (sp2.labels == sp.labels).all()
+
+
+def test_spatial_results_match_direct_fit_spatial():
+    eng = FCMServeEngine(CFG)
+    img, _ = phantom.noisy_phantom_slice(40, 56, noise=12.0, impulse=0.05,
+                                         seed=3)
+    served = eng.segment([img], method="spatial")[0]
+    direct = S.fit_spatial(img.astype(np.float32), eng.spatial_cfg)
+    np.testing.assert_allclose(served.centers, np.asarray(direct.centers),
+                               atol=1e-5)
+    assert (served.labels == np.asarray(direct.labels)).all()
+    assert served.n_iters == direct.n_iters
+
+
+def test_spatial_cache_hit_rate_counts_cacheable_traffic_only():
+    eng = FCMServeEngine(CFG)
+    img, _ = phantom.noisy_phantom_slice(32, 32, seed=1)
+    eng.segment([img])                       # miss, fills cache
+    eng.segment([img])                       # hit
+    eng.segment([img], method="spatial")     # must not dilute the rate
+    assert eng.stats()["cache_hit_rate"] == 0.5
+
+
+def test_unknown_method_rejected():
+    eng = FCMServeEngine(CFG)
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros((8, 8)), method="fuzzy")
+
+
+def test_bad_spatial_request_rejected_at_ingest():
+    """A rank-1 spatial payload must fail in submit(), not poison a
+    whole flush() after the queues have been drained."""
+    eng = FCMServeEngine(CFG)
+    img, _ = phantom.phantom_slice(32, 32, seed=0)
+    eng.submit(img)
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(64), method="spatial")
+    results = eng.flush()                    # the good request survives
+    assert len(results) == 1 and results[0].method == "histogram"
 
 
 def test_stats_shape():

@@ -1,0 +1,176 @@
+"""FCM_S (spatially-regularized FCM): Pallas stencil kernel parity
+against the pure-jnp reference, alpha=0 degeneration to plain FCM, and
+the noise-robustness regression the spatial term exists for."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import fcm as F
+from repro.core import spatial as S
+from repro.data import phantom
+from repro.kernels import ops
+
+# Shapes chosen so padding and borders are exercised: non-multiple-of-128
+# widths, a sub-tile image, a one-pixel image (no neighbors at all), and
+# widths spanning >1 lane group.
+SHAPES_2D = [(37, 53), (64, 128), (9, 300), (128, 181), (2, 2), (1, 1)]
+SHAPES_3D = [(5, 19, 41), (1, 8, 128), (2, 2, 2), (3, 16, 130)]
+
+
+def _data(shape, c=4, seed=0):
+    rng = np.random.default_rng(seed)
+    img = jnp.asarray(rng.integers(0, 256, shape).astype(np.float32))
+    v = jnp.asarray(np.sort(rng.uniform(5, 250, c)).astype(np.float32))
+    return img, v
+
+
+# -- kernel parity (interpret mode on CPU) ----------------------------------
+
+@pytest.mark.parametrize("shape", SHAPES_2D)
+@pytest.mark.parametrize("neighbors", [4, 8])
+def test_spatial_kernel_2d_matches_reference(shape, neighbors):
+    img, v = _data(shape)
+    want = S.spatial_center_step(img, v, 2.0, 0.7, neighbors)
+    got = ops.spatial_step(img, v, 2.0, 0.7, neighbors, block_rows=8,
+                           interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("shape", SHAPES_3D)
+def test_spatial_kernel_3d_matches_reference(shape, neighbors=6):
+    img, v = _data(shape, seed=1)
+    want = S.spatial_center_step(img, v, 2.0, 1.3, neighbors)
+    got = ops.spatial_step(img, v, 2.0, 1.3, neighbors, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("block_rows", [8, 16, 64])
+def test_spatial_kernel_block_shape_sweep(block_rows):
+    """Halo handling must be invariant to where the tile cuts fall."""
+    img, v = _data((100, 140), seed=2)
+    want = ops.spatial_step(img, v, 2.0, 1.0, 8, block_rows=8,
+                            interpret=True)
+    got = ops.spatial_step(img, v, 2.0, 1.0, 8, block_rows=block_rows,
+                           interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("m", [2.0, 1.6])
+@pytest.mark.parametrize("alpha", [0.0, 0.3, 2.5])
+def test_spatial_kernel_fuzz_alpha_sweep(m, alpha):
+    img, v = _data((45, 77), c=3, seed=3)
+    want = S.spatial_center_step(img, v, m, alpha, 4)
+    got = ops.spatial_step(img, v, m, alpha, 4, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_border_pixels_average_over_true_neighbors_only():
+    """A corner pixel has 2 (4-conn) / 3 (8-conn) neighbors; validity
+    weighting must not let zero padding leak into the stencil mean."""
+    img = jnp.asarray([[200.0, 0.0], [0.0, 0.0]])
+    v = jnp.asarray([0.0, 200.0])
+    d2, nb, xbar = S.neighbor_fields(img, v, 4)
+    # corner (0,0): neighbors are the two zeros -> mean d2 to center 200
+    # is 200^2, mean intensity 0.
+    assert float(nb[1, 0, 0]) == pytest.approx(200.0 ** 2)
+    assert float(xbar[0, 0]) == 0.0
+    # and the kernel agrees on the resulting center step
+    want = S.spatial_center_step(img, v, 2.0, 1.0, 4)
+    got = ops.spatial_step(img, v, 2.0, 1.0, 4, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+# -- alpha=0 degenerates to plain FCM ---------------------------------------
+
+@pytest.mark.parametrize("shape", [(96, 96), (4, 48, 48)])
+def test_alpha_zero_reproduces_fit_fused(shape):
+    rng = np.random.default_rng(5)
+    img = rng.integers(0, 256, shape).astype(np.float32)
+    res_sp = S.fit_spatial(img, S.SpatialFCMConfig(alpha=0.0))
+    res_fu = F.fit_fused(img.ravel(), F.FCMConfig())
+    np.testing.assert_allclose(np.asarray(res_sp.centers),
+                               np.asarray(res_fu.centers), atol=1e-5)
+    assert res_sp.n_iters == res_fu.n_iters
+    assert res_sp.labels.shape == shape
+    np.testing.assert_array_equal(
+        np.asarray(res_sp.labels).ravel(), np.asarray(res_fu.labels))
+
+
+def test_alpha_zero_pallas_path_reproduces_fit_fused():
+    img, _ = phantom.phantom_slice(64, 96, noise=5.0, seed=6)
+    img = img.astype(np.float32)
+    res_sp = S.fit_spatial(img, S.SpatialFCMConfig(alpha=0.0),
+                           use_pallas=True, interpret=True)
+    res_fu = F.fit_fused(img.ravel(), F.FCMConfig())
+    np.testing.assert_allclose(np.asarray(res_sp.centers),
+                               np.asarray(res_fu.centers), atol=1e-3)
+
+
+# -- full-fit parity: Pallas loop vs reference loop -------------------------
+
+@pytest.mark.parametrize("shape,neighbors", [((60, 75), 8), ((3, 24, 40), 6)])
+def test_fit_spatial_pallas_matches_reference(shape, neighbors):
+    rng = np.random.default_rng(7)
+    img = rng.integers(0, 256, shape).astype(np.float32)
+    cfg = S.SpatialFCMConfig(alpha=1.0, neighbors=neighbors, max_iters=40)
+    ref = S.fit_spatial(img, cfg)
+    pal = S.fit_spatial(img, cfg, use_pallas=True, block_rows=8,
+                        interpret=True)
+    np.testing.assert_allclose(np.asarray(pal.centers),
+                               np.asarray(ref.centers), atol=5e-3)
+    agree = np.mean(np.asarray(pal.labels) == np.asarray(ref.labels))
+    assert agree > 0.999
+
+
+# -- API validation ----------------------------------------------------------
+
+def test_bad_neighborhoods_rejected():
+    img = np.zeros((8, 8), np.float32)
+    with pytest.raises(ValueError):
+        S.fit_spatial(img, S.SpatialFCMConfig(neighbors=5))
+    with pytest.raises(ValueError):
+        S.neighbor_offsets(3, 4)
+    with pytest.raises(ValueError):
+        S.fit_spatial(np.zeros(64, np.float32))  # rank-1: no pixel grid
+    with pytest.raises(ValueError):              # kernel path agrees with
+        ops.spatial_step(np.zeros((2, 4, 4), np.float32), np.zeros(2),
+                         neighbors=8, interpret=True)  # ... the reference
+
+
+def test_spatial_membership_shape_and_partition():
+    img, v = _data((31, 47))
+    u = S.spatial_membership(img, v, 2.0, 1.0, 8)
+    assert u.shape == (4, 31, 47)
+    np.testing.assert_allclose(np.asarray(jnp.sum(u, axis=0)), 1.0,
+                               atol=1e-4)
+
+
+# -- the point of it all: noise robustness (slow) ---------------------------
+
+@pytest.mark.slow
+def test_spatial_beats_plain_fcm_on_salt_and_pepper():
+    """On the heaviest noise level, FCM_S must beat plain FCM's DSC by a
+    wide margin on every tissue class (plain FCM's clusters get hijacked
+    by the 0/255 impulse modes)."""
+    sigma, impulse = phantom.NOISE_LEVELS[-1]
+    img, gt = phantom.noisy_phantom_slice(128, 128, noise=sigma,
+                                          impulse=impulse, seed=0)
+    x = img.ravel().astype(np.float32)
+    rp = F.fit_fused(x, F.FCMConfig())
+    plain = phantom.match_labels_to_classes(
+        np.asarray(rp.labels).reshape(img.shape), rp.centers)
+    rs = S.fit_spatial(img.astype(np.float32),
+                       S.SpatialFCMConfig(alpha=1.0, neighbors=8))
+    spatial = phantom.match_labels_to_classes(np.asarray(rs.labels),
+                                              rs.centers)
+    dsc_p = phantom.dice_per_class(plain, gt)
+    dsc_s = phantom.dice_per_class(spatial, gt)
+    for cls in (1, 2, 3):                      # CSF, GM, WM
+        assert dsc_s[cls] >= dsc_p[cls] + 0.2, (
+            phantom.CLASS_NAMES[cls], dsc_p[cls], dsc_s[cls])
+        assert dsc_s[cls] > 0.75, (phantom.CLASS_NAMES[cls], dsc_s[cls])

@@ -9,6 +9,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import fcm as F
 from repro.core import histogram as H
+from repro.core import spatial as S
 from repro.training import grad_compress as gc
 
 _settings = dict(max_examples=25, deadline=None)
@@ -61,6 +62,47 @@ def test_int8_roundtrip_error_bound(rows, cols, seed, scale):
     q, s = gc.quantize_int8(x)
     back = gc.dequantize_int8(q, s)
     assert float(jnp.max(jnp.abs(back - x))) <= float(s) * 0.5 + 1e-9
+
+
+@given(st.integers(2, 5), st.integers(2, 24), st.integers(2, 24),
+       st.floats(0.0, 8.0), st.sampled_from([4, 8]),
+       st.integers(0, 10 ** 6))
+@settings(**_settings)
+def test_spatial_membership_always_a_partition(c, h, w, alpha, neighbors,
+                                               seed):
+    """FCM_S memberships stay column-stochastic and in [0, 1] for any
+    alpha / neighborhood arity / image."""
+    rng = np.random.default_rng(seed)
+    img = jnp.asarray(rng.uniform(0, 255, (h, w)), jnp.float32)
+    v = jnp.asarray(np.sort(rng.uniform(0, 255, c)), jnp.float32)
+    u = S.spatial_membership(img, v, 2.0, alpha, neighbors)
+    assert u.shape == (c, h, w)
+    np.testing.assert_allclose(np.asarray(jnp.sum(u, axis=0)), 1.0,
+                               atol=1e-4)
+    assert float(jnp.min(u)) >= 0.0
+    assert float(jnp.max(u)) <= 1.0 + 1e-6
+
+
+@given(st.integers(4, 20), st.integers(4, 20), st.sampled_from([4, 8]),
+       st.sampled_from([0, 1]), st.integers(0, 10 ** 6))
+@settings(**_settings)
+def test_fit_spatial_flip_equivariant(h, w, neighbors, axis, seed):
+    """The stencils are mirror-symmetric, so flipping the image must
+    flip the solution: same centers, mirrored memberships. Fixed
+    iteration count (tiny eps) keeps both trajectories in lockstep."""
+    rng = np.random.default_rng(seed)
+    img = rng.integers(0, 256, (h, w)).astype(np.float32)
+    cfg = S.SpatialFCMConfig(alpha=1.5, neighbors=neighbors,
+                             eps=1e-12, max_iters=5)
+    a = S.fit_spatial(img, cfg, keep_membership=True)
+    b = S.fit_spatial(np.flip(img, axis=axis).copy(), cfg,
+                      keep_membership=True)
+    np.testing.assert_allclose(np.asarray(a.centers), np.asarray(b.centers),
+                               rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(a.membership),
+                               np.flip(np.asarray(b.membership),
+                                       axis=axis + 1),
+                               rtol=1e-3, atol=1e-3)
 
 
 @given(st.integers(2, 4), st.integers(64, 256), st.integers(0, 10 ** 6))
