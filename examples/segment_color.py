@@ -1,0 +1,76 @@
+"""Color & multi-channel demo: superpixel-compressed FCM.
+
+Segments an RGB phantom and a three-channel (T1/T2/PD-like) stack —
+workloads the scalar histogram path cannot touch — through the serving
+engine's ``method="superpixel"`` route (SLIC compression on ingest,
+weighted vector FCM over ~K superpixel rows) and the uncompressed
+``method="pixel"`` reference, then reports per-tissue DSC and the
+N -> K compression ratio. Outputs land in the gitignored
+``examples/out/``.
+
+  PYTHONPATH=src python examples/segment_color.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs.fcm_brainweb import make_config
+from repro.data import phantom
+from repro.serving.fcm_engine import FCMServeEngine
+
+SIZE = 128
+
+
+def write_ppm(path, img):
+    img = np.asarray(img, np.uint8)
+    with open(path, "wb") as f:
+        f.write(b"P6\n%d %d\n255\n" % (img.shape[1], img.shape[0]))
+        f.write(img.tobytes())
+
+
+def main():
+    out_dir = os.path.join(os.path.dirname(__file__), "out")
+    os.makedirs(out_dir, exist_ok=True)
+    job = make_config()
+    eng = FCMServeEngine(job.fcm, superpixel_cfg=job.superpixel)
+
+    workloads = [
+        ("rgb", phantom.CLASS_MEANS_RGB,
+         *phantom.phantom_slice_rgb(SIZE, SIZE, noise=6.0, seed=7)),
+        ("t1t2pd", phantom.CLASS_MEANS_MULTI,
+         *phantom.phantom_slice_channels(SIZE, SIZE, noise=6.0, seed=7)),
+    ]
+    for name, class_means, img, gt in workloads:
+        n = img.shape[0] * img.shape[1]
+        r_sp = eng.segment([img], method="superpixel")[0]
+        r_px = eng.segment([img], method="pixel")[0]
+        k = int(np.asarray(eng.superpixel_cfg.n_segments))
+        print(f"{name}: {img.shape} -> ~{k} superpixels "
+              f"({n / k:.0f}x compression)")
+        for tag, res in [("superpixel", r_sp), ("pixel", r_px)]:
+            pred = phantom.match_labels_to_means(res.labels, res.centers,
+                                                 class_means)
+            dscs = phantom.dice_per_class(pred, gt)
+            print(f"  {tag:10s} ({res.n_iters:3d} iters) DSC:",
+                  {c: round(d, 3) for c, d in zip(phantom.CLASS_NAMES,
+                                                  dscs)})
+            if name == "rgb":
+                colors = phantom.CLASS_MEANS_RGB.astype(np.uint8)
+                write_ppm(os.path.join(out_dir, f"color_{tag}.ppm"),
+                          colors[pred])
+        if name == "rgb":
+            write_ppm(os.path.join(out_dir, "color_input.ppm"), img)
+
+    s = eng.stats()
+    print("route mix:", s["method_requests"],
+          f"| compress {s['compress_seconds'] * 1e3:.0f} ms, "
+          f"superpixel fit {s['superpixel_seconds'] * 1e3:.0f} ms, "
+          f"pixel fit {s['pixel_seconds'] * 1e3:.0f} ms")
+    print(f"wrote {out_dir}/color_input.ppm and color_*.ppm")
+
+
+if __name__ == "__main__":
+    main()

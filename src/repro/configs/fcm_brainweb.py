@@ -7,6 +7,7 @@ import dataclasses
 
 from repro.core.fcm import FCMConfig
 from repro.core.spatial import SpatialFCMConfig  # noqa: F401  (re-export)
+from repro.superpixel.pipeline import SuperpixelFCMConfig  # noqa: F401
 from repro.data.phantom import NOISE_LEVELS
 
 
@@ -19,6 +20,12 @@ class FCMJobConfig:
     spatial: SpatialFCMConfig = SpatialFCMConfig(
         n_clusters=4, m=2.0, eps=5e-3, max_iters=300,
         alpha=1.0, neighbors=8)
+    # Superpixel compression for color / multi-modal stacks: ~256
+    # superpixels replace N pixels in the fit (the vector analogue of
+    # the 256-bin histogram); compactness 10 suits 0..255 features.
+    superpixel: SuperpixelFCMConfig = SuperpixelFCMConfig(
+        n_clusters=4, m=2.0, eps=5e-3, max_iters=300,
+        n_segments=256, compactness=10.0, slic_iters=10)
     # (gaussian sigma, impulse fraction) noise sweep for robustness evals
     noise_levels = NOISE_LEVELS
     # paper Table 3 dataset sizes (bytes)

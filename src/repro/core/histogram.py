@@ -23,10 +23,44 @@ from . import fcm as F
 
 
 @partial(jax.jit, static_argnames=("n_bins",))
-def intensity_histogram(x: jax.Array, n_bins: int = 256) -> jax.Array:
-    """Counts per integer intensity; x is float-valued but integral."""
+def _histogram_impl(x: jax.Array, n_bins: int) -> jax.Array:
     idx = jnp.clip(x.astype(jnp.int32), 0, n_bins - 1)
     return jnp.zeros((n_bins,), jnp.float32).at[idx].add(1.0)
+
+
+def intensity_histogram(x: jax.Array, n_bins: int = 256,
+                        clip: bool = False) -> jax.Array:
+    """Counts per integer intensity; x is float-valued but integral.
+
+    The binning *clamps* to [0, n_bins): without validation, a
+    normalized float image in [0, 1] silently piles every pixel into
+    bins 0/1 and the downstream fit segments garbage. Unless
+    ``clip=True`` (the documented I-really-mean-it escape hatch that
+    restores the old clamp-silently behavior), concrete inputs are
+    validated eagerly and out-of-range or normalized-looking data
+    raises ``ValueError``. Traced inputs (inside jit/vmap) skip the
+    check — values are unknowable there.
+    """
+    if not clip and not isinstance(x, jax.core.Tracer):
+        lo = float(jnp.min(x))
+        hi = float(jnp.max(x))
+        if lo < 0.0 or hi > n_bins - 1:
+            raise ValueError(
+                f"intensity_histogram: values in [{lo:g}, {hi:g}] fall "
+                f"outside the bin range [0, {n_bins - 1}]; rescale the "
+                f"image or pass clip=True to clamp deliberately")
+        if (n_bins > 2 and 0.0 < hi <= 1.0
+                and jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+                and bool(jnp.any(x != jnp.round(x)))):
+            # integral float data in {0, 1} (e.g. a binary mask cast to
+            # float) is legitimate 8-bit-range input; only *fractional*
+            # values betray a normalized image
+            raise ValueError(
+                f"intensity_histogram: float values span [{lo:g}, {hi:g}] "
+                f"— this looks like a [0, 1]-normalized image, which "
+                f"would collapse into bins 0/1 of {n_bins}; multiply by "
+                f"{n_bins - 1} first or pass clip=True to bin as-is")
+    return _histogram_impl(x, n_bins)
 
 
 def weighted_membership(vals: jax.Array, v: jax.Array, m: float) -> jax.Array:

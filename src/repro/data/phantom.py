@@ -18,6 +18,23 @@ N_CLASSES = 4
 CLASS_NAMES = ("background", "CSF", "GM", "WM")
 # Mean intensities roughly matching a T1 BrainWeb slice.
 CLASS_MEANS = np.array([0.0, 52.0, 106.0, 168.0])
+# Per-class (T1, T2, PD)-like channel means for the multi-modal phantom:
+# CSF is dark on T1 but bright on T2/PD, WM the other way around — the
+# contrast inversion that makes multi-channel clustering genuinely
+# multi-dimensional (no single channel separates all four classes).
+CLASS_MEANS_MULTI = np.array([
+    [0.0, 0.0, 0.0],          # background
+    [52.0, 230.0, 190.0],     # CSF
+    [106.0, 120.0, 150.0],    # GM
+    [168.0, 70.0, 110.0],     # WM
+])
+# A colorized-atlas-style RGB rendering of the same anatomy.
+CLASS_MEANS_RGB = np.array([
+    [0.0, 0.0, 0.0],          # background: black
+    [50.0, 80.0, 200.0],      # CSF: blue
+    [110.0, 200.0, 110.0],    # GM: green
+    [230.0, 170.0, 60.0],     # WM: amber
+])
 
 
 def _ellipse(h, w, cy, cx, ry, rx, yy=None, xx=None):
@@ -26,15 +43,13 @@ def _ellipse(h, w, cy, cx, ry, rx, yy=None, xx=None):
     return ((yy - cy) / ry) ** 2 + ((xx - cx) / rx) ** 2 <= 1.0
 
 
-def phantom_slice(height: int = 217, width: int = 181,
-                  slice_pos: float = 0.5, noise: float = 4.0,
-                  seed: int = 0):
-    """Returns (image uint8 (H, W), labels int32 (H, W)).
+def phantom_labels(height: int, width: int, slice_pos: float = 0.5):
+    """The noise-free anatomy: int32 (H, W) class labels shared by every
+    phantom flavor (grayscale, RGB, multi-modal).
 
     ``slice_pos`` in [0, 1] scales the anatomy like moving through axial
     slices (the paper shows the 91st/96th/101st/111th slices).
     """
-    rng = np.random.default_rng(seed)
     h, w = height, width
     yy, xx = np.mgrid[0:h, 0:w]
     cy, cx = h / 2.0, w / 2.0
@@ -60,13 +75,54 @@ def phantom_slice(height: int = 217, width: int = 181,
             | _ellipse(h, w, cy - 0.02 * h, cx + 0.08 * w, 0.09 * h * scale,
                        0.035 * w * scale, yy, xx))
     labels[vent] = 1
+    return labels
 
+
+def phantom_slice(height: int = 217, width: int = 181,
+                  slice_pos: float = 0.5, noise: float = 4.0,
+                  seed: int = 0):
+    """Returns (image uint8 (H, W), labels int32 (H, W))."""
+    rng = np.random.default_rng(seed)
+    h, w = height, width
+    labels = phantom_labels(h, w, slice_pos)
     img = CLASS_MEANS[labels] + rng.normal(0.0, noise, size=(h, w))
     img = np.clip(img, 0, 255)
     # background stays exactly 0 outside the head (skull-stripped)
     img[labels == 0] = np.clip(
         rng.normal(0.0, noise * 0.25, size=(h, w)), 0, 255)[labels == 0]
     return img.astype(np.uint8), labels
+
+
+def phantom_slice_channels(height: int = 217, width: int = 181,
+                           slice_pos: float = 0.5, noise: float = 4.0,
+                           seed: int = 0,
+                           class_means: np.ndarray = CLASS_MEANS_MULTI):
+    """Multi-channel phantom: (image uint8 (H, W, D), labels (H, W)).
+
+    ``class_means`` is a (n_classes, D) table of per-class channel means
+    (:data:`CLASS_MEANS_MULTI` for T1/T2/PD-like stacks,
+    :data:`CLASS_MEANS_RGB` for the colorized rendering). Noise is
+    i.i.d. per channel; background gets the same reduced-noise
+    skull-stripped treatment as the grayscale phantom.
+    """
+    rng = np.random.default_rng(seed)
+    h, w = height, width
+    means = np.asarray(class_means, np.float64)
+    d = means.shape[1]
+    labels = phantom_labels(h, w, slice_pos)
+    img = means[labels] + rng.normal(0.0, noise, size=(h, w, d))
+    img = np.clip(img, 0, 255)
+    bg = np.clip(rng.normal(0.0, noise * 0.25, size=(h, w, d)), 0, 255)
+    img[labels == 0] = bg[labels == 0]
+    return img.astype(np.uint8), labels
+
+
+def phantom_slice_rgb(height: int = 217, width: int = 181,
+                      slice_pos: float = 0.5, noise: float = 4.0,
+                      seed: int = 0):
+    """RGB phantom: (image uint8 (H, W, 3), labels (H, W))."""
+    return phantom_slice_channels(height, width, slice_pos, noise, seed,
+                                  class_means=CLASS_MEANS_RGB)
 
 
 def add_impulse_noise(img: np.ndarray, frac: float = 0.05, seed: int = 0,
@@ -150,4 +206,21 @@ def match_labels_to_classes(labels, centers):
     order = np.argsort(np.asarray(centers).ravel())
     remap = np.empty_like(order)
     remap[order] = np.arange(len(order))
+    return remap[np.asarray(labels)]
+
+
+def match_labels_to_means(labels, centers, class_means):
+    """Vector-feature analogue of :func:`match_labels_to_classes`: map
+    each cluster to the class whose (D,)-mean row is nearest to the
+    cluster's (D,) center. Intensity *rank* is meaningless for
+    multi-modal contrast (CSF is dark on T1 but bright on T2), so the
+    scalar matcher mis-ranks those; nearest-mean matching is
+    contrast-agnostic. Non-injective maps are allowed (a degenerate fit
+    may merge classes — DSC then punishes it)."""
+    centers = np.asarray(centers, np.float64)
+    if centers.ndim == 1:                    # scalar centers: (c,) -> (c, 1)
+        centers = centers[:, None]
+    means = np.asarray(class_means, np.float64)
+    d2 = ((centers[:, None, :] - means[None, :, :]) ** 2).sum(-1)
+    remap = np.argmin(d2, axis=1).astype(np.int64)
     return remap[np.asarray(labels)]

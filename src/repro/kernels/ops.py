@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from . import fcm_centers as KC
 from . import fcm_membership as KM
 from . import fcm_spatial as KS
+from . import slic_assign as KSL
 
 LANES = KM.LANES
 
@@ -50,6 +51,42 @@ def tile_grid(img: jax.Array, block_rows: int = 64):
     else:
         raise ValueError(f"tile_grid needs rank 2 or 3, got {img.shape}")
     return jnp.pad(img, pad), jnp.pad(jnp.ones(img.shape, jnp.float32), pad)
+
+
+def tile_channels(img: jax.Array, block_rows: int = 8):
+    """Channel-major analogue of :func:`tile_grid` for the SLIC kernel:
+    an (H, W, D) image (or (H, W) grayscale) becomes (D, Hp, Wp) planes
+    with Hp % block_rows == 0 and Wp % 128 == 0, plus a single (Hp, Wp)
+    validity sheet (0 on padding) shared by every channel."""
+    img = jnp.asarray(img, jnp.float32)
+    if img.ndim == 2:
+        img = img[:, :, None]
+    if img.ndim != 3:
+        raise ValueError(f"tile_channels needs (H, W[, D]), got {img.shape}")
+    h, w, _ = img.shape
+    pad = ((0, (-h) % block_rows), (0, (-w) % LANES), (0, 0))
+    xpad = jnp.moveaxis(jnp.pad(img, pad), -1, 0)
+    wpad = jnp.pad(jnp.ones((h, w), jnp.float32), pad[:2])
+    return xpad, wpad
+
+
+@partial(jax.jit, static_argnames=("h", "w", "gy", "gx", "sw", "block_rows",
+                                   "interpret"))
+def _slic_assign_impl(xpad, centers, h, w, gy, gx, sw, block_rows,
+                      interpret):
+    return KSL.slic_assign_pallas(xpad, centers, gy, gx, h / gy, w / gx,
+                                  sw, block_rows, interpret)
+
+
+def slic_assign(xpad, centers, h: int, w: int, gy: int, gx: int, sw: float,
+                block_rows: int = 8, interpret=None) -> jax.Array:
+    """SLIC assignment via Pallas: pre-tiled (D, Hp, Wp) planes from
+    :func:`tile_channels` + (K, D+2) centers -> (Hp, Wp) int32 labels.
+    ``h``/``w`` are the *unpadded* dims (they set the cell intervals)."""
+    if interpret is None:
+        interpret = _interpret_default()
+    return _slic_assign_impl(xpad, centers, h, w, gy, gx, sw, block_rows,
+                             interpret)
 
 
 @partial(jax.jit, static_argnames=("m", "block_rows", "interpret"))

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel for the SLIC assignment step.
+
+The assignment is where SLIC spends its time — every pixel, every
+iteration, evaluates a joint color+spatial distance against its 3x3
+neighborhood of grid centers. Here each grid step loads one
+``(block_rows, Wp)`` row block of every channel plane plus the *entire*
+center grid into VMEM (K superpixel centers are a few KB — far smaller
+than a pixel tile), computes the distances to all K centers with the
+channel/spatial terms accumulated in the reference's order, masks
+centers outside the pixel's 3x3 grid-cell neighborhood to +inf, and
+writes the per-pixel argmin label tile.
+
+Masking instead of gathering keeps the kernel gather-free: a pixel's
+candidate set is exactly {k : |cell(k) - cell(pixel)| <= 1 per axis},
+which is a pure iota/compare predicate on the (Kp, R, Wp) distance
+block. ``jnp.argmin`` ties resolve to the lowest center index, matching
+the reference's running-min candidate order.
+
+VMEM envelope: the distance block is Kp * block_rows * Wp floats (Kp is
+K rounded up to 128 lanes) — ~4 MB for K=256, block_rows=8, Wp=512.
+Larger center grids need smaller ``block_rows``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+_BIG = 3.4e38
+
+
+def auto_block_rows(k: int, width: int,
+                    budget_bytes: int = 4 * 1024 * 1024) -> int:
+    """Pick block_rows so the (Kp, block_rows, Wp) distance block stays
+    within ``budget_bytes`` of VMEM: wide images or large center grids
+    get shallower row blocks (down to 1) instead of overflowing, small
+    ones get deeper blocks (up to 64, multiples of 8 for sublane
+    alignment)."""
+    kp = k + (-k) % LANES
+    wp = width + (-width) % LANES
+    rows = budget_bytes // (kp * wp * 4)
+    if rows >= 8:
+        return min(rows - rows % 8, 64)
+    return max(int(rows), 1)
+
+
+def _slic_assign_kernel(x_ref, cf_ref, cyx_ref, lab_ref, *, n_channels,
+                        k, gy, gx, inv_sy, inv_sx, sw, block_rows):
+    i = pl.program_id(0)
+    xs = x_ref[...].astype(jnp.float32)             # (D, R, Wp)
+    cf = cf_ref[...].astype(jnp.float32)            # (D, Kp)
+    cyx = cyx_ref[...].astype(jnp.float32)          # (2, Kp)
+    r, wp = xs.shape[1], xs.shape[2]
+    kp = cf.shape[1]
+    # Global pixel coordinates of this row block.
+    y = (i * block_rows
+         + jax.lax.broadcasted_iota(jnp.float32, (r, wp), 0))
+    x = jax.lax.broadcasted_iota(jnp.float32, (r, wp), 1)
+    # Pixel and center grid-cell coords (reciprocal-multiply, bitwise
+    # identical to assign_ref's).
+    pcy = jnp.clip((y * inv_sy).astype(jnp.int32), 0, gy - 1)
+    pcx = jnp.clip((x * inv_sx).astype(jnp.int32), 0, gx - 1)
+    kk = jax.lax.broadcasted_iota(jnp.int32, (kp, 1, 1), 0)
+    kgy = kk // gx
+    kgx = kk - kgy * gx
+    # Joint distances to every center, channel terms first (same
+    # accumulation order as assign_ref), then the weighted spatial terms.
+    d2 = jnp.zeros((kp, r, wp), jnp.float32)
+    for ch in range(n_channels):
+        d2 = d2 + (xs[ch][None] - cf[ch][:, None, None]) ** 2
+    d2 = d2 + sw * (y[None] - cyx[0][:, None, None]) ** 2
+    d2 = d2 + sw * (x[None] - cyx[1][:, None, None]) ** 2
+    # 3x3 grid-cell candidate mask (+ lane padding beyond K).
+    valid = (jnp.abs(kgy - pcy[None]) <= 1) \
+        & (jnp.abs(kgx - pcx[None]) <= 1) & (kk < k)
+    d2 = jnp.where(valid, d2, _BIG)
+    lab_ref[...] = jnp.argmin(d2, axis=0).astype(jnp.int32)
+
+
+def slic_assign_pallas(xp: jax.Array, centers: jax.Array, gy: int, gx: int,
+                       sy: float, sx: float, sw: float,
+                       block_rows: int = 8,
+                       interpret: bool = False) -> jax.Array:
+    """xp (D, Hp, Wp) padded channel planes, centers (K, D+2) rows
+    [features..., y, x] -> labels (Hp, Wp) int32. Hp must divide by
+    block_rows and Wp by 128 (``ops.tile_channels`` pads); padded pixels
+    get well-formed labels which the caller's validity weights drop."""
+    d, hp, wp = xp.shape
+    assert hp % block_rows == 0 and wp % LANES == 0, (xp.shape, block_rows)
+    k = centers.shape[0]
+    assert k == gy * gx and centers.shape[1] == d + 2, (centers.shape, gy, gx)
+    kpad = (-k) % LANES
+    cpad = jnp.concatenate(
+        [centers.astype(jnp.float32),
+         jnp.zeros((kpad, d + 2), jnp.float32)])     # masked via kk < k
+    cf = cpad[:, :d].T                               # (D, Kp)
+    cyx = cpad[:, d:].T                              # (2, Kp)
+    kp = k + kpad
+    kernel = partial(_slic_assign_kernel, n_channels=d, k=k, gy=gy, gx=gx,
+                     inv_sy=float(1.0 / sy), inv_sx=float(1.0 / sx),
+                     sw=float(sw), block_rows=block_rows)
+    return pl.pallas_call(
+        kernel,
+        grid=(hp // block_rows,),
+        in_specs=[
+            pl.BlockSpec((d, block_rows, wp), lambda i: (0, i, 0)),
+            pl.BlockSpec((d, kp), lambda i: (0, 0)),
+            pl.BlockSpec((2, kp), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, wp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((hp, wp), jnp.int32),
+        interpret=interpret,
+    )(xp, cf, cyx)

@@ -19,10 +19,18 @@ call. Two batching tricks keep XLA recompilation at zero:
   L1 ~ 0.1 while genuinely different content sits at ~0.5, so the
   default tolerance of 0.15 separates them with wide margin.
 
-Results are hard labels per request (same shape as the input image) plus
-the fitted centers; :meth:`FCMServeEngine.stats` exposes queue /
-throughput / cache-hit counters for the ops dashboards every traffic-
-scaling PR after this one will need.
+Beyond the histogram fast path the engine routes three more methods:
+``pixel`` (uncompressed per-image fused FCM — the reference), ``spatial``
+(FCM_S on the full grid, cache-bypassing), and ``superpixel`` (SLIC
+compression on ingest to a (K, D) weighted payload, batched at fixed K
+buckets through :func:`repro.core.vector_fcm.fit_vector_batched` — the
+color/multi-channel analogue of the histogram trick, also
+cache-bypassing since vector features have no 256-bin key).
+
+Results are hard labels per request (same spatial shape as the input
+image) plus the fitted centers; :meth:`FCMServeEngine.stats` exposes
+queue / throughput / per-route request and cache-hit counters for the
+ops dashboards every traffic-scaling PR after this one will need.
 """
 from __future__ import annotations
 
@@ -38,14 +46,19 @@ import numpy as np
 from repro.core import batched as B
 from repro.core import fcm as F
 from repro.core import spatial as SP
+from repro.core import vector_fcm as VF
+from repro.superpixel import pipeline as SX
+
+#: The serving routes, in the order of the README routing table.
+METHODS = ("histogram", "pixel", "spatial", "superpixel")
 
 
 @dataclasses.dataclass
 class SegmentationResult:
     """Per-request output."""
     request_id: int
-    labels: np.ndarray            # same shape as the submitted image
-    centers: np.ndarray           # (c,)
+    labels: np.ndarray            # same spatial shape as the submitted image
+    centers: np.ndarray           # (c,) scalar or (c, D) vector features
     n_iters: int                  # 0 for cache hits
     cache_hit: bool
     method: str = "histogram"
@@ -69,6 +82,29 @@ class _PendingSpatial:
     pixels: np.ndarray            # original 2-D/3-D image, unreduced
 
 
+@dataclasses.dataclass
+class _PendingPixels:
+    """A pixel request: uncompressed per-image fused FCM — the reference
+    route every compression is measured against. (H, W, D) payloads
+    cluster in D-dim feature space."""
+    request_id: int
+    pixels: np.ndarray
+
+
+@dataclasses.dataclass
+class _PendingSuperpixel:
+    """A superpixel request after ingest-time SLIC compression: like the
+    histogram route it carries only the reduced payload to the fit, but
+    like the spatial route it bypasses the 1-D histogram LRU (vector
+    features have no 256-bin key, and the compression already amortizes
+    most of the fit cost). ``k`` = features.shape[0] buckets the batch."""
+    request_id: int
+    features: np.ndarray          # (K, D) superpixel mean features
+    weights: np.ndarray           # (K,) pixel counts
+    label_map: np.ndarray         # (H, W) int32 pixel -> superpixel
+    slic_iters: int
+
+
 class FCMServeEngine:
     """Static-bucket batching engine for FCM segmentation requests.
 
@@ -83,11 +119,15 @@ class FCMServeEngine:
                  n_bins: int = 256,
                  cache_size: int = 256,
                  cache_tol: float = 0.15,
-                 spatial_cfg: Optional[SP.SpatialFCMConfig] = None):
+                 spatial_cfg: Optional[SP.SpatialFCMConfig] = None,
+                 superpixel_cfg: Optional[SX.SuperpixelFCMConfig] = None):
         if not batch_sizes or any(b <= 0 for b in batch_sizes):
             raise ValueError(f"bad batch_sizes {batch_sizes!r}")
         self.cfg = cfg
         self.spatial_cfg = spatial_cfg or SP.SpatialFCMConfig(
+            n_clusters=cfg.n_clusters, m=cfg.m, eps=cfg.eps,
+            max_iters=cfg.max_iters)
+        self.superpixel_cfg = superpixel_cfg or SX.SuperpixelFCMConfig(
             n_clusters=cfg.n_clusters, m=cfg.m, eps=cfg.eps,
             max_iters=cfg.max_iters)
         self.batch_sizes = tuple(sorted(set(int(b) for b in batch_sizes)))
@@ -101,6 +141,8 @@ class FCMServeEngine:
             collections.OrderedDict()
         self._queue: List[_Pending] = []
         self._spatial_queue: List[_PendingSpatial] = []
+        self._pixel_queue: List[_PendingPixels] = []
+        self._superpixel_queue: List[_PendingSuperpixel] = []
         self._next_id = 0
         self._stats = {
             "requests": 0, "cache_hits": 0, "batches": 0,
@@ -108,7 +150,15 @@ class FCMServeEngine:
             "fit_seconds": 0.0, "fit_iters": 0,
             "spatial_requests": 0, "spatial_seconds": 0.0,
             "spatial_iters": 0,
+            "pixel_seconds": 0.0, "pixel_iters": 0,
+            "superpixel_seconds": 0.0, "superpixel_iters": 0,
+            "superpixel_batches": 0, "superpixel_padded_lanes": 0,
+            "compress_seconds": 0.0,
         }
+        # Per-route request/cache-hit counters (the route mix is what the
+        # ops dashboards page on; only the histogram route can ever hit).
+        self._method_requests = {m: 0 for m in METHODS}
+        self._method_cache_hits = {m: 0 for m in METHODS}
 
     # -- ingest ------------------------------------------------------------
 
@@ -116,25 +166,59 @@ class FCMServeEngine:
         """Queue one image; returns its request id. Cache hits are still
         materialized at flush time (the defuzzify LUT needs the pixels).
 
-        ``method="spatial"`` requests spatially-regularized FCM_S: the
-        request keeps its full pixel payload and bypasses the histogram
-        LRU cache entirely (FCM_S depends on pixel *positions*, which
-        two histogram-identical images need not share).
+        Routes (see ``METHODS``):
+
+        * ``"histogram"`` — the default scalar fast path: 256-bin
+          compression on ingest, bucketed batched fits, LRU cache.
+        * ``"pixel"`` — uncompressed per-image fused FCM; (H, W, D)
+          payloads cluster in D-dim feature space. The reference route.
+        * ``"spatial"`` — FCM_S on the full (H, W)/(D, H, W) pixel grid;
+          bypasses the histogram cache (positions matter).
+        * ``"superpixel"`` — SLIC compression on ingest to a (K, D)
+          weighted payload; color/multi-channel (H, W, D) or grayscale
+          (H, W). Batched at fixed K buckets; bypasses the 1-D
+          histogram LRU like the spatial route.
         """
-        if method not in ("histogram", "spatial"):
+        if method not in METHODS:
             raise ValueError(f"unknown method {method!r}")
         img = np.asarray(img)
+        # Reject bad payloads at ingest: a request failing inside flush()
+        # would discard the whole drained batch's results.
         if method == "spatial" and img.ndim not in (2, 3):
-            # Reject at ingest: a bad request failing inside flush() would
-            # discard the whole drained batch's results.
             raise ValueError(f"spatial requests need a (H, W) or (D, H, W) "
                              f"pixel grid, got shape {img.shape}")
+        if method == "superpixel" and img.ndim not in (2, 3):
+            raise ValueError(f"superpixel requests need (H, W) or "
+                             f"(H, W, D) input, got shape {img.shape}")
+        if method == "pixel":
+            # 3-D pixel payloads are channels-LAST feature stacks; a
+            # (D, H, W) volume would silently cluster on W-dim rows, so
+            # anything that doesn't look like trailing channels is
+            # rejected here (volumes belong to histogram/spatial).
+            if img.ndim not in (2, 3) or (
+                    img.ndim == 3 and img.shape[-1] > 16):
+                raise ValueError(
+                    f"pixel requests need (H, W) or channels-last "
+                    f"(H, W, D<=16) input, got shape {img.shape}; "
+                    f"use method='histogram' or 'spatial' for volumes")
         rid = self._next_id
         self._next_id += 1
         self._stats["requests"] += 1
+        self._method_requests[method] += 1
         if method == "spatial":
             self._stats["spatial_requests"] += 1
             self._spatial_queue.append(_PendingSpatial(rid, img))
+            return rid
+        if method == "pixel":
+            self._pixel_queue.append(_PendingPixels(rid, img))
+            return rid
+        if method == "superpixel":
+            t0 = time.perf_counter()
+            comp = SX.compress(img.astype(np.float32), self.superpixel_cfg)
+            self._stats["compress_seconds"] += time.perf_counter() - t0
+            self._superpixel_queue.append(_PendingSuperpixel(
+                rid, np.asarray(comp.features), np.asarray(comp.weights),
+                np.asarray(comp.label_map), comp.slic_iters))
             return rid
         flat = np.clip(img.reshape(-1).astype(np.int64), 0, self.n_bins - 1)
         hist = np.bincount(flat, minlength=self.n_bins
@@ -158,6 +242,7 @@ class FCMServeEngine:
             centers = self._cache_get(p.key, p.hist)
             if centers is not None:
                 self._stats["cache_hits"] += 1
+                self._method_cache_hits["histogram"] += 1
                 results[p.request_id] = self._materialize(
                     p, centers, n_iters=0, cache_hit=True)
             else:
@@ -185,6 +270,7 @@ class FCMServeEngine:
         # 4. duplicates ride on their representative's centers
         for p in dups:
             self._stats["cache_hits"] += 1
+            self._method_cache_hits["histogram"] += 1
             results[p.request_id] = self._materialize(
                 p, fitted[p.key], n_iters=0, cache_hit=True)
         # 5. spatial requests: per-image FCM_S fits on full pixel grids,
@@ -193,6 +279,26 @@ class FCMServeEngine:
         self._spatial_queue = []
         for sp in spatial:
             results[sp.request_id] = self._run_spatial(sp)
+        # 6. pixel requests: uncompressed per-image fused fits.
+        pixels = self._pixel_queue
+        self._pixel_queue = []
+        for px in pixels:
+            results[px.request_id] = self._run_pixels(px)
+        # 7. superpixel requests: group the compressed (K, D) payloads by
+        # (K, D) and run each group through bucketed batched vector fits.
+        sps = self._superpixel_queue
+        self._superpixel_queue = []
+        groups: Dict[Tuple[int, int], List[_PendingSuperpixel]] = {}
+        for q in sps:
+            groups.setdefault(q.features.shape, []).append(q)
+        for group in groups.values():
+            i = 0
+            while i < len(group):
+                chunk = group[i:i + self.batch_sizes[-1]]
+                i += len(chunk)
+                self._run_superpixel_bucket(chunk,
+                                            self._bucket_for(len(chunk)),
+                                            results)
         return [results[rid] for rid in sorted(results)]
 
     def segment(self, imgs: Sequence[np.ndarray],
@@ -241,6 +347,57 @@ class FCMServeEngine:
                                   np.asarray(res.centers), res.n_iters,
                                   cache_hit=False, method="spatial")
 
+    def _run_pixels(self, px: _PendingPixels) -> SegmentationResult:
+        img = px.pixels.astype(np.float32)
+        # (H, W, D) clusters in D-dim feature space; (H, W)/(N,) is the
+        # scalar case. Labels keep the spatial shape.
+        spatial_shape = img.shape[:-1] if img.ndim == 3 else img.shape
+        x = img.reshape(-1, img.shape[-1]) if img.ndim == 3 \
+            else img.reshape(-1)
+        t0 = time.perf_counter()
+        res = F.fit_fused(x, self.cfg)
+        self._stats["pixel_seconds"] += time.perf_counter() - t0
+        self._stats["pixel_iters"] += res.n_iters
+        return SegmentationResult(
+            px.request_id, np.asarray(res.labels).reshape(spatial_shape),
+            np.asarray(res.centers), res.n_iters, cache_hit=False,
+            method="pixel")
+
+    def _run_superpixel_bucket(self, chunk: List[_PendingSuperpixel],
+                               bucket: int,
+                               results: Dict[int, SegmentationResult]):
+        k, d = chunk[0].features.shape
+        feats = np.stack([q.features for q in chunk])
+        ws = np.stack([q.weights for q in chunk])
+        n_pad = bucket - len(chunk)
+        if n_pad:
+            # Benign padding lanes: a unit-weight feature ramp converges
+            # in a handful of iterations and is dropped on output.
+            ramp = np.broadcast_to(
+                np.linspace(0.0, 1.0, k, dtype=np.float32)[:, None], (k, d))
+            feats = np.concatenate(
+                [feats, np.broadcast_to(ramp, (n_pad, k, d))])
+            ws = np.concatenate([ws, np.ones((n_pad, k), np.float32)])
+        t0 = time.perf_counter()
+        # The superpixel config carries the FCM hyper-parameters for this
+        # route (it defaults to self.cfg's, but a caller-supplied one
+        # must govern the fit, not just the compression).
+        res = VF.fit_vector_batched(jnp.asarray(feats), jnp.asarray(ws),
+                                    self.superpixel_cfg)
+        centers = np.asarray(res.centers)
+        self._stats["superpixel_seconds"] += time.perf_counter() - t0
+        self._stats["superpixel_batches"] += 1
+        self._stats["superpixel_padded_lanes"] += n_pad
+        self._stats["superpixel_iters"] += int(res.total_iters)
+        for lane, q in enumerate(chunk):
+            sp_labels = np.asarray(F.labels_from_centers(
+                jnp.asarray(q.features), jnp.asarray(centers[lane])))
+            labels = sp_labels[q.label_map]
+            results[q.request_id] = SegmentationResult(
+                q.request_id, labels, centers[lane],
+                n_iters=int(res.n_iters[lane]), cache_hit=False,
+                method="superpixel")
+
     def _materialize(self, p: _Pending, centers: np.ndarray,
                      n_iters: int, cache_hit: bool) -> SegmentationResult:
         # Defuzzify via a n_bins-entry LUT: label each bin once, gather.
@@ -284,15 +441,20 @@ class FCMServeEngine:
 
     @property
     def queue_depth(self) -> int:
-        return len(self._queue) + len(self._spatial_queue)
+        return (len(self._queue) + len(self._spatial_queue)
+                + len(self._pixel_queue) + len(self._superpixel_queue))
 
     def stats(self) -> Dict[str, float]:
         s = dict(self._stats)
         s["queue_depth"] = self.queue_depth
         s["cache_entries"] = len(self._cache)
-        # Hit rate over cacheable (histogram) traffic only — spatial
-        # requests bypass the cache by design and must not dilute it.
-        cacheable = s["requests"] - s["spatial_requests"]
+        # Per-route request/cache-hit mix (only the histogram route is
+        # cacheable, but the dashboards want all four columns).
+        s["method_requests"] = dict(self._method_requests)
+        s["method_cache_hits"] = dict(self._method_cache_hits)
+        # Hit rate over cacheable (histogram) traffic only — the bypass
+        # routes must not dilute it.
+        cacheable = self._method_requests["histogram"]
         s["cache_hit_rate"] = (s["cache_hits"] / cacheable
                                if cacheable else 0.0)
         s["images_per_sec"] = (s["batched_images"] / s["fit_seconds"]

@@ -166,3 +166,106 @@ def test_feature_dim_generalization():
     assert (labels[:100] == labels[0]).all()
     assert (labels[100:] == labels[100]).all()
     assert labels[0] != labels[100]
+
+
+# ---------------------------------------------------------------------------
+# Hard-assignment edge cases: ties and exact-center hits
+# ---------------------------------------------------------------------------
+
+def test_labels_from_centers_tie_is_deterministic_lowest_index():
+    # 50 is equidistant from centers 40 and 60 (indices 1 and 2): the
+    # argmin tie must resolve to the lowest cluster index, every time.
+    x = jnp.asarray([50.0, 50.0, 50.0])
+    v = jnp.asarray([0.0, 40.0, 60.0, 100.0])
+    lab = np.asarray(F.labels_from_centers(x, v))
+    np.testing.assert_array_equal(lab, [1, 1, 1])
+    # permuting the centers moves the tie with the lower index
+    v2 = jnp.asarray([0.0, 60.0, 40.0, 100.0])
+    np.testing.assert_array_equal(np.asarray(F.labels_from_centers(x, v2)),
+                                  [1, 1, 1])
+
+
+def test_defuzzify_tie_is_deterministic_lowest_index():
+    u = jnp.asarray([[0.4, 0.1], [0.4, 0.8], [0.2, 0.1]])
+    np.testing.assert_array_equal(np.asarray(F.defuzzify(u)), [0, 1])
+
+
+def test_defuzzify_matches_labels_from_centers_on_ties():
+    # equidistant pixels: membership is symmetric, so argmax(u) and
+    # argmin(d2) must pick the same (lowest) cluster.
+    x = jnp.asarray([10.0, 30.0, 20.0])
+    v = jnp.asarray([10.0, 30.0])
+    u = F.update_membership(x, v, 2.0)
+    np.testing.assert_array_equal(np.asarray(F.defuzzify(u)),
+                                  np.asarray(F.labels_from_centers(x, v)))
+
+
+def test_zero_distance_membership_no_nans_and_one_hot():
+    # pixels exactly on a center — including duplicated centers, where
+    # the mass splits evenly instead of producing NaNs.
+    x = jnp.asarray([25.0, 75.0, 25.0])
+    v = jnp.asarray([25.0, 75.0, 25.0])     # duplicate center at 25
+    u = np.asarray(F.update_membership(x, v, 2.0))
+    assert not np.isnan(u).any()
+    np.testing.assert_allclose(u.sum(axis=0), 1.0, atol=1e-6)
+    np.testing.assert_allclose(u[:, 0], [0.5, 0.0, 0.5], atol=1e-6)
+    np.testing.assert_allclose(u[:, 1], [0.0, 1.0, 0.0], atol=1e-6)
+    # hard labels stay deterministic through the tie
+    np.testing.assert_array_equal(np.asarray(F.defuzzify(u)), [0, 1, 0])
+
+
+def test_zero_distance_vector_features_one_hot():
+    x = jnp.asarray([[1.0, 2.0], [5.0, 6.0]])
+    v = jnp.asarray([[1.0, 2.0], [9.0, 9.0]])
+    u = np.asarray(F.update_membership(x, v, 2.0))
+    assert not np.isnan(u).any()
+    np.testing.assert_allclose(u[:, 0], [1.0, 0.0], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# intensity_histogram input validation (clamping is now opt-in)
+# ---------------------------------------------------------------------------
+
+def test_histogram_rejects_normalized_float_images():
+    x = jnp.asarray(np.random.default_rng(0).uniform(0, 1, 256),
+                    jnp.float32)
+    with pytest.raises(ValueError, match="normalized"):
+        H.intensity_histogram(x)
+
+
+def test_histogram_rejects_out_of_range_values():
+    with pytest.raises(ValueError, match="outside the bin range"):
+        H.intensity_histogram(jnp.asarray([-4.0, 10.0]))
+    with pytest.raises(ValueError, match="outside the bin range"):
+        H.intensity_histogram(jnp.asarray([0.0, 256.0]))
+
+
+def test_histogram_clip_true_restores_clamping():
+    h = np.asarray(H.intensity_histogram(jnp.asarray([-4.0, 10.0, 999.0]),
+                                         clip=True))
+    assert h[0] == 1 and h[10] == 1 and h[255] == 1
+
+
+def test_histogram_accepts_uint8_range_and_binary_ints():
+    img, _ = phantom.phantom_slice(32, 32, seed=0)
+    h = np.asarray(H.intensity_histogram(
+        jnp.asarray(img.ravel(), jnp.float32)))
+    assert h.sum() == img.size
+    # an integer-valued binary image is legitimate 8-bit data, not a
+    # normalized float image
+    hb = np.asarray(H.intensity_histogram(
+        jnp.asarray([0, 1, 1, 0], jnp.int32)))
+    assert hb[0] == 2 and hb[1] == 2
+    # ... and so is the same mask cast to float (integral values): only
+    # fractional values betray a [0, 1]-normalized image
+    hf = np.asarray(H.intensity_histogram(
+        jnp.asarray([0.0, 1.0, 1.0, 0.0], jnp.float32)))
+    assert hf[0] == 2 and hf[1] == 2
+
+
+def test_histogram_skips_validation_under_jit():
+    # traced values are unknowable; the jitted caller keeps the old
+    # clamping semantics (documented)
+    fn = jax.jit(lambda x: H.intensity_histogram(x, clip=False))
+    h = np.asarray(fn(jnp.asarray([0.25, 0.75])))
+    assert h.sum() == 2

@@ -183,6 +183,124 @@ def test_spatial_cache_hit_rate_counts_cacheable_traffic_only():
     assert eng.stats()["cache_hit_rate"] == 0.5
 
 
+def test_superpixel_route_serves_color_and_bypasses_cache():
+    """method="superpixel" handles (H, W, D) payloads the histogram
+    route cannot represent, and never touches the 1-D LRU."""
+    eng = FCMServeEngine(CFG)
+    img, gt = phantom.phantom_slice_rgb(96, 96, noise=4.0, seed=1)
+    entries0 = eng.stats()["cache_entries"]
+    res = eng.segment([img], method="superpixel")[0]
+    assert res.method == "superpixel"
+    assert not res.cache_hit and res.n_iters > 0
+    assert res.labels.shape == (96, 96)
+    assert res.centers.shape == (CFG.n_clusters, 3)
+    pred = phantom.match_labels_to_means(res.labels, res.centers,
+                                         phantom.CLASS_MEANS_RGB)
+    assert min(phantom.dice_per_class(pred, gt)) > 0.9
+    s = eng.stats()
+    assert s["cache_entries"] == entries0       # never populated the LRU
+    assert s["cache_hits"] == 0
+    # resubmission runs the fit again (no vector cache yet, by design)
+    again = eng.segment([img], method="superpixel")[0]
+    assert not again.cache_hit and again.n_iters > 0
+    assert (again.labels == res.labels).all()
+
+
+def test_superpixel_bucket_matches_single_fits():
+    """A flushed superpixel batch (with pad lanes) gives each request the
+    centers a solo fit of its compressed payload would."""
+    from repro.core import vector_fcm as VF
+
+    eng = FCMServeEngine(CFG, batch_sizes=(4,))
+    imgs = [phantom.phantom_slice_rgb(64, 64, noise=3.0 + 2 * i, seed=i)[0]
+            for i in range(3)]
+    ids = [eng.submit(im, method="superpixel") for im in imgs]
+    pend = {q.request_id: q for q in eng._superpixel_queue}
+    by_id = {r.request_id: r for r in eng.flush()}
+    s = eng.stats()
+    assert s["superpixel_batches"] == 1 and s["superpixel_padded_lanes"] == 1
+    for rid in ids:
+        solo = VF.fit_vector_fcm(pend[rid].features, pend[rid].weights, CFG)
+        np.testing.assert_allclose(by_id[rid].centers,
+                                   np.asarray(solo.centers), atol=1e-3)
+        assert by_id[rid].n_iters == solo.n_iters
+
+
+def test_superpixel_fit_honors_superpixel_cfg():
+    """Regression: the bucket fit must run with the caller's
+    superpixel_cfg hyper-parameters (here n_clusters=3), not self.cfg."""
+    from repro.superpixel.pipeline import SuperpixelFCMConfig
+
+    sp_cfg = SuperpixelFCMConfig(n_clusters=3, n_segments=48)
+    eng = FCMServeEngine(CFG, superpixel_cfg=sp_cfg)
+    img, _ = phantom.phantom_slice_rgb(64, 64, seed=4)
+    res = eng.segment([img], method="superpixel")[0]
+    assert res.centers.shape == (3, 3)
+    assert set(np.unique(res.labels)) <= {0, 1, 2}
+
+
+def test_pixel_route_matches_fit_fused():
+    eng = FCMServeEngine(CFG)
+    img, _ = phantom.phantom_slice(48, 56, seed=2)
+    res = eng.segment([img], method="pixel")[0]
+    direct = F.fit_fused(img.ravel().astype(np.float32), CFG)
+    assert res.method == "pixel"
+    np.testing.assert_allclose(res.centers, np.asarray(direct.centers),
+                               atol=1e-5)
+    assert (res.labels == np.asarray(direct.labels).reshape(48, 56)).all()
+
+
+def test_per_method_counters_increment():
+    """The stats() route mix: every submit bumps its method's request
+    counter, and only histogram traffic ever bumps a cache-hit one."""
+    eng = FCMServeEngine(CFG)
+    s = eng.stats()
+    assert s["method_requests"] == {
+        "histogram": 0, "pixel": 0, "spatial": 0, "superpixel": 0}
+    assert s["method_cache_hits"] == {
+        "histogram": 0, "pixel": 0, "spatial": 0, "superpixel": 0}
+
+    gray, _ = phantom.phantom_slice(48, 48, seed=0)
+    rgb, _ = phantom.phantom_slice_rgb(48, 48, seed=0)
+    eng.segment([gray])                          # histogram miss
+    eng.segment([gray])                          # histogram hit
+    eng.segment([gray, gray])                    # hit + intra-flush... both hit
+    eng.segment([gray], method="pixel")
+    eng.segment([gray], method="spatial")
+    eng.segment([rgb], method="superpixel")
+    eng.segment([rgb], method="superpixel")      # no cache for vectors
+
+    s = eng.stats()
+    assert s["method_requests"] == {
+        "histogram": 4, "pixel": 1, "spatial": 1, "superpixel": 2}
+    assert s["method_cache_hits"] == {
+        "histogram": 3, "pixel": 0, "spatial": 0, "superpixel": 0}
+    assert s["cache_hits"] == 3                  # legacy aggregate agrees
+    assert s["requests"] == 8
+    # hit rate is over histogram traffic only
+    assert s["cache_hit_rate"] == pytest.approx(3 / 4)
+
+
+def test_bad_pixel_request_rejected_at_ingest():
+    """A (D, H, W) volume must not silently cluster on W-dim feature
+    rows through the channels-last pixel route."""
+    eng = FCMServeEngine(CFG)
+    with pytest.raises(ValueError, match="channels-last"):
+        eng.submit(np.zeros((16, 64, 64)), method="pixel")  # volume-shaped
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros((2, 3, 4, 5)), method="pixel")
+    assert eng.queue_depth == 0
+
+
+def test_bad_superpixel_request_rejected_at_ingest():
+    eng = FCMServeEngine(CFG)
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros(64), method="superpixel")
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros((2, 3, 4, 5)), method="superpixel")
+    assert eng.queue_depth == 0
+
+
 def test_unknown_method_rejected():
     eng = FCMServeEngine(CFG)
     with pytest.raises(ValueError):

@@ -1,0 +1,189 @@
+"""Behavioural tests for the superpixel subsystem: SLIC invariants, the
+weighted vector FCM core (incl. its D=1 equivalence to the histogram
+path and the batched variant), and the compress -> fit -> broadcast
+pipeline."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import fcm as F
+from repro.core import histogram as H
+from repro.core import vector_fcm as VF
+from repro.data import phantom
+from repro.superpixel import pipeline as SX
+from repro.superpixel import slic as SL
+
+CFG = F.FCMConfig()
+
+
+# ---------------------------------------------------------------------------
+# SLIC reference
+# ---------------------------------------------------------------------------
+
+def test_grid_shape_tracks_aspect():
+    gy, gx = SL.grid_shape(100, 400, 64)
+    assert gy * gx == pytest.approx(64, rel=0.35)
+    assert gx > gy                          # wide image, wide grid
+    assert SL.grid_shape(8, 8, 1) == (1, 1)
+
+
+def test_slic_labels_are_compact_and_complete():
+    img, _ = phantom.phantom_slice(96, 80, seed=4)
+    res = SL.fit_slic(img.astype(np.float32), SL.SLICParams(n_segments=48))
+    lab = np.asarray(res.labels)
+    k = res.gy * res.gx
+    assert lab.shape == img.shape and lab.min() >= 0 and lab.max() < k
+    np.testing.assert_allclose(
+        np.bincount(lab.ravel(), minlength=k), np.asarray(res.counts))
+    # compactness: every pixel's superpixel center stays within its 3x3
+    # grid-cell neighborhood, so no superpixel spans > 3 cell intervals
+    yy, xx = np.mgrid[0:96, 0:80]
+    cy = np.asarray(res.centers[:, 1])[lab]
+    cx = np.asarray(res.centers[:, 2])[lab]
+    assert np.abs(yy - cy).max() <= 3 * (96 / res.gy)
+    assert np.abs(xx - cx).max() <= 3 * (80 / res.gx)
+
+
+def test_slic_grayscale_and_multichannel_agree_on_replicated_channels():
+    """A 3-channel image with identical channels is the grayscale
+    problem with 3x the feature distance — same compactness units give
+    a valid (if differently weighted) partition; the degenerate check
+    is that every superpixel's channel means coincide."""
+    img, _ = phantom.phantom_slice(64, 64, seed=5)
+    img3 = np.stack([img] * 3, axis=-1).astype(np.float32)
+    res = SL.fit_slic(img3, SL.SLICParams(n_segments=32))
+    feats = np.asarray(res.centers[:, :3])
+    np.testing.assert_allclose(feats[:, 0], feats[:, 1], atol=1e-4)
+    np.testing.assert_allclose(feats[:, 0], feats[:, 2], atol=1e-4)
+
+
+def test_slic_converges_on_constant_image():
+    res = SL.fit_slic(np.full((40, 48), 7.0, np.float32),
+                      SL.SLICParams(n_segments=12, max_iters=10))
+    # seeds never move on constant data: one iteration detects the
+    # fixed point
+    assert res.n_iters <= 2
+    assert np.asarray(res.counts).sum() == 40 * 48
+
+
+# ---------------------------------------------------------------------------
+# Weighted vector FCM
+# ---------------------------------------------------------------------------
+
+def test_vector_fcm_d1_reproduces_histogram_fit():
+    """(256, 1) bin values + counts as weights == fit_histogram, center
+    for center, iteration for iteration."""
+    img, _ = phantom.phantom_slice(96, 96, seed=3)
+    x = img.ravel().astype(np.float32)
+    hist = H.intensity_histogram(jnp.asarray(x))
+    vals = jnp.arange(256, dtype=jnp.float32)[:, None]
+    rv = VF.fit_vector_fcm(vals, hist, CFG)
+    rh = H.fit_histogram(x, CFG)
+    np.testing.assert_allclose(np.asarray(rv.centers).ravel(),
+                               np.asarray(rh.centers), atol=1e-5)
+    assert rv.n_iters == rh.n_iters
+
+
+def test_vector_fcm_membership_partition_and_labels():
+    rng = np.random.default_rng(0)
+    feats = rng.uniform(0, 255, (128, 3)).astype(np.float32)
+    res = VF.fit_vector_fcm(feats, cfg=CFG, keep_membership=True)
+    u = np.asarray(res.membership)
+    np.testing.assert_allclose(u.sum(axis=0), 1.0, atol=1e-5)
+    np.testing.assert_array_equal(
+        np.asarray(res.labels),
+        np.asarray(F.labels_from_centers(jnp.asarray(feats), res.centers)))
+
+
+def test_vector_fcm_zero_weight_rows_are_inert():
+    """Appending zero-weight junk rows must not move the centers (they
+    are excluded from both the init range and the weighted sums)."""
+    rng = np.random.default_rng(1)
+    feats = rng.uniform(20, 200, (64, 2)).astype(np.float32)
+    w = rng.uniform(1, 10, (64,)).astype(np.float32)
+    r0 = VF.fit_vector_fcm(feats, w, CFG)
+    junk = np.array([[1e4, -1e4], [5e3, 5e3]], np.float32)
+    feats2 = np.concatenate([feats, junk])
+    w2 = np.concatenate([w, np.zeros((2,), np.float32)])
+    r1 = VF.fit_vector_fcm(feats2, w2, CFG)
+    # atol covers float non-associativity of the row sums, nothing more
+    np.testing.assert_allclose(np.asarray(r0.centers),
+                               np.asarray(r1.centers), atol=1e-3)
+    assert r0.n_iters == r1.n_iters
+
+
+def test_vector_batched_lanes_match_single_fits():
+    rngs = [np.random.default_rng(s) for s in range(4)]
+    feats = np.stack([r.uniform(0, 255, (48, 3)).astype(np.float32)
+                      for r in rngs])
+    ws = np.stack([r.uniform(1, 40, (48,)).astype(np.float32)
+                   for r in rngs])
+    ws[2, :8] = 0.0                          # a lane with empty rows
+    rb = VF.fit_vector_batched(feats, ws, CFG)
+    assert rb.centers.shape == (4, CFG.n_clusters, 3)
+    for i in range(4):
+        rs = VF.fit_vector_fcm(feats[i], ws[i], CFG)
+        np.testing.assert_allclose(np.asarray(rb.centers[i]),
+                                   np.asarray(rs.centers), atol=1e-3)
+        assert int(rb.n_iters[i]) == rs.n_iters
+
+
+# ---------------------------------------------------------------------------
+# Pipeline
+# ---------------------------------------------------------------------------
+
+def test_compress_payload_shapes():
+    img, _ = phantom.phantom_slice_rgb(80, 72, seed=6)
+    cfg = SX.SuperpixelFCMConfig(n_segments=40)
+    comp = SX.compress(img.astype(np.float32), cfg)
+    k = comp.gy * comp.gx
+    assert comp.features.shape == (k, 3)
+    assert comp.weights.shape == (k,)
+    assert comp.label_map.shape == (80, 72)
+    assert float(jnp.sum(comp.weights)) == 80 * 72
+
+
+@pytest.mark.parametrize("flavor", ["rgb", "t1t2pd", "gray"])
+def test_pipeline_dsc_parity_with_pixel_space(flavor):
+    """Superpixel-compressed FCM matches the pixel-space fit within 0.02
+    DSC per class on every phantom flavor."""
+    if flavor == "rgb":
+        img, gt = phantom.phantom_slice_rgb(128, 128, noise=6.0, seed=7)
+        means = phantom.CLASS_MEANS_RGB
+    elif flavor == "t1t2pd":
+        img, gt = phantom.phantom_slice_channels(128, 128, noise=6.0,
+                                                 seed=7)
+        means = phantom.CLASS_MEANS_MULTI
+    else:
+        img, gt = phantom.phantom_slice(128, 128, noise=6.0, seed=7)
+        means = phantom.CLASS_MEANS[:, None]
+    imgf = img.astype(np.float32)
+    cfg = SX.SuperpixelFCMConfig(n_segments=128)
+    seg, comp = SX.fit_superpixel(imgf, cfg)
+    x = imgf.reshape(-1, imgf.shape[-1]) if imgf.ndim == 3 \
+        else imgf.ravel()
+    rp = F.fit_fused(x, CFG)
+    d_sp = phantom.dice_per_class(
+        phantom.match_labels_to_means(seg.labels, seg.centers, means), gt)
+    d_px = phantom.dice_per_class(
+        phantom.match_labels_to_means(
+            np.asarray(rp.labels).reshape(gt.shape), rp.centers, means), gt)
+    for a, b in zip(d_sp, d_px):
+        assert abs(a - b) <= 0.02, (d_sp, d_px)
+
+
+def test_broadcast_labels_is_a_pure_gather():
+    sp_labels = jnp.asarray([3, 1, 2, 0], jnp.int32)
+    label_map = jnp.asarray([[0, 1], [2, 3]], jnp.int32)
+    out = np.asarray(SX.broadcast_labels(sp_labels, label_map))
+    np.testing.assert_array_equal(out, [[3, 1], [2, 0]])
+
+
+def test_match_labels_to_means_handles_contrast_inversion():
+    # CSF is dark on T1, bright on T2: scalar rank matching would swap
+    # CSF/WM, nearest-mean matching must not.
+    centers = phantom.CLASS_MEANS_MULTI[[3, 0, 2, 1]] + 2.0
+    labels = np.array([0, 1, 2, 3])
+    out = phantom.match_labels_to_means(labels, centers,
+                                        phantom.CLASS_MEANS_MULTI)
+    np.testing.assert_array_equal(out, [3, 0, 2, 1])
