@@ -1,14 +1,22 @@
 """Batched segmentation throughput: images/sec vs batch size.
 
-The one-at-a-time baseline is ``fit_fused`` per image (the paper's
-optimized single-image path, one device launch sequence per image).
-Against it:
+Everything routes through the unified solver core. The one-at-a-time
+baseline is ``solve(pixel_problem(x))`` per image (the paper's optimized
+single-image path, one device launch sequence per image). Against it:
 
-* sequential ``fit_histogram`` per image — histogram compression alone;
-* ``fit_batched`` — one vmapped ``(B, 256)`` fixed point per batch, the
-  serving engine's hot path;
+* sequential ``solve(histogram_problem(x))`` per image — histogram
+  compression alone;
+* ``solve_batched`` over the histogram stack — one vmapped ``(B, 256)``
+  fixed point per batch, the serving engine's hot path;
 * ``FCMServeEngine.segment`` — the full request path (ingest + bucketing
   + cache + defuzzify LUT), cache cold.
+
+Then the **batched spatial** section (new with the route registry): B
+same-shape FCM_S requests as one per-lane-masked stencil solve vs one
+``solve(spatial_problem(img))`` per image, plus the full engine
+``method="spatial"`` path. The run FAILS if the batched-spatial speedup
+at B = 16 drops under 5x — that is the acceptance floor for spatial
+traffic batching.
 
 Run:  PYTHONPATH=src python -m benchmarks.batched_throughput
 """
@@ -18,7 +26,8 @@ import numpy as np
 
 from repro.core import batched as B
 from repro.core import fcm as F
-from repro.core import histogram as H
+from repro.core import solver as SV
+from repro.core import spatial as SP
 from repro.data import phantom
 from repro.serving.fcm_engine import FCMServeEngine
 
@@ -31,6 +40,10 @@ BATCH_SIZES = (1, 8, 64)
 H_IMG, W_IMG = 128, 128
 CFG = F.FCMConfig(max_iters=300)
 
+SPATIAL_B = 16
+SPATIAL_HW = 48
+SPATIAL_MIN_SPEEDUP = 5.0
+
 
 def _make_batch(b: int):
     """b distinct slices (distinct seeds/positions so nothing caches)."""
@@ -40,25 +53,25 @@ def _make_batch(b: int):
             for i in range(b)]
 
 
-def run():
-    print("# batched_throughput: name,us_per_image,derived "
-          f"(slice={H_IMG}x{W_IMG}, c={CFG.n_clusters})")
+def run_histogram():
+    """images/sec for the scalar fast path at each bucket size."""
     speedups = {}
     for b in BATCH_SIZES:
         imgs = _make_batch(b)
         flats = [im.ravel().astype(np.float32) for im in imgs]
         hists = B.histograms_of(imgs)
+        batch = SV.batch_problems(B.hist_rows(hists), hists, cfg=CFG)
 
         def seq_fused():
             for x in flats:
-                F.fit_fused(x, CFG)
+                SV.solve(SV.pixel_problem(x, CFG), CFG)
 
         def seq_hist():
             for x in flats:
-                H.fit_histogram(x, CFG)
+                SV.solve(SV.histogram_problem(x, CFG), CFG)
 
         def batched():
-            B.fit_batched(hists, CFG)
+            SV.solve_batched(batch, CFG)
 
         def engine():
             # fresh engine each call: cold cache, so the fit really runs
@@ -71,22 +84,78 @@ def run():
         t_ba = time_fn(batched, warmup=1, iters=3)
         t_en = time_fn(engine, warmup=1, iters=iters)
         sp = t_sf / t_ba
-        speedups[b] = sp
+        speedups[b] = {"seq_fused_s": t_sf, "seq_hist_s": t_sh,
+                       "batched_s": t_ba, "engine_s": t_en,
+                       "speedup_batched_vs_seq": round(sp, 1)}
         emit(f"batched/B={b}/seq_fused", t_sf / b * 1e6,
              f"{b / t_sf:.1f} img/s")
         emit(f"batched/B={b}/seq_hist", t_sh / b * 1e6,
              f"{b / t_sh:.1f} img/s")
-        emit(f"batched/B={b}/fit_batched", t_ba / b * 1e6,
+        emit(f"batched/B={b}/solve_batched", t_ba / b * 1e6,
              f"{b / t_ba:.1f} img/s speedup_vs_seq_fused={sp:.1f}x")
         emit(f"batched/B={b}/serve_engine", t_en / b * 1e6,
              f"{b / t_en:.1f} img/s")
-    if speedups.get(64, 0.0) <= 2.0:
-        raise SystemExit(
-            f"FAIL: batched speedup at B=64 is {speedups[64]:.2f}x "
-            "(expected > 2x over one-at-a-time fit_fused)")
-    print(f"# OK: B=64 batched throughput {speedups[64]:.1f}x the "
-          "one-at-a-time fit_fused baseline")
     return speedups
+
+
+def run_spatial(b: int = SPATIAL_B, size: int = SPATIAL_HW):
+    """Batched-spatial throughput: the route-registry payoff. B
+    same-shape noisy slices, FCM_S with the job config's stencil."""
+    scfg = SP.SpatialFCMConfig(max_iters=CFG.max_iters)
+    imgs = [phantom.noisy_phantom_slice(size, size, noise=6.0 + (i % 4),
+                                        impulse=0.03, seed=i)[0]
+            .astype(np.float32) for i in range(b)]
+    batch = SV.batch_problems(
+        np.stack(imgs),
+        stencil=SV.StencilSpec(alpha=scfg.alpha, neighbors=scfg.neighbors),
+        cfg=scfg)
+
+    def one_at_a_time():
+        for im in imgs:
+            SV.solve(SV.spatial_problem(im, scfg), scfg)
+
+    def batched():
+        SV.solve_batched(batch, scfg)
+
+    def engine():
+        FCMServeEngine(CFG, batch_sizes=(1, 8, 16, 64),
+                       spatial_cfg=scfg).segment(imgs, method="spatial")
+
+    t_seq = time_fn(one_at_a_time, warmup=1, iters=2)
+    t_ba = time_fn(batched, warmup=1, iters=3)
+    t_en = time_fn(engine, warmup=1, iters=2)
+    sp = t_seq / t_ba
+    emit(f"spatial/B={b}/one_at_a_time", t_seq / b * 1e6,
+         f"{b / t_seq:.1f} img/s")
+    emit(f"spatial/B={b}/solve_batched", t_ba / b * 1e6,
+         f"{b / t_ba:.1f} img/s speedup_vs_one_at_a_time={sp:.1f}x")
+    emit(f"spatial/B={b}/serve_engine", t_en / b * 1e6,
+         f"{b / t_en:.1f} img/s")
+    return {"b": b, "size": size, "one_at_a_time_s": t_seq,
+            "batched_s": t_ba, "engine_s": t_en,
+            "speedup_batched_vs_one_at_a_time": round(sp, 1)}
+
+
+def run():
+    print("# batched_throughput: name,us_per_image,derived "
+          f"(slice={H_IMG}x{W_IMG}, c={CFG.n_clusters})")
+    hist = run_histogram()
+    spatial = run_spatial()
+    hist_sp = hist[64]["speedup_batched_vs_seq"]
+    if hist_sp <= 2.0:
+        raise SystemExit(
+            f"FAIL: batched speedup at B=64 is {hist_sp:.2f}x "
+            "(expected > 2x over one-at-a-time fused solve)")
+    sp = spatial["speedup_batched_vs_one_at_a_time"]
+    if sp < SPATIAL_MIN_SPEEDUP:
+        raise SystemExit(
+            f"FAIL: batched-spatial speedup at B={SPATIAL_B} is "
+            f"{sp:.2f}x (acceptance floor {SPATIAL_MIN_SPEEDUP}x over "
+            "one-at-a-time fit_spatial)")
+    print(f"# OK: B=64 batched histogram throughput {hist_sp:.1f}x, "
+          f"B={SPATIAL_B} batched spatial {sp:.1f}x the one-at-a-time "
+          "baselines")
+    return {"histogram": hist, "spatial": spatial}
 
 
 if __name__ == "__main__":

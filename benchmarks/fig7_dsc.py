@@ -9,7 +9,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import fcm as F
-from repro.core import sequential as S
+from repro.core import solver as SV
 from repro.data import phantom
 from .common import emit
 
@@ -30,9 +30,11 @@ def run():
         d2 = (v0[:, None] - x[None, :]) ** 2
         p = np.clip(d2, 1e-12, None) ** -1.0
         u0 = p / p.sum(axis=0, keepdims=True)
-        v_seq, lab_seq, _ = S.fcm_sequential_numpy(x, c=4, max_iters=200,
-                                                   u0=u0)
-        res_par = F.fit_fused(x, F.FCMConfig(max_iters=300))
+        res_seq = SV.solve(SV.pixel_problem(x, c=4), backend="sequential",
+                           eps=5e-3, max_iters=200, u0=u0)
+        v_seq = np.asarray(res_seq.centers)
+        lab_seq = np.asarray(res_seq.labels)
+        res_par = SV.solve(SV.pixel_problem(x), eps=5e-3, max_iters=300)
         pred_seq = phantom.match_labels_to_classes(lab_seq, v_seq)
         pred_par = phantom.match_labels_to_classes(
             np.asarray(res_par.labels), np.asarray(res_par.centers))

@@ -1,23 +1,75 @@
 """Benchmark harness: one module per paper table/figure. Prints
-``name,us_per_call,derived`` CSV lines.
+``name,us_per_call,derived`` CSV lines and writes the consolidated
+``benchmarks/out/BENCH_pr4.json`` aggregating the batched / spatial /
+superpixel serving numbers, so the perf trajectory is machine-readable
+across PRs.
 
   table1_variants    — paper Table 1 analogue (variant ladder)
   fig7_dsc           — paper Fig. 7 DSC parity (parallel == sequential)
   table3_speedup     — paper Table 3 exec times + Fig. 8 speedup curve
+                       (sequential vs device, one solve() entry point)
   roofline_report    — §Roofline summary from the dry-run JSONL
-  batched_throughput — beyond-paper: images/sec vs batch size (serving)
+  batched_throughput — beyond-paper: images/sec vs batch size for the
+                       histogram AND batched-spatial serving paths
+  spatial_fcm        — FCM_S noise-robustness + wall clock
+  superpixel_fcm     — pixels-vs-superpixels compression ladder
+
+  PYTHONPATH=src python -m benchmarks.run [--tiny] [--skip-paper-tables]
 """
+from __future__ import annotations
+
+import argparse
+import json
+import os
 
 
-def main() -> None:
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke: small images, single timing reps")
+    ap.add_argument("--skip-paper-tables", action="store_true",
+                    help="run only the serving sections that feed "
+                         "BENCH_pr4.json")
+    args = ap.parse_args(argv)
+
+    import jax
+
     from . import (batched_throughput, fig7_dsc, roofline_report,
-                   table1_variants, table3_speedup)
+                   spatial_fcm, superpixel_fcm, table1_variants,
+                   table3_speedup)
+
     print("benchmark,us_per_call,derived")
-    table1_variants.run()
-    fig7_dsc.run()
-    table3_speedup.run()
-    roofline_report.run()
-    batched_throughput.run()
+    if not args.skip_paper_tables:
+        table1_variants.run()
+        fig7_dsc.run()
+        table3_speedup.run()
+        roofline_report.run()
+
+    throughput = batched_throughput.run()
+    spatial_argv = [] if jax.default_backend() == "tpu" else ["--no-pallas"]
+    if args.tiny:
+        spatial_argv += ["--size", "48"]
+    spatial = spatial_fcm.main(spatial_argv)
+    superpixel = superpixel_fcm.main(["--tiny"] if args.tiny else [])
+
+    bench = {
+        "pr": 4,
+        "backend": jax.default_backend(),
+        "tiny": args.tiny,
+        # serving-path throughput (batched histogram + batched spatial)
+        "batched_throughput": throughput,
+        # FCM_S robustness/wall-clock sweep
+        "spatial_fcm": spatial,
+        # superpixel compression ladder
+        "superpixel_fcm": superpixel,
+    }
+    out_dir = os.path.join(os.path.dirname(__file__), "out")
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, "BENCH_pr4.json")
+    with open(out_path, "w") as f:
+        json.dump(bench, f, indent=1)
+    print(f"wrote {out_path}")
+    return bench
 
 
 if __name__ == '__main__':

@@ -28,8 +28,7 @@ import numpy as np
 
 from benchmarks.common import time_fn
 from repro.configs.fcm_brainweb import make_config
-from repro.core import fcm as F
-from repro.core import spatial as S
+from repro.core import solver as SV
 from repro.data import phantom
 
 
@@ -41,13 +40,13 @@ def _dsc(labels, centers, gt):
             for name, v in zip(phantom.CLASS_NAMES, d)}
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--size", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-pallas", action="store_true",
                     help="skip the (interpret-mode-slow on CPU) Pallas fits")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     job = make_config()
     cfg, scfg = job.fcm, job.spatial
@@ -63,26 +62,28 @@ def main():
         imgf = img.astype(np.float32)
         level = {"sigma": sigma, "impulse": impulse, "fits": {}}
 
-        rp = F.fit_fused(x, cfg)
+        plain = SV.pixel_problem(x, cfg)
+        rp = SV.solve(plain, cfg)
         level["fits"]["plain"] = {
             "dsc": _dsc(np.asarray(rp.labels).reshape(img.shape), rp.centers,
                         gt),
             "n_iters": rp.n_iters,
-            "seconds": time_fn(lambda: F.fit_fused(x, cfg)),
+            "seconds": time_fn(lambda: SV.solve(plain, cfg)),
         }
-        rs = S.fit_spatial(imgf, scfg)
+        spat = SV.spatial_problem(imgf, scfg)
+        rs = SV.solve(spat, scfg)
         level["fits"]["spatial_ref"] = {
             "dsc": _dsc(rs.labels, rs.centers, gt),
             "n_iters": rs.n_iters,
-            "seconds": time_fn(lambda: S.fit_spatial(imgf, scfg)),
+            "seconds": time_fn(lambda: SV.solve(spat, scfg)),
         }
         if not args.no_pallas:
-            rk = S.fit_spatial(imgf, scfg, use_pallas=True)
+            rk = SV.solve(spat, scfg, backend="pallas")
             level["fits"]["spatial_pallas"] = {
                 "dsc": _dsc(rk.labels, rk.centers, gt),
                 "n_iters": rk.n_iters,
                 "seconds": time_fn(
-                    lambda: S.fit_spatial(imgf, scfg, use_pallas=True)),
+                    lambda: SV.solve(spat, scfg, backend="pallas")),
                 "interpret": jax.default_backend() != "tpu",
             }
         report["levels"].append(level)
@@ -102,6 +103,7 @@ def main():
     for cls in ("CSF", "GM", "WM"):
         gain = worst["spatial_ref"]["dsc"][cls] - worst["plain"]["dsc"][cls]
         print(f"highest-noise DSC gain {cls}: {gain:+.3f}")
+    return report
 
 
 if __name__ == "__main__":

@@ -30,8 +30,7 @@ import numpy as np
 
 from benchmarks.common import time_fn
 from repro.configs.fcm_brainweb import make_config
-from repro.core import fcm as F
-from repro.core import vector_fcm as VF
+from repro.core import solver as SV
 from repro.data import phantom
 from repro.superpixel import pipeline as SX
 
@@ -44,7 +43,7 @@ def _dsc(labels, centers, gt):
             for name, v in zip(phantom.CLASS_NAMES, d)}
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--size", type=int, default=512)
     ap.add_argument("--segments", type=int, default=0,
@@ -53,7 +52,7 @@ def main():
     ap.add_argument("--noise", type=float, default=6.0)
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke: 96px, 64 superpixels, 1 timing rep")
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
     if args.tiny:
         args.size = 96
         args.segments = args.segments or 64
@@ -73,18 +72,18 @@ def main():
     n = x.shape[0]
 
     # -- pixel-space reference fit ----------------------------------------
-    rp = F.fit_fused(x, cfg)
-    pixel_fit_s = time_fn(lambda: F.fit_fused(x, cfg), iters=reps)
+    pixel = SV.pixel_problem(x, cfg)
+    rp = SV.solve(pixel, cfg)
+    pixel_fit_s = time_fn(lambda: SV.solve(pixel, cfg), iters=reps)
     dsc_pixel = _dsc(np.asarray(rp.labels).reshape(gt.shape), rp.centers, gt)
 
     # -- superpixel path ---------------------------------------------------
     comp = SX.compress(imgf, spcfg)
     k = int(comp.features.shape[0])
     compress_s = time_fn(lambda: SX.compress(imgf, spcfg), iters=reps)
-    rs = VF.fit_vector_fcm(comp.features, comp.weights, spcfg)
-    superpixel_fit_s = time_fn(
-        lambda: VF.fit_vector_fcm(comp.features, comp.weights, spcfg),
-        iters=reps)
+    vecp = SV.vector_problem(comp.features, comp.weights, spcfg)
+    rs = SV.solve(vecp, spcfg)
+    superpixel_fit_s = time_fn(lambda: SV.solve(vecp, spcfg), iters=reps)
     labels = SX.broadcast_labels(rs.labels, comp.label_map)
     dsc_sp = _dsc(labels, rs.centers, gt)
 
@@ -126,6 +125,7 @@ def main():
     print(f"DSC pixel {dsc_pixel}")
     print(f"DSC superpixel {dsc_sp} (max delta {parity:.4f})")
     print(f"wrote {out_path}")
+    return report
 
 
 if __name__ == "__main__":

@@ -2,23 +2,30 @@
 parallel (JAX-jitted device) FCM across dataset sizes 20 KB -> 1 MB, and
 the speedup curve with the processing-element line.
 
+Every variant now runs from ONE entry point — ``repro.core.solver.solve``
+— with the backend selecting the paper's two sides of the comparison:
+
+* ``backend="sequential"``  — the single-core numpy comparator
+  (``core/sequential.py``), the honest stand-in for the paper's C code;
+* ``backend="auto"``        — the fused device fixed point (the paper's
+  parallel side), on a pixel problem;
+* the histogram problem     — the beyond-paper compressed variant.
+
+``tol=-1`` pins every solve to exactly ``ITERS`` iterations for a
+like-for-like per-iteration comparison (the sequential backend gets
+``eps=-1``, its membership-space equivalent).
+
 On this container the "device" is one CPU core, so absolute speedups are
 NOT the paper's 674x (no 448-SP GPU here); what IS reproduced and checked
 is the paper's scaling story: parallel time grows ~linearly and slowly
 with N while sequential time grows linearly and steeply; iteration counts
-and outputs agree. The paper-faithful baseline (staged kernels, host
-convergence test) and the fused/histogram beyond-paper variants are all
-timed per FCM iteration for a like-for-like comparison.
+and outputs agree.
 """
 from __future__ import annotations
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
-from repro.core import fcm as F
-from repro.core import histogram as H
-from repro.core import sequential as S
+from repro.core import solver as SV
 from repro.data import phantom
 from .common import emit, time_fn
 
@@ -27,32 +34,32 @@ ITERS = 10        # fixed iteration count for fair per-iteration timing
 
 
 def _run_sequential(x, iters):
-    S.fcm_sequential_numpy(x, c=4, m=2.0, eps=-1.0, max_iters=iters)
+    SV.solve(SV.pixel_problem(x), backend="sequential", eps=-1.0,
+             max_iters=iters)
 
 
 def _run_fused(x, iters):
-    v0 = F.linspace_centers(jnp.asarray(x, jnp.float32), 4)
-    v, _, _ = F._fused_loop(jnp.asarray(x, jnp.float32), v0, 4, 2.0,
-                            -1.0, iters)
-    v.block_until_ready()
+    SV.solve(SV.pixel_problem(x), tol=-1.0, max_iters=iters)
 
 
 def _run_hist(x, iters):
-    xj = jnp.asarray(x, jnp.float32)
-    hist = H.intensity_histogram(xj)
-    vals = jnp.arange(256, dtype=jnp.float32)
-    v0 = F.linspace_centers(xj, 4)
-    v, _, _ = H._hist_loop(vals, hist, v0, 4, 2.0, -1.0, iters)
-    v.block_until_ready()
+    SV.solve(SV.histogram_problem(x), tol=-1.0, max_iters=iters)
 
 
 def run():
     print("# table3: name,us_per_call,derived  "
           "(derived = seq_s;par_s;speedup per ITERS iterations)")
+    # Warm the dispatch path once: the sequential backend is pure numpy,
+    # but solve()'s problem construction touches jax, whose one-time
+    # init must not land in the first (warmup=0) sequential timing.
+    warm = np.zeros(64, np.float32)
+    _run_sequential(warm, 1)
+    _run_fused(warm, 1)
+    _run_hist(warm, 1)
     rows = []
     for kb in SIZES_KB:
         img, _ = phantom.phantom_of_bytes(kb * 1024)
-        x = img.astype(np.float32)
+        x = img.astype(np.float32).ravel()
         t_seq = time_fn(lambda: _run_sequential(x, ITERS), warmup=0,
                         iters=1 if kb >= 300 else 2)
         t_par = time_fn(lambda: _run_fused(x, ITERS))

@@ -1,9 +1,11 @@
 """Quickstart: the paper's pipeline end-to-end on one axial slice.
 
-Segments a synthetic brain phantom into WM/GM/CSF/background with the
-paper-faithful FCM baseline AND the fused device-resident FCM, reports
-DSC against ground truth for both (paper Fig. 7), and writes PGM images
-you can open with any viewer.
+Segments a synthetic brain phantom into WM/GM/CSF/background through the
+unified solver core — the SAME ``solve(pixel_problem(x))`` entry point
+drives the paper-faithful staged pipeline (``backend="staged"``) and the
+fused device-resident fixed point (the default) — reports DSC against
+ground truth for both (paper Fig. 7), and writes PGM images you can open
+with any viewer.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -15,6 +17,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro.core import fcm as F
+from repro.core import solver as SV
 from repro.data import phantom
 
 
@@ -39,8 +42,10 @@ def main():
     import jax.numpy as jnp
     u0 = F.update_membership(jnp.asarray(x),
                              F.linspace_centers(jnp.asarray(x), 4), 2.0)
-    base = F.fit_baseline(x, F.FCMConfig(), u0=u0)
-    fused = F.fit_fused(x, F.FCMConfig())
+    cfg = F.FCMConfig()
+    problem = SV.pixel_problem(x, cfg)
+    base = SV.solve(problem, cfg, backend="staged", u0=u0)
+    fused = SV.solve(problem, cfg)
     print(f"baseline (paper-faithful): {base.n_iters} iters, "
           f"centers={np.sort(np.asarray(base.centers)).round(1)}")
     print(f"fused (device-resident):   {fused.n_iters} iters, "

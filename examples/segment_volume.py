@@ -16,7 +16,7 @@ import numpy as np
 import jax
 
 from repro.core import fcm as F
-from repro.core import histogram as H
+from repro.core import solver as SV
 from repro.data import phantom
 
 
@@ -36,7 +36,11 @@ def main():
     x = vol.ravel().astype(np.float32)
     print(f"volume: {vol.shape} = {x.size / 1024:.0f} KB")
 
-    res = H.fit_histogram(x, F.FCMConfig(max_iters=300))
+    cfg = F.FCMConfig(max_iters=300)
+    hres = SV.solve(SV.histogram_problem(x, cfg), cfg)
+    res = F.FCMResult(centers=hres.centers,
+                      labels=F.labels_from_centers(x, hres.centers),
+                      n_iters=hres.n_iters, final_delta=hres.final_delta)
     print(f"histogram FCM converged in {res.n_iters} iters; "
           f"centers={np.sort(np.asarray(res.centers)).round(1)}")
 
@@ -49,7 +53,7 @@ def main():
     # --- simulated failure & restart ---
     restored = json.load(open(ckpt_path))
     v0 = np.asarray(restored["centers"], np.float32)
-    res2 = F.fit_fused(x, F.FCMConfig(max_iters=50), v0=v0)
+    res2 = SV.solve(SV.pixel_problem(x, v0=v0), eps=cfg.eps, max_iters=50)
     print(f"restart from centers: {res2.n_iters} extra iters "
           f"(already converged)" if res2.n_iters <= 2 else "")
 

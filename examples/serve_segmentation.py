@@ -16,14 +16,15 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np  # noqa: E402
 
-from repro.core import fcm as F  # noqa: E402
+from repro.configs.fcm_brainweb import make_config  # noqa: E402
 from repro.data import phantom  # noqa: E402
 from repro.serving import FCMServeEngine  # noqa: E402
 
 
 def main():
-    engine = FCMServeEngine(F.FCMConfig(max_iters=300),
-                            batch_sizes=(1, 8, 64))
+    job = make_config()
+    engine = FCMServeEngine(job.fcm, batch_sizes=job.serving_batch_sizes,
+                            spatial_cfg=job.spatial)
 
     # A 40-slice study with varying anatomy + a couple of odd-size scouts.
     slices, gts = [], []
@@ -55,7 +56,16 @@ def main():
     assert engine.stats()["batches"] == before
     print("re-submitted study: 100% cache hits, 0 new fits")
 
+    # Spatial traffic batches across requests too (route registry): 8
+    # same-shape noisy slices -> ONE per-lane-masked stencil solve.
+    noisy = [phantom.noisy_phantom_slice(64, 64, noise=10.0, impulse=0.04,
+                                         seed=z)[0] for z in range(8)]
+    sres = engine.segment(noisy, method="spatial")
     s = engine.stats()
+    assert s["spatial_batches"] == 1 and s["spatial_batched_images"] == 8
+    print(f"spatial study: {len(sres)} FCM_S requests served in "
+          f"{s['spatial_batches']} batched stencil solve")
+
     print(f"stats: requests={s['requests']} cache_hit_rate="
           f"{s['cache_hit_rate']:.2f} batched_images={s['batched_images']} "
           f"padded_lanes={s['padded_lanes']} "

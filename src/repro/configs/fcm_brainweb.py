@@ -26,6 +26,10 @@ class FCMJobConfig:
     superpixel: SuperpixelFCMConfig = SuperpixelFCMConfig(
         n_clusters=4, m=2.0, eps=5e-3, max_iters=300,
         n_segments=256, compactness=10.0, slic_iters=10)
+    # Serving: the static bucket ladder every route pads to (one jit
+    # signature per (bucket, payload shape); see serving/fcm_engine.py
+    # route registry), shared by the examples and the throughput bench.
+    serving_batch_sizes: tuple = (1, 8, 16, 64)
     # (gaussian sigma, impulse fraction) noise sweep for robustness evals
     noise_levels = NOISE_LEVELS
     # paper Table 3 dataset sizes (bytes)

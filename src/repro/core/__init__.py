@@ -1,11 +1,19 @@
-# The paper's primary contribution: Fuzzy C-Means, paper-faithful and
-# beyond-paper variants. See DESIGN.md §2 and §6.
-from . import batched, distributed, fcm, histogram, sequential, spatial  # noqa: F401,E501
+# The paper's primary contribution: Fuzzy C-Means. One solver core
+# (core/solver.py) runs every variant — pixels, histogram, superpixel
+# rows, FCM_S stencils, single or batched — and the legacy fit_* entry
+# points survive as deprecated thin adapters. See DESIGN.md §2 and §6.
+from . import (batched, distributed, fcm, histogram, sequential,  # noqa: F401
+               solver, spatial, vector_fcm)
+from .solver import (FCMProblem, StencilSpec, BatchedFCMResult,  # noqa: F401
+                     batch_problems, histogram_problem, pixel_problem,
+                     solve, solve_batched, solve_staged, spatial_problem,
+                     vector_problem, weighted_center_step)
 from .fcm import (FCMConfig, FCMResult, defuzzify, fit_baseline,  # noqa: F401
                   fit_fused, labels_from_centers, objective,
                   update_centers, update_membership)
 from .histogram import fit_histogram  # noqa: F401
 from .distributed import fit_sharded  # noqa: F401
-from .batched import (BatchedFCMResult, fit_batched,  # noqa: F401
+from .batched import (fit_batched,  # noqa: F401
                       fit_batched_pixels, fit_batched_sharded)
 from .spatial import SpatialFCMConfig, fit_spatial  # noqa: F401
+from .vector_fcm import fit_vector_fcm, fit_vector_batched  # noqa: F401

@@ -4,20 +4,17 @@ The paper parallelizes one image's FCM across CUDA threads; this module
 parallelizes *across images*. Histogram compression (see
 :mod:`repro.core.histogram`) is what makes the batch regular: any 8-bit
 image, whatever its pixel count, reduces to a fixed ``(n_bins,)`` weight
-vector, so B independent fits become one ``(B, n_bins)`` vmapped weighted
-fixed point — a single device launch per iteration instead of B.
+vector, so B independent fits become one vmapped weighted fixed point —
+a single device launch per iteration instead of B.
 
-Convergence is per-image: each batch lane carries a done flag inside one
-``lax.while_loop``; converged lanes freeze (their centers stop moving and
-their iteration counters stop), and the loop exits when every lane is done
-or ``max_iters`` is reached. This makes a lane's trajectory identical to
-what :func:`repro.core.histogram.fit_histogram` would have produced for
-that image alone — validated in tests.
-
-Three entry points:
+Since the solver unification the per-lane-masked convergence loop lives
+in :func:`repro.core.solver.masked_while_centers` (lanes freeze at their
+own convergence point, so a lane's trajectory is identical to a solo
+fit — validated in tests), and the entry points here are deprecated
+thin adapters over :func:`repro.core.solver.solve_batched`:
 
 * :func:`fit_batched` — histograms (or images, histogrammed on ingest)
-  -> per-image centers / iteration counts / deltas. The serving path.
+  -> per-image centers / iteration counts / deltas.
 * :func:`fit_batched_pixels` — same masking machinery over raw ``(B, N)``
   same-shape pixel batches (float data that does not quantize to bins).
 * :func:`build_sharded_batched_fit` — shard_map variant splitting the
@@ -27,8 +24,7 @@ Three entry points:
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import lru_cache, partial
+from functools import lru_cache
 from typing import List, Optional, Sequence, Union
 
 import jax
@@ -38,103 +34,21 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import fcm as F
 from . import histogram as H
+from . import solver as SV
 from .distributed import mesh_axes, shard_map
+from .solver import BatchedFCMResult  # noqa: F401  (canonical home moved)
 
-_BIG = 3.4e38
-
-
-@dataclasses.dataclass
-class BatchedFCMResult:
-    """Per-image results of a batched fit."""
-    centers: jax.Array            # (B, c)
-    n_iters: np.ndarray           # (B,) int32, per-image iteration counts
-    final_delta: np.ndarray       # (B,) float32, per-image last center move
-    total_iters: int              # global while_loop trip count
-    labels: Optional[List[np.ndarray]] = None   # per image, if images given
+#: Backward-compat alias: the per-lane-masked while_loop now lives in
+#: the solver core.
+_masked_while = SV.masked_while_centers
 
 
-# ---------------------------------------------------------------------------
-# Batched init: per-image linspace centers + eps from histogram support
-# ---------------------------------------------------------------------------
-
-def _hist_support(hists: jax.Array, vals: jax.Array):
-    """Per-image (lo, hi) of the nonzero histogram support; (B,), (B,)."""
-    nz = hists > 0
-    lo = jnp.min(jnp.where(nz, vals[None, :], _BIG), axis=1)
-    hi = jnp.max(jnp.where(nz, vals[None, :], -_BIG), axis=1)
-    return lo, hi
-
-
-def _linspace_init(lo: jax.Array, hi: jax.Array, c: int, eps: float):
-    """Per-image linspace centers (B, c) + center-movement tolerance (B,)
-    from per-image data ranges, matching fit_histogram's init/eps scaling."""
-    frac = (jnp.arange(c, dtype=jnp.float32) + 0.5) / c
-    v0 = lo[:, None] + frac[None, :] * (hi - lo)[:, None]
-    rng = hi - lo
-    eps_v = eps * jnp.where(rng > 0, rng, 1.0) * 0.1
-    return v0, eps_v
-
-
-def _batched_init(hists: jax.Array, vals: jax.Array, c: int, eps: float):
-    """v0/eps_v per lane from the nonzero histogram support."""
-    lo, hi = _hist_support(hists, vals)
-    return _linspace_init(lo, hi, c, eps)
-
-
-# ---------------------------------------------------------------------------
-# The masked batched fixed point
-# ---------------------------------------------------------------------------
-
-def _masked_while(step, v0, eps_v, max_iters):
-    """Run ``v_new = step(v)`` (batched, (B, c) -> (B, c)) to per-lane
-    convergence inside ONE while_loop. Converged lanes freeze; the loop
-    exits when all lanes are done or at max_iters. Returns
-    (v, delta (B,), iters (B,), total_it)."""
-    b = v0.shape[0]
-
-    def cond(state):
-        _, _, _, done, it = state
-        return jnp.logical_and(jnp.logical_not(jnp.all(done)), it < max_iters)
-
-    def body(state):
-        v, delta, iters, done, it = state
-        v_new = step(v)
-        # Frozen lanes keep their converged centers verbatim.
-        v_new = jnp.where(done[:, None], v, v_new)
-        d = jnp.max(jnp.abs(v_new - v), axis=1)
-        delta = jnp.where(done, delta, d)
-        iters = iters + jnp.where(done, 0, 1).astype(jnp.int32)
-        done = jnp.logical_or(done, d < eps_v)
-        return v_new, delta, iters, done, it + 1
-
-    state = (v0,
-             jnp.full((b,), jnp.inf, jnp.float32),
-             jnp.zeros((b,), jnp.int32),
-             jnp.zeros((b,), bool),
-             jnp.asarray(0, jnp.int32))
-    v, delta, iters, done, it = jax.lax.while_loop(cond, body, state)
-    return v, delta, iters, it
-
-
-@partial(jax.jit, static_argnames=("c", "m", "max_iters"))
-def _batched_hist_loop(hists, c, m, eps, max_iters):
-    """hists (B, n_bins) -> (centers (B, c), delta (B,), iters (B,), it)."""
-    n_bins = hists.shape[1]
+def hist_rows(hists: jax.Array) -> jax.Array:
+    """(B, n_bins) histograms -> the (B, n_bins) scalar bin-value rows
+    they weigh (the batched histogram problem's features)."""
+    b, n_bins = hists.shape
     vals = jnp.arange(n_bins, dtype=jnp.float32)
-    v0, eps_v = _batched_init(hists, vals, c, eps)
-    step = jax.vmap(lambda w, v: H.weighted_center_step(vals, w, v, m),
-                    in_axes=(0, 0))
-    return _masked_while(lambda v: step(hists, v), v0, eps_v, max_iters)
-
-
-@partial(jax.jit, static_argnames=("c", "m", "max_iters"))
-def _batched_pixel_loop(xs, c, m, eps, max_iters):
-    """xs (B, N) same-shape pixel batch -> same outputs as the hist loop."""
-    v0, eps_v = _linspace_init(jnp.min(xs, axis=1), jnp.max(xs, axis=1),
-                               c, eps)
-    step = jax.vmap(lambda x, v: F.fused_center_step(x, v, m),
-                    in_axes=(0, 0))
-    return _masked_while(lambda v: step(xs, v), v0, eps_v, max_iters)
+    return jnp.broadcast_to(vals[None, :], (b, n_bins))
 
 
 # ---------------------------------------------------------------------------
@@ -152,12 +66,16 @@ def fit_batched(imgs_or_hists: Union[jax.Array, np.ndarray, Sequence],
                 cfg: F.FCMConfig = F.FCMConfig(),
                 n_bins: int = 256,
                 compute_labels: bool = True) -> BatchedFCMResult:
-    """Batched histogram-compressed FCM.
+    """DEPRECATED alias — use ``solver.solve_batched`` on a
+    ``batch_problems(hist_rows(hists), hists, cfg=cfg)`` stack.
 
-    ``imgs_or_hists`` is either a ``(B, n_bins)`` array of histograms, or
-    a sequence of images (any shapes/sizes — each is flattened and
-    histogrammed on ingest, and per-image labels are returned).
+    Batched histogram-compressed FCM. ``imgs_or_hists`` is either a
+    ``(B, n_bins)`` array of histograms, or a sequence of images (any
+    shapes/sizes — each is flattened and histogrammed on ingest, and
+    per-image labels are returned).
     """
+    SV.warn_deprecated("fit_batched",
+                       "solver.solve_batched(batch_problems(...))")
     imgs: Optional[List[np.ndarray]] = None
     if isinstance(imgs_or_hists, (jnp.ndarray, np.ndarray)) and \
             np.ndim(imgs_or_hists) == 2 and \
@@ -167,37 +85,36 @@ def fit_batched(imgs_or_hists: Union[jax.Array, np.ndarray, Sequence],
         imgs = [np.asarray(im) for im in imgs_or_hists]
         hists = histograms_of(imgs, n_bins)
 
-    v, delta, iters, it = _batched_hist_loop(
-        hists, cfg.n_clusters, cfg.m, cfg.eps, cfg.max_iters)
+    res = SV.solve_batched(
+        SV.batch_problems(hist_rows(hists), hists, cfg=cfg), cfg)
 
-    labels = None
     if imgs is not None and compute_labels:
         vals = jnp.arange(n_bins, dtype=jnp.float32)
         # 256-entry LUT per image: label every bin once, then gather.
         luts = np.asarray(jax.vmap(
-            lambda vv: F.labels_from_centers(vals, vv))(v))
-        labels = [luts[i][np.clip(im.astype(np.int64), 0, n_bins - 1)]
-                  for i, im in enumerate(imgs)]
-    return BatchedFCMResult(centers=v, n_iters=np.asarray(iters),
-                            final_delta=np.asarray(delta),
-                            total_iters=int(it), labels=labels)
+            lambda vv: F.labels_from_centers(vals, vv))(res.centers))
+        res.labels = [luts[i][np.clip(im.astype(np.int64), 0, n_bins - 1)]
+                      for i, im in enumerate(imgs)]
+    return res
 
 
 def fit_batched_pixels(xs, cfg: F.FCMConfig = F.FCMConfig(),
                        compute_labels: bool = True) -> BatchedFCMResult:
-    """Batched FCM over a same-shape pixel batch ``(B, N)`` (or (B, H, W),
-    flattened). For float-valued data that does not quantize to bins; for
-    8-bit images prefer :func:`fit_batched`."""
+    """DEPRECATED alias — use ``solver.solve_batched`` on a
+    ``batch_problems(xs, cfg=cfg)`` stack.
+
+    Batched FCM over a same-shape pixel batch ``(B, N)`` (or (B, H, W),
+    flattened). For float-valued data that does not quantize to bins;
+    for 8-bit images prefer the histogram compression."""
+    SV.warn_deprecated("fit_batched_pixels",
+                       "solver.solve_batched(batch_problems(xs))")
     xs = jnp.asarray(xs, jnp.float32)
     xs = xs.reshape(xs.shape[0], -1)
-    v, delta, iters, it = _batched_pixel_loop(
-        xs, cfg.n_clusters, cfg.m, cfg.eps, cfg.max_iters)
-    labels = None
+    res = SV.solve_batched(SV.batch_problems(xs, cfg=cfg), cfg)
     if compute_labels:
-        labels = list(np.asarray(jax.vmap(F.labels_from_centers)(xs, v)))
-    return BatchedFCMResult(centers=v, n_iters=np.asarray(iters),
-                            final_delta=np.asarray(delta),
-                            total_iters=int(it), labels=labels)
+        res.labels = list(np.asarray(
+            jax.vmap(F.labels_from_centers)(xs, res.centers)))
+    return res
 
 
 # ---------------------------------------------------------------------------
@@ -213,10 +130,10 @@ def build_sharded_batched_fit(mesh: Mesh,
     jitted closure instead of re-tracing per call.
 
     The batch axis is sharded over every mesh axis; each device runs the
-    masked batched loop on its local lanes with **zero** per-iteration
-    collectives (images are independent). B must divide by mesh.size.
-    Complements ``core/distributed.py``, which shards pixels of ONE image
-    and psums partial sums every iteration.
+    solver's masked batched loop on its local lanes with **zero**
+    per-iteration collectives (images are independent). B must divide by
+    mesh.size. Complements ``core/distributed.py``, which shards pixels
+    of ONE image and psums partial sums every iteration.
     """
     axes = mesh_axes(mesh)
     bspec = P(axes)                  # batch dim sharded over every axis
@@ -224,14 +141,9 @@ def build_sharded_batched_fit(mesh: Mesh,
     mi = cfg.max_iters if max_iters is None else max_iters
 
     def local_fit(hists):
-        n_bins = hists.shape[1]
-        vals = jnp.arange(n_bins, dtype=jnp.float32)
-        v0, eps_v = _batched_init(hists, vals, c, cfg.eps)
-        step = jax.vmap(lambda w, v: H.weighted_center_step(vals, w, v, m),
-                        in_axes=(0, 0))
-        v, delta, iters, _ = _masked_while(
-            lambda v: step(hists, v), v0, eps_v, mi)
-        return v, delta, iters
+        v, delta, iters, _ = SV._flat_batched_loop(
+            hist_rows(hists)[..., None], hists, c, m, cfg.eps, mi)
+        return v[..., 0], delta, iters
 
     fn = shard_map(local_fit, mesh=mesh,
                    in_specs=(P(axes, None),),

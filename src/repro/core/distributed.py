@@ -27,6 +27,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from . import fcm as F
 from . import histogram as H
+from . import solver as SV
 
 try:                                  # jax >= 0.6 exposes shard_map at top level
     _shard_map = jax.shard_map
@@ -94,21 +95,15 @@ def build_sharded_fit(mesh: Mesh, cfg: F.FCMConfig = F.FCMConfig()):
         v0 = lo + frac * (hi - lo)
         eps_v = cfg.eps * jnp.maximum(hi - lo, 1.0) * 0.1
 
-        def cond(state):
-            _, delta, it = state
-            return jnp.logical_and(delta >= eps_v, it < max_iters)
-
-        def body(state):
-            v, _, it = state
+        def step(v):
             num, den = masked_center_step(x, w, v, m)
             num = jax.lax.psum(num, axes)          # 2c floats on the wire
             den = jax.lax.psum(den, axes)
-            v_new = num / jnp.maximum(den, 1e-12)
-            return v_new, jnp.max(jnp.abs(v_new - v)), it + 1
+            return num / jnp.maximum(den, 1e-12)
 
-        state = (v0, jnp.asarray(jnp.inf, jnp.float32),
-                 jnp.asarray(0, jnp.int32))
-        v, delta, it = jax.lax.while_loop(cond, body, state)
+        # The convergence test is the solver core's — only the step
+        # (with its psums) is distributed-specific.
+        v, delta, it = SV.while_centers(step, v0, eps_v, max_iters)
         labels = F.labels_from_centers(x, v)
         return v, labels, delta, it
 
@@ -140,18 +135,11 @@ def build_sharded_histogram_fit(mesh: Mesh,
         v0 = lo + frac * (hi - lo)
         eps_v = cfg.eps * jnp.maximum(hi - lo, 1.0) * 0.1
 
-        def cond(state):
-            _, delta, it = state
-            return jnp.logical_and(delta >= eps_v, it < cfg.max_iters)
-
-        def body(state):
-            v, _, it = state
-            v_new = H.weighted_center_step(vals, hist, v, m)
-            return v_new, jnp.max(jnp.abs(v_new - v)), it + 1
-
-        state = (v0, jnp.asarray(jnp.inf, jnp.float32),
-                 jnp.asarray(0, jnp.int32))
-        v, delta, it = jax.lax.while_loop(cond, body, state)
+        # Post-psum the loop is fully local/replicated: plain weighted
+        # FCM over 256 rows, driven by the solver core's loop.
+        v, delta, it = SV.while_centers(
+            lambda v: H.weighted_center_step(vals, hist, v, m),
+            v0, eps_v, cfg.max_iters)
         labels = F.labels_from_centers(x, v)
         return v, labels, delta, it
 

@@ -8,18 +8,14 @@ pixel axis minor-most so TPU tiles are (8, 128)-lane aligned; the paper's
 Features ``x`` may be ``(N,)`` (grayscale, the paper's case) or ``(N, F)``.
 Centers are ``(c,)`` or ``(c, F)`` correspondingly.
 
-Two fit paths are provided:
-
-* :func:`fit_baseline` — the paper-faithful pipeline: random membership
-  init, then per iteration the same five stages the paper launches as
-  CUDA kernels (per-pixel num/den terms -> reduce num -> reduce den ->
-  combine -> membership update), with the membership array materialized
-  between stages and the convergence test on the host, exactly like the
-  paper's host loop.
-* :func:`fit_fused` — the beyond-paper path: the fixed point only needs
-  centers, so the whole iteration runs device-resident inside
-  ``lax.while_loop`` with no membership materialization. Memberships are
-  computed once at the end for defuzzification.
+This module owns the elementary FCM math (Eqs. 1, 3, 4, inits,
+defuzzification) that every variant shares. The fit entry points
+:func:`fit_baseline` (paper-faithful staged pipeline, host convergence
+test) and :func:`fit_fused` (device-resident fused fixed point) are
+**deprecated thin adapters** over the unified solver core — build an
+:class:`repro.core.solver.FCMProblem` and call
+:func:`repro.core.solver.solve` instead (``backend="staged"`` for the
+paper-faithful pipeline).
 """
 from __future__ import annotations
 
@@ -184,49 +180,20 @@ def _stage_membership(x, v, m):
 def fit_baseline(x: jax.Array, cfg: FCMConfig = FCMConfig(),
                  use_pallas: bool = False,
                  u0: Optional[jax.Array] = None) -> FCMResult:
-    """Paper-faithful FCM: staged 'kernels', membership in HBM between
-    stages, host-side convergence test each iteration (the paper copies
-    the membership array back to the host to test it).
+    """DEPRECATED alias for the paper-faithful staged pipeline — use
+    ``solver.solve(solver.pixel_problem(x, cfg), backend="staged")``.
 
-    With ``use_pallas=True`` the per-stage math runs through the Pallas
-    kernels in :mod:`repro.kernels` (interpret mode on CPU)."""
-    x = jnp.asarray(x, jnp.float32)
-    n = x.shape[0]
-    c = cfg.n_clusters
-    key = jax.random.PRNGKey(cfg.seed)
-    u = random_membership(key, c, n) if u0 is None else jnp.asarray(
-        u0, jnp.float32)
-    if use_pallas:
-        from repro.kernels import ops as kops
-
-    n_iters = 0
-    delta = jnp.inf
-    v = None
-    for it in range(cfg.max_iters):
-        if use_pallas and x.ndim == 1:
-            num, den = kops.center_partials(x, u, cfg.m)
-            v = _stage_combine(num, den)
-            v = v[:, 0]
-            u_new = kops.membership(x, v, cfg.m)
-        else:
-            num_terms, den_terms = _stage_terms(x, u, cfg.m)
-            num = _stage_reduce_num(num_terms)
-            den = _stage_reduce_den(den_terms)
-            v = _stage_combine(num, den)
-            v = v[:, 0] if x.ndim == 1 else v
-            u_new = _stage_membership(x, v, cfg.m)
-        # Host round-trip, as in the paper's block diagram.
-        delta = float(jnp.max(jnp.abs(u_new - u)))
-        u = u_new
-        n_iters = it + 1
-        if delta < cfg.eps:
-            break
-    if v is None:
-        # max_iters=0: centers from the initial membership, so the result
-        # is still well-defined.
-        v = update_centers(x, u, cfg.m)
-    return FCMResult(centers=v, labels=defuzzify(u), n_iters=n_iters,
-                     final_delta=delta, membership=u)
+    Staged 'kernels', membership in HBM between stages, host-side
+    convergence test each iteration (the paper copies the membership
+    array back to the host to test it). With ``use_pallas=True`` the
+    per-stage math runs through the Pallas kernels in
+    :mod:`repro.kernels` (interpret mode on CPU)."""
+    from . import solver as SV
+    SV.warn_deprecated("fit_baseline",
+                       "solver.solve(pixel_problem(x), backend='staged')")
+    return SV.solve_staged(SV.pixel_problem(x, cfg), eps=cfg.eps,
+                           max_iters=cfg.max_iters, seed=cfg.seed, u0=u0,
+                           keep_membership=True, use_pallas=use_pallas)
 
 
 # --- fused, device-resident path ---------------------------------------------
@@ -234,55 +201,29 @@ def fit_baseline(x: jax.Array, cfg: FCMConfig = FCMConfig(),
 @partial(jax.jit, static_argnames=("m",))
 def fused_center_step(x: jax.Array, v: jax.Array, m: float) -> jax.Array:
     """One v -> v' fixed-point step with Eq. 4 substituted into Eq. 3;
-    memberships exist only as registers/VMEM inside the step."""
+    memberships exist only as registers/VMEM inside the step. (The
+    unit-weight scalar case of
+    :func:`repro.core.solver.weighted_center_step`.)"""
     u = update_membership(x, v, m)
     return update_centers(x, u, m)
 
 
 def _while_centers(step, v0, eps, max_iters):
-    """Generic device-resident center fixed point: iterate ``v -> step(v)``
-    until ``max|v' - v| < eps`` or ``max_iters``. Shared by the fused and
-    spatial (FCM_S) fit paths so the convergence test cannot drift.
-    Returns (v, delta, it)."""
-    def cond(state):
-        _, delta, it = state
-        return jnp.logical_and(delta >= eps, it < max_iters)
-
-    def body(state):
-        v, _, it = state
-        v_new = step(v)
-        delta = jnp.max(jnp.abs(v_new - v))
-        return v_new, delta, it + 1
-
-    state = (jnp.asarray(v0, jnp.float32),
-             jnp.asarray(jnp.inf, jnp.float32),
-             jnp.asarray(0, jnp.int32))
-    return jax.lax.while_loop(cond, body, state)
-
-
-@partial(jax.jit, static_argnames=("c", "m", "max_iters"))
-def _fused_loop(x, v0, c, m, eps, max_iters):
-    return _while_centers(lambda v: fused_center_step(x, v, m), v0, eps,
-                          max_iters)
+    """Backward-compat alias: THE convergence loop now lives in
+    :func:`repro.core.solver.while_centers`."""
+    from . import solver as SV
+    return SV.while_centers(step, v0, eps, max_iters)
 
 
 def fit_fused(x: jax.Array, cfg: FCMConfig = FCMConfig(),
               v0: Optional[jax.Array] = None,
               keep_membership: bool = False) -> FCMResult:
-    """Optimized FCM: device-resident while_loop over the fused center
-    iteration, deterministic linspace init, center-movement convergence.
-    Validated equivalent to :func:`fit_baseline` in tests."""
-    x = jnp.asarray(x, jnp.float32)
-    if v0 is None:
-        v0 = linspace_centers(x, cfg.n_clusters)
-    # eps on centers: the membership test at eps_u corresponds to a center
-    # test at roughly eps_u * data-range / c (Lipschitz); use eps directly
-    # in intensity units scaled by the data range.
-    rng = float(jnp.max(x) - jnp.min(x)) or 1.0
-    eps_v = cfg.eps * rng * 0.1
-    v, delta, it = _fused_loop(x, v0, cfg.n_clusters, cfg.m, eps_v,
-                               cfg.max_iters)
-    u = update_membership(x, v, cfg.m) if keep_membership else None
-    labels = labels_from_centers(x, v)
-    return FCMResult(centers=v, labels=labels, n_iters=int(it),
-                     final_delta=float(delta), membership=u)
+    """DEPRECATED alias for the fused device-resident fit — use
+    ``solver.solve(solver.pixel_problem(x, cfg))``.
+
+    Device-resident while_loop over the fused center iteration,
+    deterministic linspace init, center-movement convergence."""
+    from . import solver as SV
+    SV.warn_deprecated("fit_fused", "solver.solve(pixel_problem(x, cfg))")
+    return SV.solve(SV.pixel_problem(x, cfg, v0=v0), cfg,
+                    backend="reference", keep_membership=keep_membership)

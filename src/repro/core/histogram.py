@@ -69,43 +69,28 @@ def weighted_membership(vals: jax.Array, v: jax.Array, m: float) -> jax.Array:
 
 def weighted_center_step(vals: jax.Array, w: jax.Array, v: jax.Array,
                          m: float) -> jax.Array:
-    """Fused v -> v' step over (value, weight) pairs."""
-    u = F.update_membership(vals, v, m)          # (c, 256)
-    um = (u ** m) * w[None, :]
-    num = um @ vals
-    den = jnp.maximum(jnp.sum(um, axis=1), 1e-12)
-    return num / den
-
-
-@partial(jax.jit, static_argnames=("c", "m", "max_iters"))
-def _hist_loop(vals, w, v0, c, m, eps, max_iters):
-    def cond(state):
-        _, delta, it = state
-        return jnp.logical_and(delta >= eps, it < max_iters)
-
-    def body(state):
-        v, _, it = state
-        v_new = weighted_center_step(vals, w, v, m)
-        return v_new, jnp.max(jnp.abs(v_new - v)), it + 1
-
-    state = (v0, jnp.asarray(jnp.inf, jnp.float32), jnp.asarray(0, jnp.int32))
-    return jax.lax.while_loop(cond, body, state)
+    """Fused v -> v' step over (value, weight) pairs — the scalar face of
+    the canonical :func:`repro.core.solver.weighted_center_step`."""
+    from . import solver as SV
+    out = SV.weighted_center_step(vals, w, F._as_2d(v), m)
+    return out[:, 0] if jnp.ndim(v) == 1 else out
 
 
 def fit_histogram(x: jax.Array, cfg: F.FCMConfig = F.FCMConfig(),
                   n_bins: int = 256,
                   hist: Optional[jax.Array] = None) -> F.FCMResult:
-    """FCM via histogram compression. ``hist`` may be supplied directly
-    (e.g. a psum-merged global histogram in the distributed path)."""
+    """DEPRECATED alias — use
+    ``solver.solve(solver.histogram_problem(x, cfg))``.
+
+    FCM via histogram compression. ``hist`` may be supplied directly
+    (e.g. a psum-merged global histogram in the distributed path);
+    labels still come back per-pixel."""
+    from . import solver as SV
+    SV.warn_deprecated("fit_histogram",
+                       "solver.solve(histogram_problem(x, cfg))")
     x = jnp.asarray(x, jnp.float32)
-    if hist is None:
-        hist = intensity_histogram(x, n_bins)
-    vals = jnp.arange(n_bins, dtype=jnp.float32)
-    v0 = F.linspace_centers(x, cfg.n_clusters)
-    rng = float(jnp.max(x) - jnp.min(x)) or 1.0
-    eps_v = cfg.eps * rng * 0.1
-    v, delta, it = _hist_loop(vals, hist, v0, cfg.n_clusters, cfg.m, eps_v,
-                              cfg.max_iters)
-    labels = F.labels_from_centers(x, v)
-    return F.FCMResult(centers=v, labels=labels, n_iters=int(it),
-                       final_delta=float(delta))
+    problem = SV.histogram_problem(x, cfg, hist=hist, n_bins=n_bins)
+    res = SV.solve(problem, cfg, backend="reference")
+    return F.FCMResult(centers=res.centers,
+                       labels=F.labels_from_centers(x, res.centers),
+                       n_iters=res.n_iters, final_delta=res.final_delta)

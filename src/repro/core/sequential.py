@@ -12,6 +12,11 @@ Java reference. Two fidelity levels are provided:
   on this container (a Python interpreter loop would understate the
   paper's C baseline by ~100x; numpy is the closest stand-in for
   compiled single-core C).
+
+Both sit behind the unified solver as
+``repro.core.solver.solve(pixel_problem(x), backend="sequential")`` —
+the paper's CPU-vs-device comparison (benchmarks/table3_speedup.py)
+runs every side from that one entry point.
 """
 from __future__ import annotations
 

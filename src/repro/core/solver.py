@@ -1,0 +1,670 @@
+"""The unified weighted-feature FCM solver core.
+
+Every FCM variant in this repo is the same algorithm wearing a different
+feature map: the fixed point iterates ``v -> step(v)`` where ``step``
+substitutes the Eq. 4 membership into the Eq. 3 weighted center update
+over some set of (feature row, weight) pairs —
+
+=============  ==========================  =====================
+variant        feature rows                row weights
+=============  ==========================  =====================
+pixels         ``(N,)`` / ``(N, D)``       1
+histogram      256 bin values              bin counts
+superpixels    ``(K, D)`` mean features    pixel counts
+FCM_S          the pixel grid + stencil    1 (stencil-effective)
+=============  ==========================  =====================
+
+This module owns that fixed point **once**: :class:`FCMProblem` names the
+feature map, :func:`solve` runs it, and :func:`solve_batched` runs a
+stacked batch of independent problems with per-lane convergence masking.
+The two ``lax.while_loop`` drivers (:func:`while_centers`,
+:func:`masked_while_centers`) here are the ONLY convergence loops in the
+repo — the legacy ``fit_*`` entry points in :mod:`repro.core.fcm`,
+``histogram``, ``spatial``, ``vector_fcm`` and ``batched`` are deprecated
+thin adapters over this module, and the distributed/SLIC fixed points
+drive their steps through the same loops.
+
+Step implementations (pure-jnp reference vs the Pallas kernels) are
+selected through the dispatch registry in :mod:`repro.kernels.ops` by
+problem shape and platform; ``backend=`` forces a choice:
+
+* ``"auto"``       — registry pick (Pallas on TPU where eligible,
+  pure-jnp reference elsewhere),
+* ``"reference"``  — pure-jnp step,
+* ``"pallas"``     — Pallas kernels (interpret mode off-TPU; tests only),
+* ``"staged"``     — the paper-faithful host loop: staged kernels,
+  membership materialized between stages, host-side ``|u' - u|_inf``
+  convergence test (what :func:`repro.core.fcm.fit_baseline` wraps),
+* ``"sequential"`` — the single-core numpy comparator from
+  :mod:`repro.core.sequential` (the paper's CPU baseline), so the
+  paper's CPU-vs-device comparison runs from this one entry point.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import fcm as F
+
+_D2_FLOOR = 1e-12
+_BIG = 3.4e38
+
+BACKENDS = ("auto", "reference", "pallas", "staged", "sequential")
+
+
+def warn_deprecated(old: str, new: str) -> None:
+    """One-release deprecation shim for the legacy ``fit_*`` aliases."""
+    warnings.warn(
+        f"{old} is deprecated; build an FCMProblem and call {new} "
+        f"(see README 'Migrating from the fit_* zoo')",
+        DeprecationWarning, stacklevel=3)
+
+
+# ---------------------------------------------------------------------------
+# Problem specification
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StencilSpec:
+    """FCM_S neighborhood regularization (Ahmed-style).
+
+    ``alpha`` weighs the neighborhood penalty (0 degenerates to plain
+    FCM); ``neighbors`` is the stencil arity — 4 or 8 for 2-D images,
+    6 for 3-D volumes.
+    """
+    alpha: float = 1.0
+    neighbors: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class FCMProblem:
+    """One weighted-feature FCM problem (or a stacked batch of them).
+
+    ``features`` is ``(K,)`` / ``(K, D)`` weighted rows for flat
+    problems, or the raw pixel grid ``(H, W)`` / ``(D, H, W)`` when
+    ``stencil`` is set (FCM_S needs positions, so it cannot reduce to
+    rows). With ``batch=True`` a leading lane axis is added everywhere
+    and lanes are independent problems. ``weights`` are per-row
+    multiplicities (``None`` = 1; stencil problems take no weights).
+    ``init`` overrides the default weighted-support linspace ``v0``.
+    """
+    features: Any
+    weights: Any = None
+    c: int = 4
+    m: float = 2.0
+    stencil: Optional[StencilSpec] = None
+    init: Any = None
+    batch: bool = False
+
+    def __post_init__(self):
+        feats = jnp.asarray(self.features, jnp.float32)
+        object.__setattr__(self, "features", feats)
+        if self.weights is not None:
+            object.__setattr__(self, "weights",
+                               jnp.asarray(self.weights, jnp.float32))
+        if self.init is not None:
+            object.__setattr__(self, "init",
+                               jnp.asarray(self.init, jnp.float32))
+        lead = 1 if self.batch else 0
+        if self.stencil is not None:
+            if self.weights is not None:
+                raise ValueError("stencil problems take no row weights "
+                                 "(every grid pixel weighs 1)")
+            if feats.ndim - lead not in (2, 3):
+                raise ValueError(
+                    f"stencil problems need a (H, W) or (D, H, W) pixel "
+                    f"grid{' per lane' if self.batch else ''}, got shape "
+                    f"{feats.shape}")
+            ndim = feats.ndim - lead
+            ok = (4, 8) if ndim == 2 else (6,)
+            if self.stencil.neighbors not in ok:
+                raise ValueError(
+                    f"{ndim}-D neighborhoods are "
+                    f"{' or '.join(map(str, ok))}-connected, got "
+                    f"{self.stencil.neighbors}")
+        else:
+            if feats.ndim - lead not in (1, 2):
+                raise ValueError(
+                    f"flat problems need (K,) or (K, D) feature rows"
+                    f"{' per lane' if self.batch else ''}, got shape "
+                    f"{feats.shape}")
+
+    # -- shape helpers -----------------------------------------------------
+
+    @property
+    def scalar(self) -> bool:
+        """True when centers should come back featureless, shape (c,)."""
+        lead = 1 if self.batch else 0
+        if self.stencil is not None:
+            return True
+        return self.features.ndim - lead == 1
+
+    @property
+    def n_feat(self) -> int:
+        if self.scalar:
+            return 1
+        return self.features.shape[-1]
+
+    def rows(self) -> Tuple[jax.Array, jax.Array]:
+        """Canonical ``(K, D)`` rows + ``(K,)`` weights (flat problems;
+        with ``batch=True`` a leading lane axis on both)."""
+        if self.stencil is not None:
+            raise ValueError("stencil problems have no flat rows")
+        feats = self.features
+        lead = 1 if self.batch else 0
+        if feats.ndim - lead == 1:
+            feats = feats[..., None]
+        w = self.weights
+        if w is None:
+            w = jnp.ones(feats.shape[:-1], jnp.float32)
+        return feats, w
+
+
+# -- problem factories (what the deprecated fit_* adapters build) -----------
+
+def _cfg_c_m(cfg, c, m):
+    if cfg is not None:
+        c = cfg.n_clusters if c is None else c
+        m = cfg.m if m is None else m
+    return (4 if c is None else int(c)), (2.0 if m is None else float(m))
+
+
+def pixel_problem(x, cfg: Optional[F.FCMConfig] = None, *,
+                  c: Optional[int] = None, m: Optional[float] = None,
+                  v0=None) -> FCMProblem:
+    """Uncompressed pixels (the paper's problem): ``x`` is ``(N,)``
+    grayscale or ``(N, D)`` feature rows, every row weighing 1."""
+    c, m = _cfg_c_m(cfg, c, m)
+    return FCMProblem(features=x, c=c, m=m, init=v0)
+
+
+def histogram_problem(x=None, cfg: Optional[F.FCMConfig] = None, *,
+                      hist=None, n_bins: int = 256,
+                      c: Optional[int] = None, m: Optional[float] = None,
+                      v0=None) -> FCMProblem:
+    """Histogram-compressed scalar FCM: ``n_bins`` (value, count) rows.
+    Pass pixels ``x`` (histogrammed on ingest) or a prebuilt ``hist``."""
+    from . import histogram as H
+    c, m = _cfg_c_m(cfg, c, m)
+    if hist is None:
+        if x is None:
+            raise ValueError("histogram_problem needs pixels x or a hist")
+        hist = H.intensity_histogram(jnp.asarray(x, jnp.float32), n_bins)
+    vals = jnp.arange(n_bins, dtype=jnp.float32)
+    return FCMProblem(features=vals, weights=hist, c=c, m=m, init=v0)
+
+
+def vector_problem(feats, weights=None, cfg: Optional[F.FCMConfig] = None, *,
+                   c: Optional[int] = None, m: Optional[float] = None,
+                   v0=None) -> FCMProblem:
+    """Weighted vector rows (the superpixel-compression payload)."""
+    c, m = _cfg_c_m(cfg, c, m)
+    return FCMProblem(features=feats, weights=weights, c=c, m=m, init=v0)
+
+
+def spatial_problem(img, cfg=None, *, alpha: Optional[float] = None,
+                    neighbors: Optional[int] = None,
+                    c: Optional[int] = None, m: Optional[float] = None,
+                    v0=None) -> FCMProblem:
+    """FCM_S over a 2-D image or 3-D volume. ``cfg`` may be a
+    :class:`repro.core.spatial.SpatialFCMConfig` (supplies
+    alpha/neighbors too); 3-D volumes always use the 6-stencil."""
+    c, m = _cfg_c_m(cfg, c, m)
+    if alpha is None:
+        alpha = getattr(cfg, "alpha", 1.0)
+    if neighbors is None:
+        neighbors = getattr(cfg, "neighbors", 4)
+    img = jnp.asarray(img, jnp.float32)
+    if img.ndim == 3:
+        neighbors = 6
+    return FCMProblem(features=img, c=c, m=m,
+                      stencil=StencilSpec(alpha=float(alpha),
+                                          neighbors=int(neighbors)),
+                      init=v0)
+
+
+def batch_problems(features, weights=None, *, stencil=None,
+                   cfg: Optional[F.FCMConfig] = None,
+                   c: Optional[int] = None,
+                   m: Optional[float] = None) -> FCMProblem:
+    """Stack same-shape independent problems along a leading lane axis:
+    flat ``(B, K[, D])`` rows (+ ``(B, K)`` weights) or stencil
+    ``(B, H, W)`` / ``(B, D, H, W)`` grids."""
+    c, m = _cfg_c_m(cfg, c, m)
+    return FCMProblem(features=features, weights=weights, c=c, m=m,
+                      stencil=stencil, batch=True)
+
+
+# ---------------------------------------------------------------------------
+# The canonical center update and convergence loops
+# ---------------------------------------------------------------------------
+
+def weighted_center_step(feats: jax.Array, w: jax.Array, v: jax.Array,
+                         m: float) -> jax.Array:
+    """THE core update: one fused ``v -> v'`` step of weighted FCM.
+
+    Eq. 4 membership on the rows substituted into the weighted Eq. 3
+    center update; memberships never leave the step. ``feats`` ``(K,)``
+    or ``(K, D)``, ``w`` ``(K,)`` (zero rows are inert), ``v`` ``(c, D)``
+    -> ``(c, D)``. With unit weights and scalar rows this is bitwise
+    :func:`repro.core.fcm.fused_center_step`.
+    """
+    feats2 = F._as_2d(feats)
+    u = F.update_membership(feats2, v, m)                 # (c, K)
+    um = (u ** m) * w[None, :]
+    # broadcast-multiply-sum rather than `um @ feats2`: the reduction
+    # order matches fcm.update_centers bitwise, which is what keeps the
+    # unit-weight case (and FCM_S at alpha=0, which goes through
+    # update_centers) iteration-for-iteration identical to this step —
+    # the parity the adapter tests pin. XLA fuses the product into the
+    # reduction, and with c ~ 4 the matmul would not be MXU-bound anyway.
+    num = jnp.sum(um[:, :, None] * feats2[None, :, :], axis=1)
+    den = jnp.maximum(jnp.sum(um, axis=1)[:, None], _D2_FLOOR)
+    return num / den
+
+
+def while_centers(step, v0, tol, max_iters):
+    """Device-resident center fixed point: iterate ``v -> step(v)`` until
+    ``max|v' - v| < tol`` or ``max_iters``. Returns ``(v, delta, it)``.
+
+    This (plus :func:`masked_while_centers`) is the only FCM convergence
+    loop in the repo; every variant's trajectory is defined by it.
+    """
+    def cond(state):
+        _, delta, it = state
+        return jnp.logical_and(delta >= tol, it < max_iters)
+
+    def body(state):
+        v, _, it = state
+        v_new = step(v)
+        delta = jnp.max(jnp.abs(v_new - v))
+        return v_new, delta, it + 1
+
+    state = (jnp.asarray(v0, jnp.float32),
+             jnp.asarray(jnp.inf, jnp.float32),
+             jnp.asarray(0, jnp.int32))
+    return jax.lax.while_loop(cond, body, state)
+
+
+def masked_while_centers(step, v0, tol, max_iters):
+    """Per-lane-masked batched fixed point: run ``v' = step(v)``
+    (``(B, cd) -> (B, cd)``) until every lane's ``max|v' - v| < tol[b]``
+    or ``max_iters``, inside ONE while_loop. Converged lanes freeze
+    (centers verbatim, iteration counters stop), so each lane's
+    trajectory is identical to a solo :func:`while_centers` run.
+    Returns ``(v, delta (B,), iters (B,), total_it)``."""
+    b = v0.shape[0]
+
+    def cond(state):
+        _, _, _, done, it = state
+        return jnp.logical_and(jnp.logical_not(jnp.all(done)), it < max_iters)
+
+    def body(state):
+        v, delta, iters, done, it = state
+        v_new = step(v)
+        v_new = jnp.where(done[:, None], v, v_new)
+        d = jnp.max(jnp.abs(v_new - v), axis=1)
+        delta = jnp.where(done, delta, d)
+        iters = iters + jnp.where(done, 0, 1).astype(jnp.int32)
+        done = jnp.logical_or(done, d < tol)
+        return v_new, delta, iters, done, it + 1
+
+    state = (v0,
+             jnp.full((b,), jnp.inf, jnp.float32),
+             jnp.zeros((b,), jnp.int32),
+             jnp.zeros((b,), bool),
+             jnp.asarray(0, jnp.int32))
+    v, delta, iters, done, it = jax.lax.while_loop(cond, body, state)
+    return v, delta, iters, it
+
+
+# ---------------------------------------------------------------------------
+# Init + tolerance from the weighted feature support
+# ---------------------------------------------------------------------------
+
+def weighted_support(feats2: jax.Array, w: jax.Array):
+    """Per-dimension (lo, hi) over rows with nonzero weight — empty
+    superpixels, zero histogram bins and batch padding must stretch
+    neither the init nor the tolerance. ``(K, D)``, ``(K,)`` -> (D,) x2."""
+    active = (w > 0)[:, None]
+    lo = jnp.min(jnp.where(active, feats2, _BIG), axis=0)
+    hi = jnp.max(jnp.where(active, feats2, -_BIG), axis=0)
+    return lo, hi
+
+
+def linspace_from_support(lo: jax.Array, hi: jax.Array, c: int) -> jax.Array:
+    """lo/hi (..., D) -> per-dimension linspace centers (..., c, D)."""
+    frac = (jnp.arange(c, dtype=lo.dtype) + 0.5) / c
+    shape = (1,) * (lo.ndim - 1) + (c, 1)
+    return lo[..., None, :] + frac.reshape(shape) * (hi - lo)[..., None, :]
+
+
+def _tol_from_range(rng, eps):
+    """Center-movement tolerance: the membership test at eps corresponds
+    to a center test at ~eps * data-range (Lipschitz); scaled by 0.1."""
+    return eps * jnp.where(rng > 0, rng, 1.0) * 0.1
+
+
+def _single_init(problem: FCMProblem, eps: float, tol: Optional[float]):
+    """Concrete (v0 (c, D), tol) for one problem (eager, like fit_*)."""
+    if problem.stencil is not None:
+        flat = problem.features.reshape(-1, 1)
+        w = jnp.ones((flat.shape[0],), jnp.float32)
+    else:
+        flat, w = problem.rows()
+    lo, hi = weighted_support(flat, w)
+    if problem.init is not None:
+        v0 = F._as_2d(problem.init)
+    else:
+        v0 = linspace_from_support(lo, hi, problem.c)
+    if tol is None:
+        # Same formula (and f32 arithmetic) as the batched per-lane
+        # tolerances, so a lane's trajectory matches its solo solve.
+        tol = float(_tol_from_range(jnp.max(hi - lo), eps))
+    return v0, tol
+
+
+# ---------------------------------------------------------------------------
+# Jitted loop drivers (one per step kind x impl; stable jit signatures)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("c", "m", "max_iters"))
+def _flat_loop(feats2, w, v0, c, m, tol, max_iters):
+    from repro.kernels import ops as kops
+    step = kops.build_step("flat", "reference", feats=feats2, weights=w, m=m)
+    return while_centers(step, v0, tol, max_iters)
+
+
+@partial(jax.jit, static_argnames=("c", "m", "max_iters", "block_rows",
+                                   "interpret"))
+def _flat_loop_pallas(x2d, w2d, v0, c, m, tol, max_iters, block_rows,
+                      interpret):
+    from repro.kernels import ops as kops
+    step = kops.build_step("flat", "pallas", x2d=x2d, w2d=w2d, m=m,
+                           block_rows=block_rows, interpret=interpret)
+    return while_centers(step, v0, tol, max_iters)
+
+
+@partial(jax.jit, static_argnames=("m", "alpha", "neighbors", "max_iters"))
+def _stencil_loop(img, v0, m, alpha, neighbors, tol, max_iters):
+    from repro.kernels import ops as kops
+    step = kops.build_step("stencil", "reference", img=img, m=m,
+                           alpha=alpha, neighbors=neighbors)
+    return while_centers(step, v0, tol, max_iters)
+
+
+@partial(jax.jit, static_argnames=("m", "alpha", "neighbors", "max_iters",
+                                   "block_rows", "interpret"))
+def _stencil_loop_pallas(xpad, wpad, v0, m, alpha, neighbors, tol,
+                         max_iters, block_rows, interpret):
+    from repro.kernels import ops as kops
+    step = kops.build_step("stencil", "pallas", xpad=xpad, wpad=wpad, m=m,
+                           alpha=alpha, neighbors=neighbors,
+                           block_rows=block_rows, interpret=interpret)
+    return while_centers(step, v0, tol, max_iters)
+
+
+@partial(jax.jit, static_argnames=("c", "m", "max_iters"))
+def _flat_batched_loop(feats, w, c, m, eps, max_iters):
+    """feats (B, K, D), w (B, K) -> (v (B, c, D), delta, iters, total)."""
+    b, _, d = feats.shape
+    lo, hi = jax.vmap(weighted_support)(feats, w)           # (B, D) each
+    v0 = linspace_from_support(lo, hi, c)                   # (B, c, D)
+    tol = _tol_from_range(jnp.max(hi - lo, axis=1), eps)
+
+    vstep = jax.vmap(weighted_center_step, in_axes=(0, 0, 0, None))
+
+    def flat_step(vflat):
+        return vstep(feats, w, vflat.reshape(b, c, d), m).reshape(b, c * d)
+
+    v, delta, iters, it = masked_while_centers(
+        flat_step, v0.reshape(b, c * d), tol, max_iters)
+    return v.reshape(b, c, d), delta, iters, it
+
+
+@partial(jax.jit, static_argnames=("c", "m", "alpha", "neighbors",
+                                   "max_iters"))
+def _stencil_batched_loop(imgs, c, m, alpha, neighbors, eps, max_iters):
+    """imgs (B, *grid) -> (v (B, c), delta, iters, total). The batched
+    FCM_S path: same per-lane masking as the flat batch, stencil step
+    vmapped over lanes — what makes spatial serving traffic batchable."""
+    from . import spatial as SP
+    b = imgs.shape[0]
+    flat = imgs.reshape(b, -1)
+    lo = jnp.min(flat, axis=1)
+    hi = jnp.max(flat, axis=1)
+    frac = (jnp.arange(c, dtype=jnp.float32) + 0.5) / c
+    v0 = lo[:, None] + frac[None, :] * (hi - lo)[:, None]
+    tol = _tol_from_range(hi - lo, eps)
+
+    vstep = jax.vmap(SP.spatial_center_step, in_axes=(0, 0, None, None, None))
+
+    def step(v):
+        return vstep(imgs, v, m, alpha, neighbors)
+
+    return masked_while_centers(step, v0, tol, max_iters)
+
+
+# ---------------------------------------------------------------------------
+# solve / solve_batched
+# ---------------------------------------------------------------------------
+
+def _resolve(cfg, eps, max_iters, seed=0):
+    if eps is None:
+        eps = cfg.eps if cfg is not None else F.FCMConfig.eps
+    if max_iters is None:
+        max_iters = cfg.max_iters if cfg is not None else F.FCMConfig.max_iters
+    if seed is None:
+        seed = cfg.seed if cfg is not None else F.FCMConfig.seed
+    return float(eps), int(max_iters), int(seed)
+
+
+def _select_impl(problem: FCMProblem, backend: str,
+                 batch: bool = False) -> str:
+    """Registry dispatch: which step implementation runs this problem."""
+    from repro.kernels import ops as kops
+    prefer = {"auto": None, "reference": "reference",
+              "pallas": "pallas"}[backend]
+    kind = "stencil" if problem.stencil is not None else "flat"
+    impl = kops.select_step(kind, prefer=prefer, n_feat=problem.n_feat,
+                            batched=batch)
+    return impl.name
+
+
+def solve(problem: FCMProblem, cfg: Optional[F.FCMConfig] = None, *,
+          eps: Optional[float] = None, max_iters: Optional[int] = None,
+          tol: Optional[float] = None, backend: str = "auto",
+          keep_membership: bool = False, u0=None,
+          seed: Optional[int] = None,
+          block_rows: int = 64, interpret: Optional[bool] = None
+          ) -> F.FCMResult:
+    """Solve one :class:`FCMProblem` to convergence.
+
+    ``eps``/``max_iters``/``seed`` (or a legacy
+    :class:`~repro.core.fcm.FCMConfig` supplying them) control the stop
+    test and the random-init backends: the center-movement tolerance is
+    ``eps * feature-range * 0.1`` unless an absolute ``tol`` is given
+    (``tol=-1`` forces exactly ``max_iters`` iterations — what the
+    benchmarks use for like-for-like timing); ``seed`` only matters for
+    the membership-initialized ``staged``/``sequential`` backends.
+    ``labels`` come back per-row for flat problems and grid-shaped for
+    stencil problems.
+    """
+    if problem.batch:
+        raise ValueError("solve() takes a single problem; use "
+                         "solve_batched() for batch=True problems")
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; one of {BACKENDS}")
+    eps, max_iters, seed = _resolve(cfg, eps, max_iters, seed)
+
+    if backend == "sequential":
+        return _solve_sequential(problem, eps, max_iters, seed, u0)
+    if backend == "staged":
+        return solve_staged(problem, eps=eps, max_iters=max_iters,
+                            seed=seed, u0=u0,
+                            keep_membership=keep_membership)
+
+    impl = _select_impl(problem, backend)
+    v0, tol = _single_init(problem, eps, tol)
+    c, m = problem.c, problem.m
+
+    if problem.stencil is not None:
+        img = problem.features
+        alpha, neighbors = problem.stencil.alpha, problem.stencil.neighbors
+        if impl == "pallas":
+            from repro.kernels import ops as kops
+            xpad, wpad = kops.tile_grid(img, block_rows)
+            if interpret is None:
+                interpret = kops._interpret_default()
+            v, delta, it = _stencil_loop_pallas(
+                xpad, wpad, v0, m, alpha, neighbors, tol, max_iters,
+                block_rows, interpret)
+        else:
+            v, delta, it = _stencil_loop(img, v0, m, alpha, neighbors,
+                                         tol, max_iters)
+        from . import spatial as SP
+        u = SP.spatial_membership(img, v[:, 0], m, alpha, neighbors)
+        labels = F.defuzzify(u.reshape(c, -1)).reshape(img.shape)
+        return F.FCMResult(centers=v[:, 0], labels=labels, n_iters=int(it),
+                           final_delta=float(delta),
+                           membership=u if keep_membership else None)
+
+    feats2, w = problem.rows()
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        x2d, w2d = kops.tile_rows(feats2[:, 0], w, block_rows)
+        if interpret is None:
+            interpret = kops._interpret_default()
+        v, delta, it = _flat_loop_pallas(x2d, w2d, v0, c, m, tol,
+                                         max_iters, block_rows, interpret)
+    else:
+        v, delta, it = _flat_loop(feats2, w, v0, c, m, tol, max_iters)
+    labels = F.labels_from_centers(feats2, v)
+    u = F.update_membership(feats2, v, m) if keep_membership else None
+    centers = v[:, 0] if problem.scalar else v
+    return F.FCMResult(centers=centers, labels=labels, n_iters=int(it),
+                       final_delta=float(delta), membership=u)
+
+
+@dataclasses.dataclass
+class BatchedFCMResult:
+    """Per-lane results of a batched solve."""
+    centers: jax.Array            # (B, c) scalar or (B, c, D)
+    n_iters: np.ndarray           # (B,) int32, per-lane iteration counts
+    final_delta: np.ndarray       # (B,) float32, per-lane last center move
+    total_iters: int              # global while_loop trip count
+    labels: Optional[list] = None  # per lane, if the adapter computes them
+
+
+def solve_batched(problem: FCMProblem, cfg: Optional[F.FCMConfig] = None, *,
+                  eps: Optional[float] = None,
+                  max_iters: Optional[int] = None,
+                  backend: str = "auto") -> BatchedFCMResult:
+    """Solve a stacked batch of independent problems (``batch=True``)
+    under per-lane convergence masking: one device loop, each lane
+    freezing at its own convergence point, so a lane's trajectory is
+    identical to what :func:`solve` would produce for it alone."""
+    if not problem.batch:
+        raise ValueError("solve_batched() needs a batch=True problem "
+                         "(see batch_problems())")
+    if backend not in ("auto", "reference"):
+        raise ValueError(f"batched solves are reference-step only "
+                         f"(vmapped); got backend={backend!r}")
+    eps, max_iters, _ = _resolve(cfg, eps, max_iters)
+    _select_impl(problem, "reference", batch=True)   # registry sanity
+    c, m = problem.c, problem.m
+
+    if problem.stencil is not None:
+        v, delta, iters, it = _stencil_batched_loop(
+            problem.features, c, m, problem.stencil.alpha,
+            problem.stencil.neighbors, eps, max_iters)
+    else:
+        feats, w = problem.rows()
+        v, delta, iters, it = _flat_batched_loop(feats, w, c, m, eps,
+                                                 max_iters)
+        if problem.scalar:
+            v = v[..., 0]
+    return BatchedFCMResult(centers=v, n_iters=np.asarray(iters),
+                            final_delta=np.asarray(delta),
+                            total_iters=int(it))
+
+
+# ---------------------------------------------------------------------------
+# Host-loop backends: the paper-faithful staged pipeline + sequential CPU
+# ---------------------------------------------------------------------------
+
+def solve_staged(problem: FCMProblem, *, eps: float = 5e-3,
+                 max_iters: int = 300, seed: int = 0, u0=None,
+                 keep_membership: bool = False,
+                 use_pallas: bool = False) -> F.FCMResult:
+    """The paper's pipeline: staged 'kernels' with the membership array
+    materialized between stages and the convergence test
+    ``|u' - u|_inf < eps`` on the HOST each iteration (the paper copies
+    the membership back), random membership init. What
+    ``solve(..., backend="staged")`` and the deprecated
+    :func:`repro.core.fcm.fit_baseline` run; ``use_pallas=True`` routes
+    the per-stage math through the Pallas kernels."""
+    if problem.stencil is not None or problem.weights is not None:
+        raise ValueError("backend='staged' reproduces the paper's "
+                         "unweighted pixel pipeline only")
+    x = problem.features
+    n = x.shape[0]
+    c, m = problem.c, problem.m
+    key = jax.random.PRNGKey(seed)
+    u = (F.random_membership(key, c, n) if u0 is None
+         else jnp.asarray(u0, jnp.float32))
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+    n_iters = 0
+    delta = jnp.inf
+    v = None
+    for it in range(max_iters):
+        if use_pallas and x.ndim == 1:
+            num, den = kops.center_partials(x, u, m)
+            v = F._stage_combine(num, den)
+            v = v[:, 0]
+            u_new = kops.membership(x, v, m)
+        else:
+            num_terms, den_terms = F._stage_terms(x, u, m)
+            num = F._stage_reduce_num(num_terms)
+            den = F._stage_reduce_den(den_terms)
+            v = F._stage_combine(num, den)
+            v = v[:, 0] if x.ndim == 1 else v
+            u_new = F._stage_membership(x, v, m)
+        # Host round-trip, as in the paper's block diagram.
+        delta = float(jnp.max(jnp.abs(u_new - u)))
+        u = u_new
+        n_iters = it + 1
+        if delta < eps:
+            break
+    if v is None:
+        # max_iters=0: centers from the initial membership, so the result
+        # is still well-defined.
+        v = F.update_centers(x, u, m)
+    return F.FCMResult(centers=v, labels=F.defuzzify(u), n_iters=n_iters,
+                       final_delta=delta,
+                       membership=u if keep_membership else None)
+
+
+def _solve_sequential(problem: FCMProblem, eps: float, max_iters: int,
+                      seed: int, u0) -> F.FCMResult:
+    """The paper's CPU comparison floor: single-core numpy, same
+    algorithm/init as the literal C-port (see core/sequential.py)."""
+    from . import sequential as S
+    if problem.stencil is not None or problem.weights is not None \
+            or not problem.scalar:
+        raise ValueError("backend='sequential' is the scalar unweighted "
+                         "CPU baseline only")
+    v, labels, it = S.fcm_sequential_numpy(
+        np.asarray(problem.features), c=problem.c, m=problem.m, eps=eps,
+        max_iters=max_iters, seed=seed, u0=u0)
+    return F.FCMResult(centers=jnp.asarray(v, jnp.float32),
+                       labels=jnp.asarray(labels),
+                       n_iters=int(it), final_delta=float("nan"))

@@ -23,17 +23,19 @@ volumes. With ``alpha = 0`` every formula degenerates bitwise to plain
 FCM, so :func:`fit_spatial` reproduces :func:`repro.core.fcm.fit_fused`
 exactly (validated in tests).
 
-Two step implementations drive the same fused ``while_loop``:
+Two step implementations are registered in the
+:mod:`repro.kernels.ops` dispatch registry under kind ``"stencil"`` and
+drive the same solver convergence loop:
 
-* the pure-``jnp`` reference in this module (shifted-array stencil), and
-* the Pallas stencil kernel in :mod:`repro.kernels.fcm_spatial`
-  (``use_pallas=True``), which fuses the stencil average, the membership
-  update, and the center reduction into one VMEM pass.
+* ``"reference"`` — the pure-``jnp`` shifted-array stencil in this
+  module (:func:`spatial_center_step`), and
+* ``"pallas"`` — the stencil kernel in :mod:`repro.kernels.fcm_spatial`,
+  which fuses the stencil average, the membership update, and the
+  center reduction into one VMEM pass.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
@@ -147,28 +149,8 @@ def spatial_center_step(img: jax.Array, v: jax.Array, m: float = 2.0,
 
 
 # ---------------------------------------------------------------------------
-# Fused while_loop drivers (share core.fcm's convergence loop)
+# Fit entry point (deprecated adapter over the unified solver)
 # ---------------------------------------------------------------------------
-
-@partial(jax.jit, static_argnames=("m", "alpha", "neighbors", "max_iters"))
-def _spatial_loop_ref(img, v0, m, alpha, neighbors, eps, max_iters):
-    step = lambda v: spatial_center_step(img, v, m, alpha, neighbors)
-    return F._while_centers(step, v0, eps, max_iters)
-
-
-@partial(jax.jit, static_argnames=("m", "alpha", "neighbors", "max_iters",
-                                   "block_rows", "interpret"))
-def _spatial_loop_pallas(xpad, wpad, v0, m, alpha, neighbors, eps,
-                         max_iters, block_rows, interpret):
-    from repro.kernels import ops as kops
-
-    def step(v):
-        num, den = kops.spatial_partials(xpad, wpad, v, m, alpha, neighbors,
-                                         block_rows, interpret)
-        return num / jnp.maximum((1.0 + alpha) * den, _D2_FLOOR)
-
-    return F._while_centers(step, v0, eps, max_iters)
-
 
 def fit_spatial(img, cfg: SpatialFCMConfig = SpatialFCMConfig(),
                 use_pallas: bool = False,
@@ -176,37 +158,23 @@ def fit_spatial(img, cfg: SpatialFCMConfig = SpatialFCMConfig(),
                 keep_membership: bool = False,
                 block_rows: int = 64,
                 interpret: Optional[bool] = None) -> F.FCMResult:
-    """Spatially-regularized FCM over a 2-D image or 3-D volume.
+    """DEPRECATED alias — use
+    ``solver.solve(solver.spatial_problem(img, cfg))``
+    (``backend="pallas"`` for the fused stencil kernel).
 
-    Unlike the flat-pixel fit paths, ``labels`` (and ``membership``
-    when kept) retain the input's spatial shape. ``use_pallas=True``
-    drives the loop with the fused stencil kernel of
-    :mod:`repro.kernels.fcm_spatial`; the padding to tile shapes
-    happens once, outside the loop.
+    Spatially-regularized FCM over a 2-D image or 3-D volume. Unlike the
+    flat-pixel fit paths, ``labels`` (and ``membership`` when kept)
+    retain the input's spatial shape.
     """
+    from . import solver as SV
+    SV.warn_deprecated("fit_spatial",
+                       "solver.solve(spatial_problem(img, cfg))")
     img = jnp.asarray(img, jnp.float32)
     if img.ndim not in (2, 3):
         raise ValueError(f"fit_spatial needs (H, W) or (D, H, W) input, "
                          f"got shape {img.shape}")
-    neighbors = cfg.neighbors if img.ndim == 2 else 6
-    neighbor_offsets(img.ndim, neighbors)   # validate arity early
-    x = img.ravel()
-    if v0 is None:
-        v0 = F.linspace_centers(x, cfg.n_clusters)
-    # Same center-movement tolerance scaling as fit_fused.
-    rng = float(jnp.max(x) - jnp.min(x)) or 1.0
-    eps_v = cfg.eps * rng * 0.1
-    if use_pallas:
-        from repro.kernels import ops as kops
-        xpad, wpad = kops.tile_grid(img, block_rows)
-        v, delta, it = _spatial_loop_pallas(
-            xpad, wpad, v0, cfg.m, cfg.alpha, neighbors, eps_v,
-            cfg.max_iters, block_rows, interpret)
-    else:
-        v, delta, it = _spatial_loop_ref(
-            img, v0, cfg.m, cfg.alpha, neighbors, eps_v, cfg.max_iters)
-    u = spatial_membership(img, v, cfg.m, cfg.alpha, neighbors)
-    labels = F.defuzzify(u.reshape(cfg.n_clusters, -1)).reshape(img.shape)
-    return F.FCMResult(centers=v, labels=labels, n_iters=int(it),
-                       final_delta=float(delta),
-                       membership=u if keep_membership else None)
+    problem = SV.spatial_problem(img, cfg, v0=v0)
+    return SV.solve(problem, cfg,
+                    backend="pallas" if use_pallas else "reference",
+                    keep_membership=keep_membership,
+                    block_rows=block_rows, interpret=interpret)

@@ -1,155 +1,82 @@
-"""Weighted FCM over vector features (the multi-channel compression core).
+"""Weighted FCM over vector features (the multi-channel compression face
+of the unified solver).
 
 :mod:`repro.core.histogram` proves the compression algebra for 1-D
 intensities: every pixel sum in Eqs. 3/4 factors through (value, count)
-pairs, so 256 weighted rows replace N pixels. Once features are vectors
-(RGB, multi-modal T1/T2/PD stacks) there is no 256-bin histogram — but
-the *algebra* survives unchanged: any surjection pixels -> K groups with
-per-group mean features and pixel counts yields a weighted FCM over
-``(K, D)`` rows whose center fixed point approximates the pixel-space
-one to the within-group variance. The superpixel subsystem
-(:mod:`repro.superpixel`) supplies exactly that surjection; this module
-is the weighted vector fixed point behind it.
+pairs. Once features are vectors (RGB, multi-modal T1/T2/PD stacks)
+there is no 256-bin histogram — but the *algebra* survives unchanged:
+any surjection pixels -> K groups with per-group mean features and pixel
+counts yields a weighted FCM over ``(K, D)`` rows. The superpixel
+subsystem (:mod:`repro.superpixel`) supplies exactly that surjection.
 
-Entry points mirror the scalar stack:
+Since the solver unification this module is a naming shim: the weighted
+``(K, D)`` fixed point IS :func:`repro.core.solver.weighted_center_step`
+under :func:`repro.core.solver.solve`, and the entry points here are
+deprecated thin adapters kept for one release:
 
-* :func:`weighted_vector_center_step` — one fused v -> v' step over
-  ``(K, D)`` feature rows with per-row weights (generalizes
-  ``histogram.weighted_center_step`` to D > 1).
-* :func:`fit_vector_fcm` — the single-problem fit, driven by the same
-  :func:`repro.core.fcm._while_centers` convergence loop as
-  ``fit_fused`` / ``fit_spatial`` so the tolerance semantics cannot
-  drift. With D = 1 rows and histogram counts as weights it reproduces
-  :func:`repro.core.histogram.fit_histogram` (validated in tests).
-* :func:`fit_vector_batched` — ``(B, K, D)`` payload batches through the
-  per-lane-masked ``while_loop`` of :mod:`repro.core.batched`; the
-  serving engine's ``method="superpixel"`` buckets land here.
+* :func:`fit_vector_fcm`      -> ``solve(vector_problem(feats, w, cfg))``
+* :func:`fit_vector_batched`  -> ``solve_batched(batch_problems(...))``
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import fcm as F
-from .batched import BatchedFCMResult, _masked_while
-
-_D2_FLOOR = 1e-12
-_BIG = 3.4e38
+from . import solver as SV
+from .solver import BatchedFCMResult  # noqa: F401  (compat re-export)
 
 
 def weighted_vector_center_step(feats: jax.Array, w: jax.Array,
                                 v: jax.Array, m: float) -> jax.Array:
-    """One fused v -> v' step over weighted feature rows.
-
-    ``feats`` (K, D), ``w`` (K,) nonnegative row weights (zero rows are
-    inert), ``v`` (c, D) -> (c, D). Eq. 4 membership on the rows, then
-    the weighted Eq. 3 center update; memberships never leave the step.
-    """
-    u = F.update_membership(feats, v, m)            # (c, K)
-    um = (u ** m) * w[None, :]
-    num = um @ feats                                # (c, D)
-    den = jnp.maximum(jnp.sum(um, axis=1), _D2_FLOOR)
-    return num / den[:, None]
+    """One fused v -> v' step over weighted feature rows; alias of the
+    canonical :func:`repro.core.solver.weighted_center_step`."""
+    return SV.weighted_center_step(feats, w, v, m)
 
 
 def weighted_support(feats: jax.Array, w: jax.Array):
-    """Per-dimension (lo, hi) over rows with nonzero weight: empty
-    superpixels and batch padding must stretch neither the linspace
-    init nor the tolerance scaling. (D,), (D,)."""
-    active = (w > 0)[:, None]
-    lo = jnp.min(jnp.where(active, feats, _BIG), axis=0)
-    hi = jnp.max(jnp.where(active, feats, -_BIG), axis=0)
-    return lo, hi
-
-
-def _linspace_from_support(lo: jax.Array, hi: jax.Array,
-                           c: int) -> jax.Array:
-    """lo/hi (..., D) -> per-dimension linspace centers (..., c, D)."""
-    frac = (jnp.arange(c, dtype=lo.dtype) + 0.5) / c
-    shape = (1,) * (lo.ndim - 1) + (c, 1)
-    return lo[..., None, :] + frac.reshape(shape) * (hi - lo)[..., None, :]
+    """Per-dimension (lo, hi) over rows with nonzero weight; see
+    :func:`repro.core.solver.weighted_support`."""
+    return SV.weighted_support(feats, w)
 
 
 def weighted_linspace_centers(feats: jax.Array, w: jax.Array,
                               c: int) -> jax.Array:
     """Per-dimension linspace init over the weighted support; (c, D)."""
-    lo, hi = weighted_support(feats, w)
-    return _linspace_from_support(lo, hi, c)
-
-
-@partial(jax.jit, static_argnames=("c", "m", "max_iters"))
-def _vector_loop(feats, w, v0, c, m, eps, max_iters):
-    step = lambda v: weighted_vector_center_step(feats, w, v, m)
-    return F._while_centers(step, v0, eps, max_iters)
+    lo, hi = SV.weighted_support(feats, w)
+    return SV.linspace_from_support(lo, hi, c)
 
 
 def fit_vector_fcm(feats, weights=None, cfg: F.FCMConfig = F.FCMConfig(),
                    v0: Optional[jax.Array] = None,
                    keep_membership: bool = False) -> F.FCMResult:
-    """Weighted FCM over (K, D) feature rows; per-row ``weights`` default
-    to 1 (plain vector FCM over the rows). ``labels`` are per-row
-    nearest-center assignments (K,) — the caller broadcasts them back
-    through whatever map produced the rows."""
+    """DEPRECATED alias — use
+    ``solver.solve(solver.vector_problem(feats, weights, cfg))``.
+
+    Weighted FCM over (K, D) feature rows; per-row ``weights`` default
+    to 1. ``labels`` are per-row nearest-center assignments (K,) — the
+    caller broadcasts them back through whatever map produced the rows."""
+    SV.warn_deprecated("fit_vector_fcm",
+                       "solver.solve(vector_problem(feats, weights, cfg))")
     feats = F._as_2d(jnp.asarray(feats, jnp.float32))
-    k = feats.shape[0]
-    w = (jnp.ones((k,), jnp.float32) if weights is None
-         else jnp.asarray(weights, jnp.float32))
-    lo, hi = weighted_support(feats, w)
-    if v0 is None:
-        v0 = _linspace_from_support(lo, hi, cfg.n_clusters)
-    # Same center-movement tolerance scaling as fit_fused, on the widest
-    # feature dimension.
-    rng = float(jnp.max(hi - lo)) or 1.0
-    eps_v = cfg.eps * rng * 0.1
-    v, delta, it = _vector_loop(feats, w, jnp.asarray(v0, jnp.float32),
-                                cfg.n_clusters, cfg.m, eps_v, cfg.max_iters)
-    u = F.update_membership(feats, v, cfg.m) if keep_membership else None
-    labels = F.labels_from_centers(feats, v)
-    return F.FCMResult(centers=v, labels=labels, n_iters=int(it),
-                       final_delta=float(delta), membership=u)
-
-
-# ---------------------------------------------------------------------------
-# Batched variant: fixed-K payload buckets for the serving engine
-# ---------------------------------------------------------------------------
-
-@partial(jax.jit, static_argnames=("c", "m", "max_iters"))
-def _batched_vector_loop(feats, ws, c, m, eps, max_iters):
-    """feats (B, K, D), ws (B, K) -> (centers (B, c, D), delta (B,),
-    iters (B,), total_it). Reuses the per-lane-masked while_loop of
-    core.batched by flattening centers to (B, c*D) around the step."""
-    b, _, d = feats.shape
-    lo, hi = jax.vmap(weighted_support)(feats, ws)           # (B, D) each
-    v0 = _linspace_from_support(lo, hi, c)                   # (B, c, D)
-    rng = jnp.max(hi - lo, axis=1)
-    eps_v = eps * jnp.where(rng > 0, rng, 1.0) * 0.1
-
-    vstep = jax.vmap(weighted_vector_center_step, in_axes=(0, 0, 0, None))
-
-    def flat_step(vflat):
-        return vstep(feats, ws, vflat.reshape(b, c, d), m).reshape(b, c * d)
-
-    v, delta, iters, it = _masked_while(flat_step, v0.reshape(b, c * d),
-                                        eps_v, max_iters)
-    return v.reshape(b, c, d), delta, iters, it
+    problem = SV.vector_problem(feats, weights, cfg, v0=v0)
+    return SV.solve(problem, cfg, backend="reference",
+                    keep_membership=keep_membership)
 
 
 def fit_vector_batched(feats, weights,
                        cfg: F.FCMConfig = F.FCMConfig()) -> BatchedFCMResult:
-    """Batched weighted vector FCM over a fixed-K bucket.
+    """DEPRECATED alias — use ``solver.solve_batched`` on a
+    ``solver.batch_problems(feats, weights, cfg=cfg)`` stack.
 
-    ``feats`` (B, K, D), ``weights`` (B, K); lanes are independent
-    problems converging under the same per-lane masking as
-    :func:`repro.core.batched.fit_batched`, so a lane's trajectory
-    matches what :func:`fit_vector_fcm` would produce alone."""
-    feats = jnp.asarray(feats, jnp.float32)
-    weights = jnp.asarray(weights, jnp.float32)
-    v, delta, iters, it = _batched_vector_loop(
-        feats, weights, cfg.n_clusters, cfg.m, cfg.eps, cfg.max_iters)
-    return BatchedFCMResult(centers=v, n_iters=np.asarray(iters),
-                            final_delta=np.asarray(delta),
-                            total_iters=int(it))
+    Batched weighted vector FCM over a fixed-K bucket: ``feats``
+    (B, K, D), ``weights`` (B, K); lanes are independent problems under
+    the solver's per-lane convergence masking, so a lane's trajectory
+    matches what a solo fit of it would produce."""
+    SV.warn_deprecated("fit_vector_batched",
+                       "solver.solve_batched(batch_problems(feats, weights))")
+    problem = SV.batch_problems(jnp.asarray(feats, jnp.float32),
+                                jnp.asarray(weights, jnp.float32), cfg=cfg)
+    return SV.solve_batched(problem, cfg)

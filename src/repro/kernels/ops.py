@@ -1,12 +1,21 @@
-"""Jitted public wrappers around the FCM Pallas kernels.
+"""Jitted public wrappers around the FCM Pallas kernels, plus the step
+dispatch registry the solver core routes through.
 
 Handles 1-D <-> (rows, 128) tiling, padding with validity weights, and
 interpret-mode fallback on non-TPU backends (kernel bodies execute in
 Python on CPU for correctness validation, per the Pallas docs).
+
+The registry at the bottom maps a step *kind* (``"flat"`` weighted-row
+update, ``"stencil"`` FCM_S update, ``"slic_assign"``) to its available
+implementations (``"pallas"`` kernels here, ``"reference"`` pure-jnp),
+and :func:`select_step` picks one by platform and problem shape. New
+variants register a builder instead of growing per-module wrappers.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +43,21 @@ def _tile(x: jax.Array, block_rows: int):
                          jnp.zeros((n_pad,), jnp.float32)])
     m_rows = (n + n_pad) // LANES
     return xp.reshape(m_rows, LANES), w.reshape(m_rows, LANES), n
+
+
+def tile_rows(x: jax.Array, w: jax.Array, block_rows: int):
+    """Weighted analogue of :func:`_tile`: tiles pixels AND their row
+    weights (histogram counts, superpixel sizes; padding weighs 0), so
+    the fused-partials kernel runs weighted flat problems unchanged."""
+    n = x.shape[0]
+    per_block = block_rows * LANES
+    n_pad = (-n) % per_block
+    xp = jnp.concatenate([x.astype(jnp.float32),
+                          jnp.zeros((n_pad,), jnp.float32)])
+    wp = jnp.concatenate([w.astype(jnp.float32),
+                          jnp.zeros((n_pad,), jnp.float32)])
+    m_rows = (n + n_pad) // LANES
+    return xp.reshape(m_rows, LANES), wp.reshape(m_rows, LANES)
 
 
 def tile_grid(img: jax.Array, block_rows: int = 64):
@@ -183,3 +207,148 @@ def spatial_step(img, v, m: float = 2.0, alpha: float = 1.0,
         interpret = _interpret_default()
     return _spatial_step_impl(img, v, m, alpha, neighbors, block_rows,
                               interpret)
+
+
+# ---------------------------------------------------------------------------
+# Step dispatch registry (what repro.core.solver routes through)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StepImpl:
+    """One registered step implementation.
+
+    ``build(**params) -> callable`` constructs the actual step (called
+    at trace time inside the solver's jitted loops); ``platforms``
+    limits compiled execution (off-platform falls back to interpret
+    mode for Pallas impls); ``scalar_only`` marks impls restricted to
+    1-D feature rows; ``batched`` marks impls safe under ``vmap``.
+    """
+    kind: str
+    name: str
+    build: Callable[..., Callable]
+    platforms: Tuple[str, ...] = ("cpu", "gpu", "tpu")
+    scalar_only: bool = False
+    batched: bool = True
+
+
+_STEP_REGISTRY: Dict[Tuple[str, str], StepImpl] = {}
+
+
+def register_step(kind: str, name: str, *, platforms=("cpu", "gpu", "tpu"),
+                  scalar_only: bool = False, batched: bool = True):
+    """Decorator: register a step builder under (kind, name). Adding an
+    FCM variant = registering its step here + a problem factory in
+    ``core/solver.py`` — no new fit module."""
+    def deco(build):
+        _STEP_REGISTRY[(kind, name)] = StepImpl(
+            kind=kind, name=name, build=build, platforms=tuple(platforms),
+            scalar_only=scalar_only, batched=batched)
+        return build
+    return deco
+
+
+def step_impls(kind: Optional[str] = None):
+    """All registered implementations (of one kind, if given)."""
+    return [impl for (k, _), impl in sorted(_STEP_REGISTRY.items())
+            if kind is None or k == kind]
+
+
+def select_step(kind: str, *, prefer: Optional[str] = None,
+                platform: Optional[str] = None, n_feat: int = 1,
+                batched: bool = False) -> StepImpl:
+    """Dispatch: pick the step implementation for a problem shape and
+    platform. ``prefer`` forces a name; otherwise the Pallas kernel wins
+    on TPU when eligible (right platform, feature-dim and vmap support)
+    and the pure-jnp reference runs everywhere else."""
+    kinds = sorted({k for k, _ in _STEP_REGISTRY})
+    if kind not in kinds:
+        raise ValueError(f"unknown step kind {kind!r}; one of {kinds}")
+    if prefer is not None:
+        impl = _STEP_REGISTRY.get((kind, prefer))
+        if impl is None:
+            names = [i.name for i in step_impls(kind)]
+            raise ValueError(f"no {kind!r} step implementation named "
+                             f"{prefer!r}; registered: {names}")
+        if impl.scalar_only and n_feat != 1:
+            raise ValueError(f"{kind}/{prefer} handles scalar (D=1) "
+                             f"features only, got D={n_feat}")
+        if batched and not impl.batched:
+            raise ValueError(f"{kind}/{prefer} does not support batched "
+                             f"(vmapped) solves")
+        return impl
+    platform = platform or jax.default_backend()
+    pallas = _STEP_REGISTRY.get((kind, "pallas"))
+    if (pallas is not None and platform in pallas.platforms
+            and not (pallas.scalar_only and n_feat != 1)
+            and not (batched and not pallas.batched)):
+        return pallas
+    return _STEP_REGISTRY[(kind, "reference")]
+
+
+def build_step(kind: str, name: str, **params) -> Callable:
+    """Construct the (kind, name) step with the given problem arrays."""
+    return _STEP_REGISTRY[(kind, name)].build(**params)
+
+
+# -- registered implementations ---------------------------------------------
+# Builders import the reference math lazily: repro.core imports this
+# module lazily too, and resolving both at call time keeps the package
+# import graph acyclic.
+
+@register_step("flat", "reference")
+def _flat_reference(feats, weights, m, **_):
+    """Canonical pure-jnp weighted-row update (repro.core.solver)."""
+    from repro.core import solver as SV
+    return lambda v: SV.weighted_center_step(feats, weights, v, m)
+
+
+@register_step("flat", "pallas", platforms=("tpu",), scalar_only=True,
+               batched=False)
+def _flat_pallas(x2d, w2d, m, block_rows=64, interpret=None, **_):
+    """Fused membership+center-partials kernel over pre-tiled rows."""
+    if interpret is None:
+        interpret = _interpret_default()
+
+    def step(v):
+        num, den = KC.fused_partials_pallas(x2d, w2d, v[:, 0], m,
+                                            block_rows, interpret)
+        return (num / jnp.maximum(den, 1e-12))[:, None]
+    return step
+
+
+@register_step("stencil", "reference")
+def _stencil_reference(img, m, alpha, neighbors, **_):
+    """Pure-jnp shifted-array FCM_S step (repro.core.spatial)."""
+    from repro.core import spatial as SP
+    return lambda v: SP.spatial_center_step(img, v[:, 0], m, alpha,
+                                            neighbors)[:, None]
+
+
+@register_step("stencil", "pallas", platforms=("tpu",), batched=False)
+def _stencil_pallas(xpad, wpad, m, alpha, neighbors, block_rows=64,
+                    interpret=None, **_):
+    """Fused stencil+membership+center-reduction kernel over a pre-tiled
+    grid (inputs from :func:`tile_grid`)."""
+    if interpret is None:
+        interpret = _interpret_default()
+
+    def step(v):
+        num, den = spatial_partials(xpad, wpad, v[:, 0], m, alpha,
+                                    neighbors, block_rows, interpret)
+        return (num / jnp.maximum((1.0 + alpha) * den, 1e-12))[:, None]
+    return step
+
+
+@register_step("slic_assign", "reference", batched=False)
+def _slic_reference(gy, gx, sw, **_):
+    """Pure-jnp 3x3-candidate SLIC assignment (repro.superpixel.slic)."""
+    from repro.superpixel import slic as SL
+    return lambda img, centers: SL.assign_ref(img, centers, gy, gx, sw)
+
+
+@register_step("slic_assign", "pallas", platforms=("tpu",), batched=False)
+def _slic_pallas(h, w, gy, gx, sw, block_rows=8, interpret=None, **_):
+    """Tiled Pallas SLIC assignment (pre-tiled planes from
+    :func:`tile_channels`)."""
+    return lambda xpad, centers: slic_assign(xpad, centers, h, w, gy, gx,
+                                             sw, block_rows, interpret)

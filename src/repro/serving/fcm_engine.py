@@ -1,56 +1,54 @@
-"""Request-batching segmentation engine over the batched FCM core.
+"""Request-batching segmentation engine over the unified solver core.
 
 The LM :class:`~repro.serving.engine.ServeEngine` amortizes device
 launches across a token batch; this engine does the same across *images*.
-Histogram compression makes heterogeneous traffic regular: a request of
-any pixel count reduces on ingest to one ``(n_bins,)`` vector, so a whole
-queue becomes one ``(B, n_bins)`` :func:`repro.core.batched.fit_batched`
-call. Two batching tricks keep XLA recompilation at zero:
+Every serving method is a declarative :class:`RouteSpec` in a route
+registry — an ingest transform (validate / compress), a bucket key
+(requests sharing one may share one device launch), a problem builder
+(payloads -> one batched :class:`repro.core.solver.FCMProblem`), a
+materializer (per-request labels from fitted centers), and a cache
+policy. ``flush`` is route-agnostic: group by bucket key, pad to a
+fixed batch size, run ONE :func:`repro.core.solver.solve_batched` per
+bucket. Adding an FCM variant to serving = registering a RouteSpec, not
+hand-routing a new queue.
+
+Because every route builds a solver problem, *all four* methods batch
+across concurrent requests — including ``spatial`` (same-shape FCM_S
+grids stack into one per-lane-masked stencil loop) and ``superpixel``
+((K, D) payload groups), which previously ran one fit per request.
+Two batching tricks keep XLA recompilation at zero:
 
 * **Bucketing** — queued requests are padded up to the nearest size in
-  ``batch_sizes`` (padding lanes are uniform histograms, dropped on
-  output), so only ``len(batch_sizes)`` jit signatures ever compile.
+  ``batch_sizes`` (padding lanes are dropped on output), so only
+  ``len(batch_sizes)`` jit signatures compile per payload shape.
 * **Histogram-keyed LRU cache** — identical intensity histograms hit an
   exact-key lookup; near-identical ones (adjacent slices of a volume,
   repeat studies with fresh noise — L1 distance between normalized
   histograms below ``cache_tol``) hit a nearest-match scan. Either way
   the fit is skipped; only the cheap per-pixel defuzzification LUT
-  gather runs. On phantom traffic, same-anatomy re-submissions sit at
-  L1 ~ 0.1 while genuinely different content sits at ~0.5, so the
-  default tolerance of 0.15 separates them with wide margin.
-
-Beyond the histogram fast path the engine routes three more methods:
-``pixel`` (uncompressed per-image fused FCM — the reference), ``spatial``
-(FCM_S on the full grid, cache-bypassing), and ``superpixel`` (SLIC
-compression on ingest to a (K, D) weighted payload, batched at fixed K
-buckets through :func:`repro.core.vector_fcm.fit_vector_batched` — the
-color/multi-channel analogue of the histogram trick, also
-cache-bypassing since vector features have no 256-bin key).
+  gather runs. Only the histogram route is cacheable: spatial requests
+  depend on pixel positions and vector features have no 256-bin key.
 
 Results are hard labels per request (same spatial shape as the input
 image) plus the fitted centers; :meth:`FCMServeEngine.stats` exposes
-queue / throughput / per-route request and cache-hit counters for the
-ops dashboards every traffic-scaling PR after this one will need.
+queue / throughput / per-route request, batch and cache-hit counters.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, Hashable, List, Optional,
+                    Sequence, Tuple)
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import batched as B
 from repro.core import fcm as F
+from repro.core import solver as SV
 from repro.core import spatial as SP
-from repro.core import vector_fcm as VF
+from repro.core.batched import hist_rows
 from repro.superpixel import pipeline as SX
-
-#: The serving routes, in the order of the README routing table.
-METHODS = ("histogram", "pixel", "spatial", "superpixel")
 
 
 @dataclasses.dataclass
@@ -63,6 +61,10 @@ class SegmentationResult:
     cache_hit: bool
     method: str = "histogram"
 
+
+# ---------------------------------------------------------------------------
+# Pending payloads (what each route's ingest produces)
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
 class _Pending:
@@ -77,7 +79,7 @@ class _Pending:
 class _PendingSpatial:
     """A spatial request carries the full pixel payload: FCM_S needs the
     pixel grid, so it can neither histogram-compress nor share the
-    histogram cache."""
+    histogram cache. Same-shape grids still batch into one solve."""
     request_id: int
     pixels: np.ndarray            # original 2-D/3-D image, unreduced
 
@@ -86,7 +88,7 @@ class _PendingSpatial:
 class _PendingPixels:
     """A pixel request: uncompressed per-image fused FCM — the reference
     route every compression is measured against. (H, W, D) payloads
-    cluster in D-dim feature space."""
+    cluster in D-dim feature space; same-shape payloads batch."""
     request_id: int
     pixels: np.ndarray
 
@@ -96,8 +98,7 @@ class _PendingSuperpixel:
     """A superpixel request after ingest-time SLIC compression: like the
     histogram route it carries only the reduced payload to the fit, but
     like the spatial route it bypasses the 1-D histogram LRU (vector
-    features have no 256-bin key, and the compression already amortizes
-    most of the fit cost). ``k`` = features.shape[0] buckets the batch."""
+    features have no 256-bin key). ``features.shape`` buckets the batch."""
     request_id: int
     features: np.ndarray          # (K, D) superpixel mean features
     weights: np.ndarray           # (K,) pixel counts
@@ -105,13 +106,266 @@ class _PendingSuperpixel:
     slic_iters: int
 
 
+# ---------------------------------------------------------------------------
+# Route registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RouteSpec:
+    """One serving method, declaratively.
+
+    ``ingest(engine, img, rid)`` validates and reduces the payload (it
+    must raise before consuming a request id on bad input);
+    ``bucket_key(engine, payload)`` decides which payloads may share one
+    batched solve; ``build_problem(engine, chunk, bucket)`` stacks a
+    chunk (plus padding lanes up to ``bucket``) into one batched
+    :class:`~repro.core.solver.FCMProblem` and names the config whose
+    eps/max_iters govern the fit; ``materialize`` turns one lane's
+    fitted centers back into per-pixel labels. ``cacheable`` routes
+    carry a ``.key``/``.hist`` payload and go through the histogram LRU
+    + intra-flush dedup.
+    """
+    name: str
+    ingest: Callable[["FCMServeEngine", np.ndarray, int], Any]
+    bucket_key: Callable[["FCMServeEngine", Any], Hashable]
+    build_problem: Callable[["FCMServeEngine", List[Any], int],
+                            Tuple[SV.FCMProblem, F.FCMConfig]]
+    materialize: Callable[["FCMServeEngine", Any, np.ndarray, int, bool],
+                          SegmentationResult]
+    #: optional vmapped materializer for a whole fitted chunk — one
+    #: device launch instead of len(chunk); (engine, chunk, centers,
+    #: n_iters) -> results. Routes whose per-request labeling is itself
+    #: stencil-heavy (spatial) need this to keep the served throughput
+    #: at the batched-fit level.
+    materialize_batch: Optional[
+        Callable[["FCMServeEngine", List[Any], np.ndarray, np.ndarray],
+                 List[SegmentationResult]]] = None
+    cacheable: bool = False
+    stats_prefix: str = ""        # "" keeps the legacy histogram names
+
+    def stat(self, name: str) -> str:
+        if not self.stats_prefix:   # the histogram route predates routes
+            return {"seconds": "fit_seconds", "iters": "fit_iters",
+                    "batches": "batches", "images": "batched_images",
+                    "padded": "padded_lanes"}[name]
+        legacy = {"seconds": "seconds", "iters": "iters",
+                  "batches": "batches", "images": "batched_images",
+                  "padded": "padded_lanes"}[name]
+        return f"{self.stats_prefix}_{legacy}"
+
+
+ROUTES: "collections.OrderedDict[str, RouteSpec]" = collections.OrderedDict()
+
+
+def register_route(spec: RouteSpec) -> RouteSpec:
+    """Add (or replace) a serving route; see the specs below for the
+    shape. New FCM variants serve by registering here — ``flush`` and
+    the stats plumbing need no changes."""
+    ROUTES[spec.name] = spec
+    global METHODS
+    METHODS = tuple(ROUTES)
+    return spec
+
+
+# -- histogram route --------------------------------------------------------
+
+def _ingest_histogram(eng: "FCMServeEngine", img: np.ndarray,
+                      rid: int) -> _Pending:
+    flat = np.clip(img.reshape(-1).astype(np.int64), 0, eng.n_bins - 1)
+    hist = np.bincount(flat, minlength=eng.n_bins
+                       ).astype(np.float32)[:eng.n_bins]
+    return _Pending(rid, img.shape, flat, hist, hist.tobytes())
+
+
+def _build_histogram(eng, chunk, bucket):
+    hists = np.stack([p.hist for p in chunk])
+    n_pad = bucket - len(chunk)
+    if n_pad:
+        # Uniform-histogram padding lanes converge fast and are dropped.
+        pad = np.ones((n_pad, eng.n_bins), np.float32)
+        hists = np.concatenate([hists, pad])
+    hists = jnp.asarray(hists)
+    return SV.batch_problems(hist_rows(hists), hists, cfg=eng.cfg), eng.cfg
+
+
+def _materialize_histogram(eng, p, centers, n_iters, cache_hit):
+    # Defuzzify via a n_bins-entry LUT: label each bin once, gather.
+    vals = jnp.arange(eng.n_bins, dtype=jnp.float32)
+    lut = np.asarray(F.labels_from_centers(vals, jnp.asarray(centers)))
+    labels = lut[p.flat].reshape(p.shape)
+    return SegmentationResult(p.request_id, labels, np.asarray(centers),
+                              n_iters, cache_hit)
+
+
+# -- pixel route ------------------------------------------------------------
+
+def _ingest_pixel(eng, img, rid) -> _PendingPixels:
+    # 3-D pixel payloads are channels-LAST feature stacks; a (D, H, W)
+    # volume would silently cluster on W-dim rows, so anything that
+    # doesn't look like trailing channels is rejected here (volumes
+    # belong to histogram/spatial).
+    if img.ndim not in (2, 3) or (img.ndim == 3 and img.shape[-1] > 16):
+        raise ValueError(
+            f"pixel requests need (H, W) or channels-last "
+            f"(H, W, D<=16) input, got shape {img.shape}; "
+            f"use method='histogram' or 'spatial' for volumes")
+    return _PendingPixels(rid, img)
+
+
+def _pixel_rows(img: np.ndarray) -> np.ndarray:
+    imgf = img.astype(np.float32)
+    return (imgf.reshape(-1, img.shape[-1]) if img.ndim == 3
+            else imgf.reshape(-1))
+
+
+def _build_pixel(eng, chunk, bucket):
+    xs = np.stack([_pixel_rows(q.pixels) for q in chunk])
+    n_pad = bucket - len(chunk)
+    if n_pad:
+        # Padding lanes replay the first image; frozen-lane masking makes
+        # them cost one lane of compute, dropped on output.
+        xs = np.concatenate([xs, np.repeat(xs[:1], n_pad, axis=0)])
+    return SV.batch_problems(jnp.asarray(xs), cfg=eng.cfg), eng.cfg
+
+
+def _materialize_pixel(eng, q, centers, n_iters, cache_hit):
+    img = q.pixels
+    spatial_shape = img.shape[:-1] if img.ndim == 3 else img.shape
+    labels = np.asarray(F.labels_from_centers(
+        jnp.asarray(_pixel_rows(img)),
+        jnp.asarray(centers))).reshape(spatial_shape)
+    return SegmentationResult(q.request_id, labels, np.asarray(centers),
+                              n_iters, cache_hit, method="pixel")
+
+
+# -- spatial route ----------------------------------------------------------
+
+def _ingest_spatial(eng, img, rid) -> _PendingSpatial:
+    if img.ndim not in (2, 3):
+        raise ValueError(f"spatial requests need a (H, W) or (D, H, W) "
+                         f"pixel grid, got shape {img.shape}")
+    return _PendingSpatial(rid, img)
+
+
+def _spatial_neighbors(eng, ndim: int) -> int:
+    return eng.spatial_cfg.neighbors if ndim == 2 else 6
+
+
+def _build_spatial(eng, chunk, bucket):
+    imgs = np.stack([q.pixels.astype(np.float32) for q in chunk])
+    n_pad = bucket - len(chunk)
+    if n_pad:
+        imgs = np.concatenate([imgs, np.repeat(imgs[:1], n_pad, axis=0)])
+    scfg = eng.spatial_cfg
+    stencil = SV.StencilSpec(alpha=scfg.alpha,
+                             neighbors=_spatial_neighbors(
+                                 eng, imgs.ndim - 1))
+    return SV.batch_problems(jnp.asarray(imgs), stencil=stencil,
+                             cfg=scfg), scfg
+
+
+def _materialize_spatial(eng, q, centers, n_iters, cache_hit):
+    # Single-request face of the batch materializer (the route registers
+    # materialize_batch, so flush() normally never calls this; it exists
+    # for API symmetry and must not drift from the batch version).
+    return _materialize_spatial_batch(eng, [q], np.asarray(centers)[None],
+                                      np.asarray([n_iters]))[0]
+
+
+def _materialize_spatial_batch(eng, chunk, centers, n_iters):
+    """One vmapped stencil-membership + argmax launch for the whole
+    chunk: the per-request labeling is as stencil-heavy as an FCM_S
+    iteration, so batching it is what keeps served spatial throughput
+    at the batched-fit level."""
+    import jax
+
+    scfg = eng.spatial_cfg
+    neighbors = _spatial_neighbors(eng, chunk[0].pixels.ndim)
+    imgs = jnp.asarray(np.stack([q.pixels for q in chunk]), jnp.float32)
+    u = jax.vmap(lambda im, v: SP.spatial_membership(
+        im, v, scfg.m, scfg.alpha, neighbors))(
+            imgs, jnp.asarray(centers[:len(chunk)]))
+    labels = np.asarray(jnp.argmax(u, axis=1).astype(jnp.int32))
+    return [SegmentationResult(q.request_id, labels[i],
+                               np.asarray(centers[i]), int(n_iters[i]),
+                               False, method="spatial")
+            for i, q in enumerate(chunk)]
+
+
+# -- superpixel route -------------------------------------------------------
+
+def _ingest_superpixel(eng, img, rid) -> _PendingSuperpixel:
+    if img.ndim not in (2, 3):
+        raise ValueError(f"superpixel requests need (H, W) or "
+                         f"(H, W, D) input, got shape {img.shape}")
+    t0 = time.perf_counter()
+    comp = SX.compress(img.astype(np.float32), eng.superpixel_cfg)
+    eng._stats["compress_seconds"] += time.perf_counter() - t0
+    return _PendingSuperpixel(rid, np.asarray(comp.features),
+                              np.asarray(comp.weights),
+                              np.asarray(comp.label_map), comp.slic_iters)
+
+
+def _build_superpixel(eng, chunk, bucket):
+    k, d = chunk[0].features.shape
+    feats = np.stack([q.features for q in chunk])
+    ws = np.stack([q.weights for q in chunk])
+    n_pad = bucket - len(chunk)
+    if n_pad:
+        # Benign padding lanes: a unit-weight feature ramp converges in a
+        # handful of iterations and is dropped on output.
+        ramp = np.broadcast_to(
+            np.linspace(0.0, 1.0, k, dtype=np.float32)[:, None], (k, d))
+        feats = np.concatenate([feats, np.broadcast_to(ramp, (n_pad, k, d))])
+        ws = np.concatenate([ws, np.ones((n_pad, k), np.float32)])
+    # The superpixel config governs the fit (a caller-supplied one must
+    # win over self.cfg, not just steer the compression).
+    return SV.batch_problems(jnp.asarray(feats), jnp.asarray(ws),
+                             cfg=eng.superpixel_cfg), eng.superpixel_cfg
+
+
+def _materialize_superpixel(eng, q, centers, n_iters, cache_hit):
+    sp_labels = np.asarray(F.labels_from_centers(jnp.asarray(q.features),
+                                                 jnp.asarray(centers)))
+    labels = sp_labels[q.label_map]
+    return SegmentationResult(q.request_id, labels, np.asarray(centers),
+                              n_iters, cache_hit, method="superpixel")
+
+
+register_route(RouteSpec(
+    name="histogram", ingest=_ingest_histogram,
+    bucket_key=lambda eng, p: ("hist",),
+    build_problem=_build_histogram, materialize=_materialize_histogram,
+    cacheable=True))
+register_route(RouteSpec(
+    name="pixel", ingest=_ingest_pixel,
+    bucket_key=lambda eng, p: ("pixel",) + p.pixels.shape,
+    build_problem=_build_pixel, materialize=_materialize_pixel,
+    stats_prefix="pixel"))
+register_route(RouteSpec(
+    name="spatial", ingest=_ingest_spatial,
+    bucket_key=lambda eng, p: ("spatial",) + p.pixels.shape,
+    build_problem=_build_spatial, materialize=_materialize_spatial,
+    materialize_batch=_materialize_spatial_batch,
+    stats_prefix="spatial"))
+register_route(RouteSpec(
+    name="superpixel", ingest=_ingest_superpixel,
+    bucket_key=lambda eng, p: ("superpixel",) + p.features.shape,
+    build_problem=_build_superpixel, materialize=_materialize_superpixel,
+    stats_prefix="superpixel"))
+
+#: The serving routes, in registration order (the README routing table).
+METHODS = tuple(ROUTES)
+
+
 class FCMServeEngine:
     """Static-bucket batching engine for FCM segmentation requests.
 
-    ``submit`` ingests an image (any 2-D/3-D shape, 8-bit-range values),
-    histograms it, and either answers from the cache or queues it.
-    ``flush`` drains the queue through bucketed ``fit_batched`` calls.
-    ``segment`` is the submit-all-then-flush convenience wrapper.
+    ``submit`` ingests an image through its route (any 2-D/3-D shape,
+    8-bit-range values) and either answers from the cache or queues it.
+    ``flush`` drains every route's queue through bucketed
+    ``solve_batched`` calls. ``segment`` is the submit-all-then-flush
+    convenience wrapper.
     """
 
     def __init__(self, cfg: F.FCMConfig = F.FCMConfig(),
@@ -139,92 +393,45 @@ class FCMServeEngine:
         # key (exact histogram bytes) -> (centers, normalized histogram)
         self._cache: "collections.OrderedDict[bytes, Tuple[np.ndarray, np.ndarray]]" = \
             collections.OrderedDict()
-        self._queue: List[_Pending] = []
-        self._spatial_queue: List[_PendingSpatial] = []
-        self._pixel_queue: List[_PendingPixels] = []
-        self._superpixel_queue: List[_PendingSuperpixel] = []
+        self._queues: Dict[str, List[Any]] = {name: [] for name in ROUTES}
         self._next_id = 0
-        self._stats = {
-            "requests": 0, "cache_hits": 0, "batches": 0,
-            "batched_images": 0, "padded_lanes": 0,
-            "fit_seconds": 0.0, "fit_iters": 0,
-            "spatial_requests": 0, "spatial_seconds": 0.0,
-            "spatial_iters": 0,
-            "pixel_seconds": 0.0, "pixel_iters": 0,
-            "superpixel_seconds": 0.0, "superpixel_iters": 0,
-            "superpixel_batches": 0, "superpixel_padded_lanes": 0,
+        self._stats: Dict[str, float] = {
+            "requests": 0, "cache_hits": 0,
+            "spatial_requests": 0,          # legacy pre-registry counter
             "compress_seconds": 0.0,
         }
+        for route in ROUTES.values():
+            self._stats.setdefault(route.stat("seconds"), 0.0)
+            for k in ("batches", "images", "padded", "iters"):
+                self._stats.setdefault(route.stat(k), 0)
         # Per-route request/cache-hit counters (the route mix is what the
-        # ops dashboards page on; only the histogram route can ever hit).
-        self._method_requests = {m: 0 for m in METHODS}
-        self._method_cache_hits = {m: 0 for m in METHODS}
+        # ops dashboards page on; only cacheable routes can ever hit).
+        self._method_requests = {m: 0 for m in ROUTES}
+        self._method_cache_hits = {m: 0 for m in ROUTES}
 
     # -- ingest ------------------------------------------------------------
 
     def submit(self, img: np.ndarray, method: str = "histogram") -> int:
-        """Queue one image; returns its request id. Cache hits are still
-        materialized at flush time (the defuzzify LUT needs the pixels).
-
-        Routes (see ``METHODS``):
-
-        * ``"histogram"`` — the default scalar fast path: 256-bin
-          compression on ingest, bucketed batched fits, LRU cache.
-        * ``"pixel"`` — uncompressed per-image fused FCM; (H, W, D)
-          payloads cluster in D-dim feature space. The reference route.
-        * ``"spatial"`` — FCM_S on the full (H, W)/(D, H, W) pixel grid;
-          bypasses the histogram cache (positions matter).
-        * ``"superpixel"`` — SLIC compression on ingest to a (K, D)
-          weighted payload; color/multi-channel (H, W, D) or grayscale
-          (H, W). Batched at fixed K buckets; bypasses the 1-D
-          histogram LRU like the spatial route.
-        """
-        if method not in METHODS:
-            raise ValueError(f"unknown method {method!r}")
+        """Queue one image on a registered route; returns its request id.
+        Cache hits are still materialized at flush time (the defuzzify
+        LUT needs the pixels). See ``METHODS`` / the README routing
+        table for the built-in routes."""
+        route = ROUTES.get(method)
+        if route is None:
+            raise ValueError(f"unknown method {method!r}; registered "
+                             f"routes: {METHODS}")
         img = np.asarray(img)
-        # Reject bad payloads at ingest: a request failing inside flush()
-        # would discard the whole drained batch's results.
-        if method == "spatial" and img.ndim not in (2, 3):
-            raise ValueError(f"spatial requests need a (H, W) or (D, H, W) "
-                             f"pixel grid, got shape {img.shape}")
-        if method == "superpixel" and img.ndim not in (2, 3):
-            raise ValueError(f"superpixel requests need (H, W) or "
-                             f"(H, W, D) input, got shape {img.shape}")
-        if method == "pixel":
-            # 3-D pixel payloads are channels-LAST feature stacks; a
-            # (D, H, W) volume would silently cluster on W-dim rows, so
-            # anything that doesn't look like trailing channels is
-            # rejected here (volumes belong to histogram/spatial).
-            if img.ndim not in (2, 3) or (
-                    img.ndim == 3 and img.shape[-1] > 16):
-                raise ValueError(
-                    f"pixel requests need (H, W) or channels-last "
-                    f"(H, W, D<=16) input, got shape {img.shape}; "
-                    f"use method='histogram' or 'spatial' for volumes")
+        # Ingest validates eagerly: a request failing inside flush()
+        # would discard the whole drained batch's results. A raise here
+        # consumes neither a request id nor a counter.
+        pending = route.ingest(self, img, self._next_id)
         rid = self._next_id
         self._next_id += 1
         self._stats["requests"] += 1
         self._method_requests[method] += 1
         if method == "spatial":
             self._stats["spatial_requests"] += 1
-            self._spatial_queue.append(_PendingSpatial(rid, img))
-            return rid
-        if method == "pixel":
-            self._pixel_queue.append(_PendingPixels(rid, img))
-            return rid
-        if method == "superpixel":
-            t0 = time.perf_counter()
-            comp = SX.compress(img.astype(np.float32), self.superpixel_cfg)
-            self._stats["compress_seconds"] += time.perf_counter() - t0
-            self._superpixel_queue.append(_PendingSuperpixel(
-                rid, np.asarray(comp.features), np.asarray(comp.weights),
-                np.asarray(comp.label_map), comp.slic_iters))
-            return rid
-        flat = np.clip(img.reshape(-1).astype(np.int64), 0, self.n_bins - 1)
-        hist = np.bincount(flat, minlength=self.n_bins
-                           ).astype(np.float32)[:self.n_bins]
-        self._queue.append(_Pending(rid, img.shape, flat, hist,
-                                    hist.tobytes()))
+        self._queues[method].append(pending)
         return rid
 
     @staticmethod
@@ -234,71 +441,38 @@ class FCMServeEngine:
     # -- drain -------------------------------------------------------------
 
     def flush(self) -> List[SegmentationResult]:
-        """Run every queued request; returns results in submit order."""
+        """Run every queued request; returns results in submit order.
+        Route-agnostic: cache/dedup for cacheable routes, then group by
+        bucket key and run one batched solve per bucket."""
         results: Dict[int, SegmentationResult] = {}
-        # 1. answer what the cache already knows
-        misses: List[_Pending] = []
-        for p in self._queue:
-            centers = self._cache_get(p.key, p.hist)
-            if centers is not None:
+        for route in ROUTES.values():
+            pend = self._queues[route.name]
+            self._queues[route.name] = []
+            if not pend:
+                continue
+            dups: List[Any] = []
+            fitted: Dict[bytes, np.ndarray] = {}
+            if route.cacheable:
+                pend, dups = self._answer_from_cache(route, pend, results)
+            groups: "collections.OrderedDict[Hashable, List[Any]]" = \
+                collections.OrderedDict()
+            for p in pend:
+                groups.setdefault(route.bucket_key(self, p), []).append(p)
+            for group in groups.values():
+                i = 0
+                while i < len(group):
+                    chunk = group[i:i + self.batch_sizes[-1]]
+                    i += len(chunk)
+                    self._run_bucket(route, chunk,
+                                     self._bucket_for(len(chunk)),
+                                     results, fitted)
+            # duplicates ride on their representative's centers (kept
+            # locally: the LRU may be disabled, or evict mid-flush)
+            for p in dups:
                 self._stats["cache_hits"] += 1
-                self._method_cache_hits["histogram"] += 1
-                results[p.request_id] = self._materialize(
-                    p, centers, n_iters=0, cache_hit=True)
-            else:
-                misses.append(p)
-        self._queue.clear()
-        # 2. intra-flush dedup: fit one representative per histogram key
-        uniq: Dict[bytes, _Pending] = {}
-        dups: List[_Pending] = []
-        for p in misses:
-            if p.key in uniq:
-                dups.append(p)
-            else:
-                uniq[p.key] = p
-        # 3. bucketed batched fits for the representatives; keep this
-        # flush's centers locally so duplicates don't depend on the LRU
-        # cache (which may be disabled, or evict mid-flush).
-        fitted: Dict[bytes, np.ndarray] = {}
-        reps = list(uniq.values())
-        i = 0
-        while i < len(reps):
-            chunk = reps[i:i + self.batch_sizes[-1]]
-            bucket = self._bucket_for(len(chunk))
-            i += len(chunk)
-            self._run_bucket(chunk, bucket, results, fitted)
-        # 4. duplicates ride on their representative's centers
-        for p in dups:
-            self._stats["cache_hits"] += 1
-            self._method_cache_hits["histogram"] += 1
-            results[p.request_id] = self._materialize(
-                p, fitted[p.key], n_iters=0, cache_hit=True)
-        # 5. spatial requests: per-image FCM_S fits on full pixel grids,
-        # never consulting or populating the histogram cache.
-        spatial = self._spatial_queue
-        self._spatial_queue = []
-        for sp in spatial:
-            results[sp.request_id] = self._run_spatial(sp)
-        # 6. pixel requests: uncompressed per-image fused fits.
-        pixels = self._pixel_queue
-        self._pixel_queue = []
-        for px in pixels:
-            results[px.request_id] = self._run_pixels(px)
-        # 7. superpixel requests: group the compressed (K, D) payloads by
-        # (K, D) and run each group through bucketed batched vector fits.
-        sps = self._superpixel_queue
-        self._superpixel_queue = []
-        groups: Dict[Tuple[int, int], List[_PendingSuperpixel]] = {}
-        for q in sps:
-            groups.setdefault(q.features.shape, []).append(q)
-        for group in groups.values():
-            i = 0
-            while i < len(group):
-                chunk = group[i:i + self.batch_sizes[-1]]
-                i += len(chunk)
-                self._run_superpixel_bucket(chunk,
-                                            self._bucket_for(len(chunk)),
-                                            results)
+                self._method_cache_hits[route.name] += 1
+                results[p.request_id] = route.materialize(
+                    self, p, fitted[p.key], 0, True)
         return [results[rid] for rid in sorted(results)]
 
     def segment(self, imgs: Sequence[np.ndarray],
@@ -307,105 +481,59 @@ class FCMServeEngine:
         by_id = {r.request_id: r for r in self.flush()}
         return [by_id[i] for i in ids]
 
+    def _answer_from_cache(self, route: RouteSpec, pend: List[Any],
+                           results: Dict[int, SegmentationResult]):
+        """Cache lookups + intra-flush dedup (one fit per distinct key);
+        returns (representatives to fit, duplicates)."""
+        misses: List[Any] = []
+        for p in pend:
+            centers = self._cache_get(p.key, p.hist)
+            if centers is not None:
+                self._stats["cache_hits"] += 1
+                self._method_cache_hits[route.name] += 1
+                results[p.request_id] = route.materialize(
+                    self, p, centers, 0, True)
+            else:
+                misses.append(p)
+        uniq: Dict[bytes, Any] = {}
+        dups: List[Any] = []
+        for p in misses:
+            if p.key in uniq:
+                dups.append(p)
+            else:
+                uniq[p.key] = p
+        return list(uniq.values()), dups
+
     def _bucket_for(self, n: int) -> int:
         for b in self.batch_sizes:
             if n <= b:
                 return b
         return self.batch_sizes[-1]
 
-    def _run_bucket(self, chunk: List[_Pending], bucket: int,
+    def _run_bucket(self, route: RouteSpec, chunk: List[Any], bucket: int,
                     results: Dict[int, SegmentationResult],
                     fitted: Dict[bytes, np.ndarray]):
-        hists = np.stack([p.hist for p in chunk])
-        n_pad = bucket - len(chunk)
-        if n_pad:
-            # Uniform-histogram padding lanes converge fast and are dropped.
-            pad = np.ones((n_pad, self.n_bins), np.float32)
-            hists = np.concatenate([hists, pad])
+        problem, cfg = route.build_problem(self, chunk, bucket)
         t0 = time.perf_counter()
-        res = B.fit_batched(jnp.asarray(hists), self.cfg,
-                            n_bins=self.n_bins, compute_labels=False)
+        res = SV.solve_batched(problem, cfg)
         centers = np.asarray(res.centers)
-        self._stats["fit_seconds"] += time.perf_counter() - t0
-        self._stats["batches"] += 1
-        self._stats["batched_images"] += len(chunk)
-        self._stats["padded_lanes"] += n_pad
-        self._stats["fit_iters"] += int(res.total_iters)
-        for lane, p in enumerate(chunk):
-            fitted[p.key] = centers[lane]
-            self._cache_put(p.key, centers[lane], p.hist)
-            results[p.request_id] = self._materialize(
-                p, centers[lane], n_iters=int(res.n_iters[lane]),
-                cache_hit=False)
-
-    def _run_spatial(self, sp: _PendingSpatial) -> SegmentationResult:
-        t0 = time.perf_counter()
-        res = SP.fit_spatial(sp.pixels.astype(np.float32), self.spatial_cfg)
-        self._stats["spatial_seconds"] += time.perf_counter() - t0
-        self._stats["spatial_iters"] += res.n_iters
-        return SegmentationResult(sp.request_id, np.asarray(res.labels),
-                                  np.asarray(res.centers), res.n_iters,
-                                  cache_hit=False, method="spatial")
-
-    def _run_pixels(self, px: _PendingPixels) -> SegmentationResult:
-        img = px.pixels.astype(np.float32)
-        # (H, W, D) clusters in D-dim feature space; (H, W)/(N,) is the
-        # scalar case. Labels keep the spatial shape.
-        spatial_shape = img.shape[:-1] if img.ndim == 3 else img.shape
-        x = img.reshape(-1, img.shape[-1]) if img.ndim == 3 \
-            else img.reshape(-1)
-        t0 = time.perf_counter()
-        res = F.fit_fused(x, self.cfg)
-        self._stats["pixel_seconds"] += time.perf_counter() - t0
-        self._stats["pixel_iters"] += res.n_iters
-        return SegmentationResult(
-            px.request_id, np.asarray(res.labels).reshape(spatial_shape),
-            np.asarray(res.centers), res.n_iters, cache_hit=False,
-            method="pixel")
-
-    def _run_superpixel_bucket(self, chunk: List[_PendingSuperpixel],
-                               bucket: int,
-                               results: Dict[int, SegmentationResult]):
-        k, d = chunk[0].features.shape
-        feats = np.stack([q.features for q in chunk])
-        ws = np.stack([q.weights for q in chunk])
-        n_pad = bucket - len(chunk)
-        if n_pad:
-            # Benign padding lanes: a unit-weight feature ramp converges
-            # in a handful of iterations and is dropped on output.
-            ramp = np.broadcast_to(
-                np.linspace(0.0, 1.0, k, dtype=np.float32)[:, None], (k, d))
-            feats = np.concatenate(
-                [feats, np.broadcast_to(ramp, (n_pad, k, d))])
-            ws = np.concatenate([ws, np.ones((n_pad, k), np.float32)])
-        t0 = time.perf_counter()
-        # The superpixel config carries the FCM hyper-parameters for this
-        # route (it defaults to self.cfg's, but a caller-supplied one
-        # must govern the fit, not just the compression).
-        res = VF.fit_vector_batched(jnp.asarray(feats), jnp.asarray(ws),
-                                    self.superpixel_cfg)
-        centers = np.asarray(res.centers)
-        self._stats["superpixel_seconds"] += time.perf_counter() - t0
-        self._stats["superpixel_batches"] += 1
-        self._stats["superpixel_padded_lanes"] += n_pad
-        self._stats["superpixel_iters"] += int(res.total_iters)
-        for lane, q in enumerate(chunk):
-            sp_labels = np.asarray(F.labels_from_centers(
-                jnp.asarray(q.features), jnp.asarray(centers[lane])))
-            labels = sp_labels[q.label_map]
-            results[q.request_id] = SegmentationResult(
-                q.request_id, labels, centers[lane],
-                n_iters=int(res.n_iters[lane]), cache_hit=False,
-                method="superpixel")
-
-    def _materialize(self, p: _Pending, centers: np.ndarray,
-                     n_iters: int, cache_hit: bool) -> SegmentationResult:
-        # Defuzzify via a n_bins-entry LUT: label each bin once, gather.
-        vals = jnp.arange(self.n_bins, dtype=jnp.float32)
-        lut = np.asarray(F.labels_from_centers(vals, jnp.asarray(centers)))
-        labels = lut[p.flat].reshape(p.shape)
-        return SegmentationResult(p.request_id, labels,
-                                  np.asarray(centers), n_iters, cache_hit)
+        self._stats[route.stat("seconds")] += time.perf_counter() - t0
+        self._stats[route.stat("batches")] += 1
+        self._stats[route.stat("images")] += len(chunk)
+        self._stats[route.stat("padded")] += bucket - len(chunk)
+        self._stats[route.stat("iters")] += int(res.total_iters)
+        if route.cacheable:
+            for lane, p in enumerate(chunk):
+                fitted[p.key] = centers[lane]
+                self._cache_put(p.key, centers[lane], p.hist)
+        if route.materialize_batch is not None:
+            for r in route.materialize_batch(self, chunk, centers,
+                                             res.n_iters):
+                results[r.request_id] = r
+        else:
+            for lane, p in enumerate(chunk):
+                results[p.request_id] = route.materialize(
+                    self, p, centers[lane], int(res.n_iters[lane]), False)
 
     # -- cache -------------------------------------------------------------
 
@@ -439,22 +567,40 @@ class FCMServeEngine:
 
     # -- observability -----------------------------------------------------
 
+    # Legacy per-route queue attributes (pre-registry API, still used by
+    # tests and external monitors).
+    @property
+    def _queue(self) -> List[_Pending]:
+        return self._queues["histogram"]
+
+    @property
+    def _pixel_queue(self) -> List[_PendingPixels]:
+        return self._queues["pixel"]
+
+    @property
+    def _spatial_queue(self) -> List[_PendingSpatial]:
+        return self._queues["spatial"]
+
+    @property
+    def _superpixel_queue(self) -> List[_PendingSuperpixel]:
+        return self._queues["superpixel"]
+
     @property
     def queue_depth(self) -> int:
-        return (len(self._queue) + len(self._spatial_queue)
-                + len(self._pixel_queue) + len(self._superpixel_queue))
+        return sum(len(q) for q in self._queues.values())
 
     def stats(self) -> Dict[str, float]:
         s = dict(self._stats)
         s["queue_depth"] = self.queue_depth
         s["cache_entries"] = len(self._cache)
-        # Per-route request/cache-hit mix (only the histogram route is
-        # cacheable, but the dashboards want all four columns).
+        # Per-route request/cache-hit mix (only cacheable routes can hit,
+        # but the dashboards want every column).
         s["method_requests"] = dict(self._method_requests)
         s["method_cache_hits"] = dict(self._method_cache_hits)
-        # Hit rate over cacheable (histogram) traffic only — the bypass
-        # routes must not dilute it.
-        cacheable = self._method_requests["histogram"]
+        # Hit rate over cacheable traffic only — the bypass routes must
+        # not dilute it.
+        cacheable = sum(self._method_requests[r.name]
+                        for r in ROUTES.values() if r.cacheable)
         s["cache_hit_rate"] = (s["cache_hits"] / cacheable
                                if cacheable else 0.0)
         s["images_per_sec"] = (s["batched_images"] / s["fit_seconds"]

@@ -25,7 +25,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fcm as F
-from repro.core import vector_fcm as VF
 
 from . import slic as SL
 
@@ -66,11 +65,13 @@ def compress(img, cfg: SuperpixelFCMConfig = SuperpixelFCMConfig(),
     center rows (the update step already maintains them).
 
     ``use_pallas=None`` (the default — and what the serving engine's
-    ingest uses) auto-selects: the Pallas assignment kernel on TPU, the
-    jnp reference elsewhere (interpret-mode kernels are only for
-    correctness tests, not serving)."""
+    ingest uses) defers to the :mod:`repro.kernels.ops` dispatch
+    registry: the Pallas assignment kernel on TPU, the jnp reference
+    elsewhere (interpret-mode kernels are only for correctness tests,
+    not serving)."""
     if use_pallas is None:
-        use_pallas = jax.default_backend() == "tpu"
+        from repro.kernels import ops as kops
+        use_pallas = kops.select_step("slic_assign").name == "pallas"
     res = SL.fit_slic(img, cfg.slic_params(), use_pallas=use_pallas,
                       interpret=interpret)
     n_feat = res.centers.shape[1] - 2
@@ -101,7 +102,8 @@ def fit_superpixel(img, cfg: SuperpixelFCMConfig = SuperpixelFCMConfig(),
     ingest-time one)."""
     if comp is None:
         comp = compress(img, cfg, use_pallas=use_pallas, interpret=interpret)
-    res = VF.fit_vector_fcm(comp.features, comp.weights, cfg)
+    from repro.core import solver as SV
+    res = SV.solve(SV.vector_problem(comp.features, comp.weights, cfg), cfg)
     labels = broadcast_labels(res.labels, comp.label_map)
     return F.FCMResult(centers=res.centers, labels=labels,
                        n_iters=res.n_iters, final_delta=res.final_delta,

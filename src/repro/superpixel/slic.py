@@ -28,7 +28,9 @@ Two assignment implementations drive the same loop:
 
 Both accumulate the distance terms in the same order, so interpret-mode
 parity is exact up to genuine distance ties (which both resolve to the
-lowest center index).
+lowest center index). They are registered in the
+:mod:`repro.kernels.ops` dispatch registry under kind ``"slic_assign"``;
+``use_pallas=None`` lets the registry pick by platform.
 """
 from __future__ import annotations
 
@@ -40,6 +42,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fcm as F
+from repro.core import solver as SV
 
 _BIG = 3.4e38
 
@@ -173,9 +176,11 @@ def update_centers(img: jax.Array, labels: jax.Array, old: jax.Array,
 
 @partial(jax.jit, static_argnames=("gy", "gx", "sw", "tol", "max_iters"))
 def _slic_loop_ref(img, v0, gy, gx, sw, tol, max_iters):
-    step = lambda v: update_centers(img, assign_ref(img, v, gy, gx, sw),
-                                    v)[0]
-    return F._while_centers(step, v0, tol, max_iters)
+    from repro.kernels import ops as kops
+    assign = kops.build_step("slic_assign", "reference", gy=gy, gx=gx,
+                             sw=sw)
+    step = lambda v: update_centers(img, assign(img, v), v)[0]
+    return SV.while_centers(step, v0, tol, max_iters)
 
 
 @partial(jax.jit, static_argnames=("h", "w", "gy", "gx", "sw", "tol",
@@ -183,26 +188,32 @@ def _slic_loop_ref(img, v0, gy, gx, sw, tol, max_iters):
 def _slic_loop_pallas(xpad, wpad, v0, h, w, gy, gx, sw, tol, max_iters,
                       block_rows, interpret):
     from repro.kernels import ops as kops
+    assign = kops.build_step("slic_assign", "pallas", h=h, w=w, gy=gy,
+                             gx=gx, sw=sw, block_rows=block_rows,
+                             interpret=interpret)
 
     def step(v):
-        labels = kops.slic_assign(xpad, v, h, w, gy, gx, sw,
-                                  block_rows, interpret)
-        return update_centers(jnp.moveaxis(xpad, 0, -1), labels, v,
-                              weights=wpad)[0]
+        return update_centers(jnp.moveaxis(xpad, 0, -1), assign(xpad, v),
+                              v, weights=wpad)[0]
 
-    return F._while_centers(step, v0, tol, max_iters)
+    return SV.while_centers(step, v0, tol, max_iters)
 
 
 def fit_slic(img, params: SLICParams = SLICParams(),
-             use_pallas: bool = False,
+             use_pallas: Optional[bool] = False,
              block_rows: Optional[int] = None,
              interpret: Optional[bool] = None) -> SLICResult:
     """Run SLIC to convergence (or ``max_iters``) on a 2-D grayscale or
     (H, W, D) multi-channel image; the assign+update iteration is one
-    device-resident ``while_loop``. ``use_pallas=True`` swaps the
-    assignment for the tiled Pallas kernel (padding happens once,
-    outside the loop); ``block_rows=None`` sizes the kernel's row blocks
-    to the VMEM budget for this (K, W)."""
+    device-resident ``while_loop`` driven by the solver core's
+    convergence test. ``use_pallas=True`` swaps the assignment for the
+    tiled Pallas kernel (padding happens once, outside the loop);
+    ``use_pallas=None`` lets the :mod:`repro.kernels.ops` registry pick
+    by platform; ``block_rows=None`` sizes the kernel's row blocks to
+    the VMEM budget for this (K, W)."""
+    if use_pallas is None:
+        from repro.kernels import ops as kops
+        use_pallas = kops.select_step("slic_assign").name == "pallas"
     img = _as_hwd(img)
     h, w, d = img.shape
     gy, gx = grid_shape(h, w, params.n_segments)

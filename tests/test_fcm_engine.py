@@ -334,3 +334,87 @@ def test_bad_batch_sizes_rejected():
         FCMServeEngine(CFG, batch_sizes=())
     with pytest.raises(ValueError):
         FCMServeEngine(CFG, batch_sizes=(0, 8))
+
+
+# ---------------------------------------------------------------------------
+# Route registry: cross-request batching for spatial/pixel, extensibility
+# ---------------------------------------------------------------------------
+
+def test_spatial_requests_batch_across_requests():
+    """Same-shape FCM_S requests in one flush share ONE batched solve,
+    and every request still gets its solo-fit trajectory."""
+    from repro.core import solver as SV
+
+    eng = FCMServeEngine(CFG, batch_sizes=(1, 8, 64))
+    imgs = [phantom.noisy_phantom_slice(40, 48, noise=6.0 + 3 * i,
+                                        impulse=0.04, seed=i)[0]
+            for i in range(6)]
+    results = eng.segment(imgs, method="spatial")
+    s = eng.stats()
+    assert s["spatial_batches"] == 1                 # one device loop
+    assert s["spatial_batched_images"] == 6
+    assert s["spatial_padded_lanes"] == 2            # 6 -> bucket 8
+    for img, r in zip(imgs, results):
+        solo = SV.solve(SV.spatial_problem(img.astype(np.float32),
+                                           eng.spatial_cfg),
+                        eng.spatial_cfg)
+        np.testing.assert_allclose(r.centers, np.asarray(solo.centers),
+                                   atol=1e-5)
+        assert (r.labels == np.asarray(solo.labels)).all()
+        assert r.n_iters == solo.n_iters
+
+
+def test_spatial_mixed_shapes_bucket_separately():
+    eng = FCMServeEngine(CFG, batch_sizes=(4,))
+    a = [phantom.noisy_phantom_slice(32, 32, seed=i)[0] for i in range(2)]
+    b = [phantom.noisy_phantom_slice(32, 48, seed=i)[0] for i in range(3)]
+    eng.segment(a + b, method="spatial")
+    s = eng.stats()
+    assert s["spatial_batches"] == 2                 # one per grid shape
+    assert s["spatial_batched_images"] == 5
+    assert s["spatial_padded_lanes"] == 3            # 2->4 and 3->4
+
+
+def test_pixel_requests_batch_across_requests():
+    from repro.core import solver as SV
+
+    eng = FCMServeEngine(CFG, batch_sizes=(4,))
+    imgs = [phantom.phantom_slice(40, 44, noise=2.0 + i, seed=i)[0]
+            for i in range(3)]
+    results = eng.segment(imgs, method="pixel")
+    s = eng.stats()
+    assert s["pixel_batches"] == 1
+    assert s["pixel_batched_images"] == 3 and s["pixel_padded_lanes"] == 1
+    for img, r in zip(imgs, results):
+        solo = SV.solve(SV.pixel_problem(
+            img.ravel().astype(np.float32), CFG), CFG)
+        np.testing.assert_allclose(r.centers, np.asarray(solo.centers),
+                                   atol=1e-5)
+        assert (r.labels == np.asarray(solo.labels).reshape(40, 44)).all()
+
+
+def test_route_registration_roundtrip():
+    """A new serving method costs one RouteSpec registration: flush,
+    bucketing and stats need no engine changes."""
+    from repro.serving import fcm_engine as E
+
+    base = E.ROUTES["histogram"]
+    spec = E.RouteSpec(name="histogram-shadow", ingest=base.ingest,
+                       bucket_key=base.bucket_key,
+                       build_problem=base.build_problem,
+                       materialize=base.materialize,
+                       cacheable=False, stats_prefix="histogram_shadow")
+    E.register_route(spec)
+    try:
+        assert "histogram-shadow" in E.METHODS
+        eng = FCMServeEngine(CFG)
+        img, _ = phantom.phantom_slice(32, 32, seed=0)
+        res = eng.segment([img], method="histogram-shadow")[0]
+        direct = eng.segment([img])[0]
+        np.testing.assert_allclose(res.centers, direct.centers, atol=1e-5)
+        s = eng.stats()
+        assert s["histogram_shadow_batches"] == 1
+        assert s["method_requests"]["histogram-shadow"] == 1
+    finally:
+        del E.ROUTES["histogram-shadow"]
+        E.METHODS = tuple(E.ROUTES)

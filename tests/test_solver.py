@@ -1,0 +1,333 @@
+"""Solver-core parity suite.
+
+Every deprecated ``fit_*`` adapter must (a) emit a DeprecationWarning
+and (b) match what building the FCMProblem and calling ``solve()`` /
+``solve_batched()`` directly produces, center-for-center (<= 1e-5) and
+iteration-for-iteration — on pixel, histogram, spatial, vector and
+batched problems, including ragged / non-128-multiple shapes. The new
+public API itself must be DeprecationWarning-clean (CI runs this file
+under ``-W error::DeprecationWarning``).
+"""
+import warnings
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import batched as B
+from repro.core import fcm as F
+from repro.core import histogram as H
+from repro.core import sequential as SQ
+from repro.core import solver as SV
+from repro.core import spatial as S
+from repro.core import vector_fcm as VF
+from repro.data import phantom
+from repro.kernels import ops as kops
+
+CFG = F.FCMConfig(max_iters=300)
+ATOL = 1e-5
+
+
+def _legacy(fn, *args, **kwargs):
+    """Call a deprecated alias, asserting it warns (works under -W
+    error::DeprecationWarning too — pytest.warns captures first)."""
+    with pytest.warns(DeprecationWarning):
+        return fn(*args, **kwargs)
+
+
+def _assert_result_parity(old, new, atol=ATOL):
+    np.testing.assert_allclose(np.asarray(old.centers),
+                               np.asarray(new.centers), atol=atol)
+    assert old.n_iters == new.n_iters
+    assert (np.asarray(old.labels) == np.asarray(new.labels)).all()
+
+
+# ---------------------------------------------------------------------------
+# Single-problem parity (ragged, non-128-multiple shapes throughout)
+# ---------------------------------------------------------------------------
+
+def test_pixel_parity_scalar():
+    img, _ = phantom.phantom_slice(37, 53, seed=1)        # 1961 pixels
+    x = img.ravel().astype(np.float32)
+    old = _legacy(F.fit_fused, x, CFG)
+    new = SV.solve(SV.pixel_problem(x, CFG), CFG)
+    _assert_result_parity(old, new)
+
+
+def test_pixel_parity_vector_features():
+    rng = np.random.default_rng(2)
+    x = np.concatenate([rng.normal((0, 0), 0.2, size=(70, 2)),
+                        rng.normal((3, 3), 0.2, size=(59, 2))]
+                       ).astype(np.float32)
+    cfg = F.FCMConfig(n_clusters=2, max_iters=80)
+    old = _legacy(F.fit_fused, x, cfg)
+    new = SV.solve(SV.pixel_problem(x, cfg), cfg)
+    _assert_result_parity(old, new)
+    assert new.centers.shape == (2, 2)
+
+
+def test_pixel_parity_explicit_v0_and_membership():
+    img, _ = phantom.phantom_slice(41, 47, seed=3)
+    x = img.ravel().astype(np.float32)
+    v0 = jnp.asarray([10.0, 60.0, 120.0, 200.0])
+    old = _legacy(F.fit_fused, x, CFG, v0=v0, keep_membership=True)
+    new = SV.solve(SV.pixel_problem(x, CFG, v0=v0), CFG,
+                   keep_membership=True)
+    _assert_result_parity(old, new)
+    np.testing.assert_allclose(np.asarray(old.membership),
+                               np.asarray(new.membership), atol=ATOL)
+
+
+def test_histogram_parity():
+    img, _ = phantom.phantom_slice(45, 59, seed=4)
+    x = img.ravel().astype(np.float32)
+    old = _legacy(H.fit_histogram, x, CFG)
+    new = SV.solve(SV.histogram_problem(x, CFG), CFG)
+    np.testing.assert_allclose(np.asarray(old.centers),
+                               np.asarray(new.centers), atol=ATOL)
+    assert old.n_iters == new.n_iters
+    # adapter labels are per-pixel; solve's are per-bin — related by LUT
+    lut = np.asarray(new.labels)
+    flat = np.clip(x.astype(np.int64), 0, 255)
+    assert (np.asarray(old.labels) == lut[flat]).all()
+
+
+def test_histogram_parity_prebuilt_hist():
+    img, _ = phantom.phantom_slice(33, 35, seed=5)
+    x = img.ravel().astype(np.float32)
+    hist = H.intensity_histogram(jnp.asarray(x))
+    old = _legacy(H.fit_histogram, x, CFG, hist=hist)
+    new = SV.solve(SV.histogram_problem(cfg=CFG, hist=hist), CFG)
+    np.testing.assert_allclose(np.asarray(old.centers),
+                               np.asarray(new.centers), atol=ATOL)
+    assert old.n_iters == new.n_iters
+
+
+@pytest.mark.parametrize("shape", [(37, 53), (5, 19, 23)])
+def test_spatial_parity(shape):
+    img, _ = (phantom.noisy_phantom_slice(*shape, noise=8.0, impulse=0.03,
+                                          seed=6) if len(shape) == 2
+              else phantom.noisy_phantom_volume(*shape, noise=8.0,
+                                                impulse=0.03, seed=6))
+    scfg = S.SpatialFCMConfig(alpha=1.2, neighbors=8)
+    old = _legacy(S.fit_spatial, img.astype(np.float32), scfg)
+    new = SV.solve(SV.spatial_problem(img.astype(np.float32), scfg), scfg)
+    _assert_result_parity(old, new)
+    assert new.labels.shape == img.shape
+
+
+def test_spatial_parity_pallas():
+    img, _ = phantom.noisy_phantom_slice(19, 23, noise=8.0, seed=7)
+    scfg = S.SpatialFCMConfig(alpha=1.0, neighbors=4, max_iters=40)
+    old = _legacy(S.fit_spatial, img.astype(np.float32), scfg,
+                  use_pallas=True, block_rows=8, interpret=True)
+    new = SV.solve(SV.spatial_problem(img.astype(np.float32), scfg), scfg,
+                   backend="pallas", block_rows=8, interpret=True)
+    _assert_result_parity(old, new)
+
+
+def test_vector_parity():
+    rng = np.random.default_rng(8)
+    feats = rng.uniform(0, 255, (73, 3)).astype(np.float32)
+    w = rng.integers(1, 40, 73).astype(np.float32)
+    old = _legacy(VF.fit_vector_fcm, feats, w, CFG)
+    new = SV.solve(SV.vector_problem(feats, w, CFG), CFG)
+    _assert_result_parity(old, new)
+    assert new.centers.shape == (CFG.n_clusters, 3)
+
+
+def test_staged_parity():
+    img, _ = phantom.phantom_slice(31, 33, seed=9)
+    x = img.ravel().astype(np.float32)
+    cfg = F.FCMConfig(max_iters=60, seed=5)
+    old = _legacy(F.fit_baseline, x, cfg)
+    # no explicit seed: solve() must thread cfg.seed into the staged
+    # backend's random membership init
+    new = SV.solve(SV.pixel_problem(x, cfg), cfg, backend="staged")
+    _assert_result_parity(old, new)
+    assert old.final_delta == new.final_delta
+
+
+def test_sequential_backend_matches_numpy_reference():
+    rng = np.random.default_rng(10)
+    x = rng.integers(0, 256, size=700).astype(np.float32)
+    v_np, lab_np, it_np = SQ.fcm_sequential_numpy(x, c=3, seed=2,
+                                                  max_iters=80)
+    res = SV.solve(SV.pixel_problem(x, c=3), backend="sequential",
+                   eps=5e-3, max_iters=80, seed=2)
+    np.testing.assert_allclose(np.sort(np.asarray(res.centers)),
+                               np.sort(v_np), atol=1e-5)
+    assert res.n_iters == it_np
+    assert (np.asarray(res.labels) == lab_np).all()
+
+
+# ---------------------------------------------------------------------------
+# Batched parity (per-lane masking == solo trajectories)
+# ---------------------------------------------------------------------------
+
+def test_batched_histogram_parity():
+    imgs = [phantom.phantom_slice(37 + 6 * i, 53, noise=2.0 + 3 * i,
+                                  seed=i)[0] for i in range(4)]
+    old = _legacy(B.fit_batched, imgs, CFG)
+    hists = B.histograms_of(imgs)
+    new = SV.solve_batched(SV.batch_problems(B.hist_rows(hists), hists,
+                                             cfg=CFG), CFG)
+    np.testing.assert_allclose(np.asarray(old.centers),
+                               np.asarray(new.centers), atol=ATOL)
+    np.testing.assert_array_equal(old.n_iters, new.n_iters)
+    # and each lane is a solo solve's trajectory
+    for i, img in enumerate(imgs):
+        solo = SV.solve(SV.histogram_problem(
+            img.ravel().astype(np.float32), CFG), CFG)
+        np.testing.assert_allclose(np.asarray(new.centers[i]),
+                                   np.asarray(solo.centers), atol=1e-4)
+        assert new.n_iters[i] == solo.n_iters
+
+
+def test_batched_pixels_parity():
+    xs = np.stack([phantom.phantom_slice(41, 43, seed=20 + i)[0]
+                   for i in range(3)]).astype(np.float32)
+    old = _legacy(B.fit_batched_pixels, xs, CFG)
+    new = SV.solve_batched(
+        SV.batch_problems(xs.reshape(3, -1), cfg=CFG), CFG)
+    np.testing.assert_allclose(np.asarray(old.centers),
+                               np.asarray(new.centers), atol=ATOL)
+    np.testing.assert_array_equal(old.n_iters, new.n_iters)
+
+
+def test_batched_vector_parity():
+    rng = np.random.default_rng(11)
+    feats = rng.uniform(0, 255, (3, 61, 3)).astype(np.float32)
+    ws = rng.integers(1, 30, (3, 61)).astype(np.float32)
+    old = _legacy(VF.fit_vector_batched, feats, ws, CFG)
+    new = SV.solve_batched(SV.batch_problems(feats, ws, cfg=CFG), CFG)
+    np.testing.assert_allclose(np.asarray(old.centers),
+                               np.asarray(new.centers), atol=ATOL)
+    np.testing.assert_array_equal(old.n_iters, new.n_iters)
+    for i in range(3):
+        solo = SV.solve(SV.vector_problem(feats[i], ws[i], CFG), CFG)
+        np.testing.assert_allclose(np.asarray(new.centers[i]),
+                                   np.asarray(solo.centers), atol=1e-4)
+        assert new.n_iters[i] == solo.n_iters
+
+
+def test_batched_spatial_lanes_match_solo_solves():
+    """The new capability the engine's spatial batching rides on: a
+    stacked stencil batch converges lane-for-lane like solo FCM_S."""
+    imgs = np.stack([phantom.noisy_phantom_slice(37, 45, noise=6.0 + 4 * i,
+                                                 impulse=0.04, seed=i)[0]
+                     for i in range(3)]).astype(np.float32)
+    scfg = S.SpatialFCMConfig(alpha=1.0, neighbors=4)
+    batch = SV.batch_problems(
+        imgs, stencil=SV.StencilSpec(alpha=scfg.alpha,
+                                     neighbors=scfg.neighbors), cfg=scfg)
+    res = SV.solve_batched(batch, scfg)
+    assert len(set(res.n_iters.tolist())) >= 1
+    assert res.total_iters == int(res.n_iters.max())
+    for i in range(3):
+        solo = SV.solve(SV.spatial_problem(imgs[i], scfg), scfg)
+        np.testing.assert_allclose(np.asarray(res.centers[i]),
+                                   np.asarray(solo.centers), atol=ATOL)
+        assert res.n_iters[i] == solo.n_iters
+
+
+# ---------------------------------------------------------------------------
+# New API hygiene + controls
+# ---------------------------------------------------------------------------
+
+def test_new_api_is_deprecationwarning_clean():
+    img, _ = phantom.phantom_slice(21, 27, seed=12)
+    x = img.ravel().astype(np.float32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        SV.solve(SV.pixel_problem(x, CFG), CFG)
+        SV.solve(SV.histogram_problem(x, CFG), CFG)
+        SV.solve(SV.spatial_problem(img.astype(np.float32), alpha=0.5), CFG)
+        hists = B.histograms_of([img])
+        SV.solve_batched(SV.batch_problems(B.hist_rows(hists), hists,
+                                           cfg=CFG), CFG)
+
+
+def test_tol_override_forces_fixed_iterations():
+    img, _ = phantom.phantom_slice(21, 27, seed=13)
+    x = img.ravel().astype(np.float32)
+    res = SV.solve(SV.pixel_problem(x, CFG), tol=-1.0, max_iters=7)
+    assert res.n_iters == 7
+
+
+def test_solve_rejects_mismatched_batchness():
+    x = np.zeros((32,), np.float32)
+    with pytest.raises(ValueError, match="solve_batched"):
+        SV.solve(SV.batch_problems(np.zeros((2, 16), np.float32)))
+    with pytest.raises(ValueError, match="batch=True"):
+        SV.solve_batched(SV.pixel_problem(x))
+    with pytest.raises(ValueError, match="backend"):
+        SV.solve(SV.pixel_problem(x), backend="warp-drive")
+
+
+def test_problem_validation():
+    with pytest.raises(ValueError, match="no row weights"):
+        SV.FCMProblem(features=np.zeros((4, 4), np.float32),
+                      weights=np.ones(16, np.float32),
+                      stencil=SV.StencilSpec())
+    with pytest.raises(ValueError, match="connected"):
+        SV.spatial_problem(np.zeros((8, 8), np.float32), neighbors=5)
+    with pytest.raises(ValueError, match="pixel grid"):
+        SV.spatial_problem(np.zeros((64,), np.float32))
+    with pytest.raises(ValueError, match="feature rows"):
+        SV.FCMProblem(features=np.zeros((2, 3, 4), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Step dispatch registry
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_all_kinds_and_impls():
+    pairs = {(i.kind, i.name) for i in kops.step_impls()}
+    for kind in ("flat", "stencil", "slic_assign"):
+        assert (kind, "reference") in pairs
+        assert (kind, "pallas") in pairs
+        assert [i.name for i in kops.step_impls(kind)]
+
+
+def test_registry_platform_dispatch():
+    # Off-TPU the reference step always wins by default.
+    assert kops.select_step("flat", platform="cpu").name == "reference"
+    assert kops.select_step("stencil", platform="cpu").name == "reference"
+    # On TPU the Pallas kernels win where eligible ...
+    assert kops.select_step("flat", platform="tpu", n_feat=1).name == "pallas"
+    assert kops.select_step("stencil", platform="tpu").name == "pallas"
+    # ... but shape/vmap restrictions fall back to the reference.
+    assert kops.select_step("flat", platform="tpu", n_feat=3
+                            ).name == "reference"
+    assert kops.select_step("flat", platform="tpu", n_feat=1,
+                            batched=True).name == "reference"
+
+
+def test_registry_prefer_and_errors():
+    assert kops.select_step("flat", prefer="pallas", n_feat=1
+                            ).name == "pallas"
+    with pytest.raises(ValueError, match="registered"):
+        kops.select_step("flat", prefer="cuda")
+    with pytest.raises(ValueError, match="scalar"):
+        kops.select_step("flat", prefer="pallas", n_feat=3)
+    with pytest.raises(ValueError, match="batched"):
+        kops.select_step("flat", prefer="pallas", n_feat=1, batched=True)
+    with pytest.raises(ValueError, match="unknown step kind"):
+        kops.select_step("warp")
+
+
+def test_registry_registration_roundtrip():
+    """A new variant costs one registration (and can be torn down)."""
+    @kops.register_step("flat", "test-noop")
+    def _noop(feats, weights, m, **_):
+        return lambda v: v
+    try:
+        assert kops.select_step("flat", prefer="test-noop").name == \
+            "test-noop"
+        step = kops.build_step("flat", "test-noop", feats=None,
+                               weights=None, m=2.0)
+        v = jnp.ones((4, 1))
+        assert (step(v) == v).all()
+    finally:
+        del kops._STEP_REGISTRY[("flat", "test-noop")]
