@@ -1,8 +1,9 @@
 """Benchmark harness: one module per paper table/figure. Prints
 ``name,us_per_call,derived`` CSV lines and writes the consolidated
-``benchmarks/out/BENCH_pr4.json`` aggregating the batched / spatial /
-superpixel serving numbers, so the perf trajectory is machine-readable
-across PRs.
+``benchmarks/out/BENCH_pr5.json`` aggregating the batched / spatial /
+superpixel serving numbers (including the engine-overhead gate the
+device-resident route programs must hold), so the perf trajectory is
+machine-readable across PRs.
 
   table1_variants    — paper Table 1 analogue (variant ladder)
   fig7_dsc           — paper Fig. 7 DSC parity (parallel == sequential)
@@ -29,7 +30,7 @@ def main(argv=None):
                     help="CI smoke: small images, single timing reps")
     ap.add_argument("--skip-paper-tables", action="store_true",
                     help="run only the serving sections that feed "
-                         "BENCH_pr4.json")
+                         "BENCH_pr5.json")
     args = ap.parse_args(argv)
 
     import jax
@@ -45,7 +46,7 @@ def main(argv=None):
         table3_speedup.run()
         roofline_report.run()
 
-    throughput = batched_throughput.run()
+    throughput = batched_throughput.run(tiny=args.tiny)
     spatial_argv = [] if jax.default_backend() == "tpu" else ["--no-pallas"]
     if args.tiny:
         spatial_argv += ["--size", "48"]
@@ -53,10 +54,11 @@ def main(argv=None):
     superpixel = superpixel_fcm.main(["--tiny"] if args.tiny else [])
 
     bench = {
-        "pr": 4,
+        "pr": 5,
         "backend": jax.default_backend(),
         "tiny": args.tiny,
-        # serving-path throughput (batched histogram + batched spatial)
+        # serving-path throughput (batched histogram + batched spatial),
+        # incl. the B=64 engine-overhead gate and stage breakdown
         "batched_throughput": throughput,
         # FCM_S robustness/wall-clock sweep
         "spatial_fcm": spatial,
@@ -65,7 +67,7 @@ def main(argv=None):
     }
     out_dir = os.path.join(os.path.dirname(__file__), "out")
     os.makedirs(out_dir, exist_ok=True)
-    out_path = os.path.join(out_dir, "BENCH_pr4.json")
+    out_path = os.path.join(out_dir, "BENCH_pr5.json")
     with open(out_path, "w") as f:
         json.dump(bench, f, indent=1)
     print(f"wrote {out_path}")

@@ -37,7 +37,14 @@ problem shape and platform; ``backend=`` forces a choice:
   convergence test (what :func:`repro.core.fcm.fit_baseline` wraps),
 * ``"sequential"`` — the single-core numpy comparator from
   :mod:`repro.core.sequential` (the paper's CPU baseline), so the
-  paper's CPU-vs-device comparison runs from this one entry point.
+  paper's CPU-vs-device comparison runs from this one entry point,
+* ``"resident"``   — the VMEM-resident whole-solve kernel: for flat
+  problems that fit on-chip (<= 256 rows, c <= 8, D <= 8 — histogram
+  and superpixel payloads) the COMPLETE convergence loop runs inside
+  one ``pallas_call``, zero HBM round-trips and zero per-iteration
+  dispatch. ``auto`` picks it on TPU when the problem fits; off-TPU it
+  falls back to the reference step (pass ``interpret=True`` to force
+  the kernel for parity testing).
 """
 from __future__ import annotations
 
@@ -55,7 +62,8 @@ from . import fcm as F
 _D2_FLOOR = 1e-12
 _BIG = 3.4e38
 
-BACKENDS = ("auto", "reference", "pallas", "staged", "sequential")
+BACKENDS = ("auto", "reference", "pallas", "staged", "sequential",
+            "resident")
 
 
 def warn_deprecated(old: str, new: str) -> None:
@@ -150,6 +158,15 @@ class FCMProblem:
         if self.scalar:
             return 1
         return self.features.shape[-1]
+
+    @property
+    def n_rows(self) -> Optional[int]:
+        """Row count of a flat problem (None for stencil problems) —
+        what the registry's VMEM-residency bounds are checked against."""
+        if self.stencil is not None:
+            return None
+        lead = 1 if self.batch else 0
+        return int(self.features.shape[lead])
 
     def rows(self) -> Tuple[jax.Array, jax.Array]:
         """Canonical ``(K, D)`` rows + ``(K,)`` weights (flat problems;
@@ -391,6 +408,18 @@ def _flat_loop_pallas(x2d, w2d, v0, c, m, tol, max_iters, block_rows,
     return while_centers(step, v0, tol, max_iters)
 
 
+@partial(jax.jit, static_argnames=("c", "m", "max_iters", "interpret"))
+def _flat_loop_resident(x4, w3, v0, c, m, tol, max_iters, interpret):
+    """Single-problem face of the VMEM-resident whole-solve kernel
+    (one lane); returns the same (v, delta, it) triple as the other
+    loop drivers."""
+    from repro.kernels import ops as kops
+    solve_fn = kops.build_step("flat", "resident", x4=x4, w3=w3, m=m,
+                               max_iters=max_iters, interpret=interpret)
+    v, delta, it = solve_fn(v0[None], jnp.asarray(tol, jnp.float32)[None])
+    return v[0], delta[0], it[0]
+
+
 @partial(jax.jit, static_argnames=("m", "alpha", "neighbors", "max_iters"))
 def _stencil_loop(img, v0, m, alpha, neighbors, tol, max_iters):
     from repro.kernels import ops as kops
@@ -410,13 +439,30 @@ def _stencil_loop_pallas(xpad, wpad, v0, m, alpha, neighbors, tol,
     return while_centers(step, v0, tol, max_iters)
 
 
-@partial(jax.jit, static_argnames=("c", "m", "max_iters"))
-def _flat_batched_loop(feats, w, c, m, eps, max_iters):
-    """feats (B, K, D), w (B, K) -> (v (B, c, D), delta, iters, total)."""
+def flat_batched_solve(feats, w, c, m, eps, max_iters,
+                       impl: str = "reference", interpret: bool = False):
+    """Traceable batched flat solve: feats (B, K, D), w (B, K) ->
+    (v (B, c, D), delta (B,), iters (B,), total). The core both jitted
+    loop drivers wrap, exported un-jitted so larger device programs
+    (the serving engine's fused route programs) can inline it and keep a
+    whole request batch at ONE dispatch. ``impl`` picks the registry
+    implementation: ``"reference"`` is the per-lane-masked vmapped
+    ``while_loop``; ``"resident"`` runs every lane's complete
+    convergence loop inside one whole-solve kernel (each lane stops at
+    its own convergence point, so trajectories match solo solves either
+    way)."""
+    from repro.kernels import ops as kops
     b, _, d = feats.shape
     lo, hi = jax.vmap(weighted_support)(feats, w)           # (B, D) each
     v0 = linspace_from_support(lo, hi, c)                   # (B, c, D)
     tol = _tol_from_range(jnp.max(hi - lo, axis=1), eps)
+
+    if impl == "resident":
+        x4, w3 = kops.tile_rows_batched(feats, w)
+        solve_fn = kops.build_step("flat", "resident", x4=x4, w3=w3, m=m,
+                                   max_iters=max_iters, interpret=interpret)
+        v, delta, iters = solve_fn(v0, tol)
+        return v, delta, iters, jnp.max(iters)
 
     vstep = jax.vmap(weighted_center_step, in_axes=(0, 0, 0, None))
 
@@ -426,6 +472,20 @@ def _flat_batched_loop(feats, w, c, m, eps, max_iters):
     v, delta, iters, it = masked_while_centers(
         flat_step, v0.reshape(b, c * d), tol, max_iters)
     return v.reshape(b, c, d), delta, iters, it
+
+
+@partial(jax.jit, static_argnames=("c", "m", "max_iters"))
+def _flat_batched_loop(feats, w, c, m, eps, max_iters):
+    """feats (B, K, D), w (B, K) -> (v (B, c, D), delta, iters, total)."""
+    return flat_batched_solve(feats, w, c, m, eps, max_iters)
+
+
+@partial(jax.jit, static_argnames=("c", "m", "max_iters", "interpret"))
+def _flat_batched_loop_resident(feats, w, c, m, eps, max_iters, interpret):
+    """Whole-solve-kernel twin of :func:`_flat_batched_loop`: one
+    ``pallas_call`` runs every lane to its own convergence."""
+    return flat_batched_solve(feats, w, c, m, eps, max_iters,
+                              impl="resident", interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("c", "m", "alpha", "neighbors",
@@ -465,15 +525,18 @@ def _resolve(cfg, eps, max_iters, seed=0):
     return float(eps), int(max_iters), int(seed)
 
 
-def _select_impl(problem: FCMProblem, backend: str,
-                 batch: bool = False) -> str:
-    """Registry dispatch: which step implementation runs this problem."""
+def _select_impl(problem: FCMProblem, backend: str, batch: bool = False,
+                 force_platform: Optional[str] = None) -> str:
+    """Registry dispatch: which step implementation runs this problem.
+    ``force_platform`` overrides the platform check (``interpret=True``
+    forces the resident kernel off-TPU for parity testing)."""
     from repro.kernels import ops as kops
     prefer = {"auto": None, "reference": "reference",
-              "pallas": "pallas"}[backend]
+              "pallas": "pallas", "resident": "resident"}[backend]
     kind = "stencil" if problem.stencil is not None else "flat"
-    impl = kops.select_step(kind, prefer=prefer, n_feat=problem.n_feat,
-                            batched=batch)
+    impl = kops.select_step(kind, prefer=prefer, platform=force_platform,
+                            n_feat=problem.n_feat, batched=batch,
+                            n_rows=problem.n_rows, c=problem.c)
     return impl.name
 
 
@@ -510,7 +573,11 @@ def solve(problem: FCMProblem, cfg: Optional[F.FCMConfig] = None, *,
                             seed=seed, u0=u0,
                             keep_membership=keep_membership)
 
-    impl = _select_impl(problem, backend)
+    # interpret=True forces Pallas-family impls off-platform (tests);
+    # without it backend="resident" degrades to the reference step
+    # off-TPU, per the registry's declared fallback.
+    force = "tpu" if (backend == "resident" and interpret) else None
+    impl = _select_impl(problem, backend, force_platform=force)
     v0, tol = _single_init(problem, eps, tol)
     c, m = problem.c, problem.m
 
@@ -536,7 +603,14 @@ def solve(problem: FCMProblem, cfg: Optional[F.FCMConfig] = None, *,
                            membership=u if keep_membership else None)
 
     feats2, w = problem.rows()
-    if impl == "pallas":
+    if impl == "resident":
+        from repro.kernels import ops as kops
+        x4, w3 = kops.tile_rows_batched(feats2[None], w[None])
+        if interpret is None:
+            interpret = kops._interpret_default()
+        v, delta, it = _flat_loop_resident(x4, w3, v0, c, m, tol,
+                                           max_iters, interpret)
+    elif impl == "pallas":
         from repro.kernels import ops as kops
         x2d, w2d = kops.tile_rows(feats2[:, 0], w, block_rows)
         if interpret is None:
@@ -545,7 +619,8 @@ def solve(problem: FCMProblem, cfg: Optional[F.FCMConfig] = None, *,
                                          max_iters, block_rows, interpret)
     else:
         v, delta, it = _flat_loop(feats2, w, v0, c, m, tol, max_iters)
-    labels = F.labels_from_centers(feats2, v)
+    from repro.kernels import ops as kops
+    labels = kops.defuzzify_labels(feats2, v, interpret=interpret)
     u = F.update_membership(feats2, v, m) if keep_membership else None
     centers = v[:, 0] if problem.scalar else v
     return F.FCMResult(centers=centers, labels=labels, n_iters=int(it),
@@ -565,19 +640,23 @@ class BatchedFCMResult:
 def solve_batched(problem: FCMProblem, cfg: Optional[F.FCMConfig] = None, *,
                   eps: Optional[float] = None,
                   max_iters: Optional[int] = None,
-                  backend: str = "auto") -> BatchedFCMResult:
-    """Solve a stacked batch of independent problems (``batch=True``)
-    under per-lane convergence masking: one device loop, each lane
-    freezing at its own convergence point, so a lane's trajectory is
-    identical to what :func:`solve` would produce for it alone."""
+                  backend: str = "auto",
+                  interpret: Optional[bool] = None) -> BatchedFCMResult:
+    """Solve a stacked batch of independent problems (``batch=True``):
+    one device loop — the per-lane-masked reference ``while_loop``, or
+    the VMEM-resident whole-solve kernel (``backend="resident"``, or
+    ``auto`` on TPU when the problem fits) — with each lane freezing at
+    its own convergence point, so a lane's trajectory is identical to
+    what :func:`solve` would produce for it alone."""
     if not problem.batch:
         raise ValueError("solve_batched() needs a batch=True problem "
                          "(see batch_problems())")
-    if backend not in ("auto", "reference"):
-        raise ValueError(f"batched solves are reference-step only "
-                         f"(vmapped); got backend={backend!r}")
+    if backend not in ("auto", "reference", "resident"):
+        raise ValueError(f"batched solves run the reference (vmapped) or "
+                         f"resident steps only; got backend={backend!r}")
     eps, max_iters, _ = _resolve(cfg, eps, max_iters)
-    _select_impl(problem, "reference", batch=True)   # registry sanity
+    force = "tpu" if (backend == "resident" and interpret) else None
+    impl = _select_impl(problem, backend, batch=True, force_platform=force)
     c, m = problem.c, problem.m
 
     if problem.stencil is not None:
@@ -586,8 +665,15 @@ def solve_batched(problem: FCMProblem, cfg: Optional[F.FCMConfig] = None, *,
             problem.stencil.neighbors, eps, max_iters)
     else:
         feats, w = problem.rows()
-        v, delta, iters, it = _flat_batched_loop(feats, w, c, m, eps,
-                                                 max_iters)
+        if impl == "resident":
+            from repro.kernels import ops as kops
+            if interpret is None:
+                interpret = kops._interpret_default()
+            v, delta, iters, it = _flat_batched_loop_resident(
+                feats, w, c, m, eps, max_iters, interpret)
+        else:
+            v, delta, iters, it = _flat_batched_loop(feats, w, c, m, eps,
+                                                     max_iters)
         if problem.scalar:
             v = v[..., 0]
     return BatchedFCMResult(centers=v, n_iters=np.asarray(iters),

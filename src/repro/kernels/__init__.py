@@ -1,4 +1,5 @@
 # Pallas TPU kernels for the FCM compute hot-spots (the paper's CUDA
 # kernels, adapted to VMEM tiling — see DESIGN.md §2). Validated against
 # ref.py oracles with interpret=True on CPU.
-from . import fcm_centers, fcm_membership, fcm_spatial, ops, ref  # noqa: F401,E501
+from . import (defuzzify, fcm_centers, fcm_membership, fcm_resident,  # noqa: F401,E501
+               fcm_spatial, histogram_bin, ops, ref)

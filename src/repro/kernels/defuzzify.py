@@ -1,0 +1,47 @@
+"""Pallas TPU kernel: fused defuzzification (argmin-distance labels).
+
+For any m > 1, ``argmax_c u`` equals ``argmin_c d2``, so hard labels
+need neither the membership nor the full ``(c, N)`` distance matrix in
+HBM: each ``(block_rows, 128)`` pixel tile computes its per-cluster
+squared distances in VMEM and writes the int32 argmin tile directly —
+one O(N) pass, the device-resident closer of the serving pipeline.
+``jnp.argmin`` ties resolve to the lowest cluster index, matching
+:func:`repro.core.fcm.labels_from_centers` exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _labels_kernel(x_ref, v_ref, lab_ref):
+    x = x_ref[...][0].astype(jnp.float32)            # (R, 128)
+    v = v_ref[...][0, :, 0].astype(jnp.float32)      # (c,)
+    d2 = (v[:, None, None] - x[None, :, :]) ** 2
+    lab_ref[...] = jnp.argmin(d2, axis=0).astype(jnp.int32)[None]
+
+
+def labels_pallas(x3d: jax.Array, v: jax.Array, block_rows: int = 64,
+                  interpret: bool = False) -> jax.Array:
+    """x3d (B, M, 128) pixels + v (B, c) per-lane scalar centers ->
+    (B, M, 128) int32 labels. M must divide by ``block_rows``; padded
+    pixels get a (discarded) label like any other."""
+    b, mrows, _ = x3d.shape
+    c = v.shape[-1]
+    assert mrows % block_rows == 0, (mrows, block_rows)
+    vb = jnp.broadcast_to(v.astype(jnp.float32)[:, :, None], (b, c, LANES))
+    grid = (b, mrows // block_rows)
+    return pl.pallas_call(
+        _labels_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_rows, LANES), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, c, LANES), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_rows, LANES), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, mrows, LANES), jnp.int32),
+        interpret=interpret,
+    )(x3d, vb)

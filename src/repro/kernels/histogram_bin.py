@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: one-pass intensity binning at serving ingest.
+
+The device-resident request pipeline (gSLICr's lesson: the speedup is in
+never leaving the device, not in faster math) needs the 256-bin weighted
+histogram computed on-chip from the raw pixel tiles, so a request batch
+goes pixels -> histogram -> solve -> labels in ONE dispatch. TPUs have
+no fast scatter, so the kernel bins by comparison instead: a
+``(block_rows, 128)`` pixel tile is tested against the
+``(n_bins, 1, 1)`` bin iota and the resulting one-hot mass (times the
+validity weight, so padding contributes zero) is reduced over the
+sublane axis into a per-lane ``(n_bins, 128)`` VMEM accumulator —
+same sequential-grid ``+=`` idiom as the center-partials kernels. The
+final 128-lane fold happens outside the kernel and never touches the
+host.
+
+Bin index semantics match :func:`repro.core.histogram.intensity_histogram`:
+``clip(int(x), 0, n_bins - 1)`` (truncation on the float pixel values,
+which are integral for 8-bit data).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def _bin_accumulate(hist_ref, partial_hist):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    hist_ref[...] += partial_hist[None]
+
+
+def _bin_kernel(x_ref, w_ref, hist_ref, *, n_bins: int):
+    x = x_ref[...][0].astype(jnp.float32)            # (R, 128)
+    w = w_ref[...][0].astype(jnp.float32)
+    xi = jnp.clip(x.astype(jnp.int32), 0, n_bins - 1)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (n_bins, 1, 1), 0)
+    mass = jnp.where(xi[None, :, :] == bins, w[None, :, :], 0.0)
+    _bin_accumulate(hist_ref, jnp.sum(mass, axis=1))  # (n_bins, 128)
+
+
+def _bin_kernel_unweighted(x_ref, hist_ref, *, n_bins: int):
+    x = x_ref[...][0].astype(jnp.float32)            # (R, 128)
+    xi = jnp.clip(x.astype(jnp.int32), 0, n_bins - 1)
+    bins = jax.lax.broadcasted_iota(jnp.int32, (n_bins, 1, 1), 0)
+    hit = (xi[None, :, :] == bins).astype(jnp.float32)
+    _bin_accumulate(hist_ref, jnp.sum(hit, axis=1))
+
+
+def histogram_bin_pallas(x3d: jax.Array, w3d=None, n_bins: int = 256,
+                         block_rows: int = 8, interpret: bool = False,
+                         n_pad: int = 0) -> jax.Array:
+    """x3d (B, M, 128) pixels [+ w3d (B, M, 128) weights] ->
+    (B, n_bins) weighted histograms. M must divide by ``block_rows``
+    (ops.py pads).
+
+    ``w3d=None`` is the unit-weight fast path the serving ingest runs:
+    the validity stream would double the kernel's input bandwidth just
+    to zero out padding, so instead zero-padded pixels are counted into
+    bin 0 and the statically known per-lane pad count ``n_pad`` is
+    subtracted afterwards."""
+    b, mrows, _ = x3d.shape
+    assert mrows % block_rows == 0, (mrows, block_rows)
+    grid = (b, mrows // block_rows)
+    x_spec = pl.BlockSpec((1, block_rows, LANES), lambda i, j: (i, j, 0))
+    if w3d is None:
+        hist = pl.pallas_call(
+            partial(_bin_kernel_unweighted, n_bins=n_bins),
+            grid=grid,
+            in_specs=[x_spec],
+            out_specs=pl.BlockSpec((1, n_bins, LANES),
+                                   lambda i, j: (i, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, n_bins, LANES), jnp.float32),
+            interpret=interpret,
+        )(x3d)
+        hist = jnp.sum(hist, axis=-1)
+        if n_pad:
+            hist = hist.at[:, 0].add(-float(n_pad))
+        return hist
+    hist = pl.pallas_call(
+        partial(_bin_kernel, n_bins=n_bins),
+        grid=grid,
+        in_specs=[x_spec,
+                  pl.BlockSpec((1, block_rows, LANES),
+                               lambda i, j: (i, j, 0))],
+        out_specs=pl.BlockSpec((1, n_bins, LANES), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, n_bins, LANES), jnp.float32),
+        interpret=interpret,
+    )(x3d, w3d)
+    return jnp.sum(hist, axis=-1)

@@ -20,9 +20,12 @@ from typing import Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import defuzzify as KD
 from . import fcm_centers as KC
 from . import fcm_membership as KM
+from . import fcm_resident as KR
 from . import fcm_spatial as KS
+from . import histogram_bin as KB
 from . import slic_assign as KSL
 
 LANES = KM.LANES
@@ -58,6 +61,34 @@ def tile_rows(x: jax.Array, w: jax.Array, block_rows: int):
                           jnp.zeros((n_pad,), jnp.float32)])
     m_rows = (n + n_pad) // LANES
     return xp.reshape(m_rows, LANES), wp.reshape(m_rows, LANES)
+
+
+def tile_rows_batched(feats: jax.Array, w: jax.Array):
+    """Batched analogue of :func:`tile_rows` for the VMEM-resident
+    solve: ``(B, K, D)`` feature rows + ``(B, K)`` weights become
+    ``(B, D, R, 128)`` row tiles and ``(B, R, 128)`` weights with K
+    padded to a 128 multiple at zero weight (padding rows are inert in
+    the weighted center step)."""
+    b, k, d = feats.shape
+    n_pad = (-k) % LANES
+    xp = jnp.pad(feats.astype(jnp.float32), ((0, 0), (0, n_pad), (0, 0)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, 0), (0, n_pad)))
+    r = (k + n_pad) // LANES
+    return jnp.moveaxis(xp, -1, 1).reshape(b, d, r, LANES), \
+        wp.reshape(b, r, LANES)
+
+
+def tile_pixels_batched(px: jax.Array, block_rows: int = 8):
+    """(B, N) flat pixel payloads -> ((B, M, 128) f32 tiles, (B, M, 128)
+    validity weights) with M a ``block_rows`` multiple — the layout the
+    binning and defuzzify kernels stream."""
+    b, n = px.shape
+    per = block_rows * LANES
+    n_pad = (-n) % per
+    xp = jnp.pad(px.astype(jnp.float32), ((0, 0), (0, n_pad)))
+    wp = jnp.pad(jnp.ones((b, n), jnp.float32), ((0, 0), (0, n_pad)))
+    m_rows = (n + n_pad) // LANES
+    return xp.reshape(b, m_rows, LANES), wp.reshape(b, m_rows, LANES)
 
 
 def tile_grid(img: jax.Array, block_rows: int = 64):
@@ -209,6 +240,63 @@ def spatial_step(img, v, m: float = 2.0, alpha: float = 1.0,
                               interpret)
 
 
+def histogram_counts(px: jax.Array, n_bins: int = 256, block_rows: int = 8,
+                     interpret=None) -> jax.Array:
+    """Device-resident intensity binning: ``(N,)`` or ``(B, N)`` pixel
+    values -> ``(n_bins,)`` / ``(B, n_bins)`` float32 counts via the
+    Pallas one-pass binning kernel. Traceable (used inside the serving
+    engine's fused route programs). Bin semantics match
+    :func:`repro.core.histogram.intensity_histogram`'s clamp-to-range."""
+    if interpret is None:
+        interpret = _interpret_default()
+    squeeze = px.ndim == 1
+    if squeeze:
+        px = px[None]
+    # Unit-weight fast path: no validity stream (it would double the
+    # kernel's input bandwidth); zero-padding lands in bin 0 and the
+    # static pad count is subtracted inside histogram_bin_pallas.
+    b, n = px.shape
+    n_pad = (-n) % (block_rows * LANES)
+    xp = jnp.pad(px.astype(jnp.float32), ((0, 0), (0, n_pad)))
+    x3 = xp.reshape(b, -1, LANES)
+    h = KB.histogram_bin_pallas(x3, None, n_bins, block_rows, interpret,
+                                n_pad=n_pad)
+    return h[0] if squeeze else h
+
+
+def defuzzify_labels(x: jax.Array, v: jax.Array, block_rows: int = 64,
+                     interpret=None) -> jax.Array:
+    """Hard labels straight from centers — one fused O(N) argmin pass
+    (Pallas on TPU for scalar features, the pure-jnp reference
+    elsewhere); the ``(c, N)`` distance/membership matrix never hits
+    HBM. ``x`` (N,) or (N, D), ``v`` (c,) or (c, D) -> (N,) int32."""
+    if x.ndim == 2 and x.shape[-1] == 1:        # (N, 1) == scalar rows
+        x = x[:, 0]
+        v = v[:, 0] if v.ndim == 2 else v
+    n_feat = 1 if x.ndim == 1 else x.shape[-1]
+    impl = select_step("labels", n_feat=n_feat)
+    return impl.build(block_rows=block_rows, interpret=interpret)(x, v)
+
+
+def defuzzify_labels_batched(xs: jax.Array, v: jax.Array,
+                             block_rows: int = 64, interpret=None,
+                             impl: Optional[str] = None) -> jax.Array:
+    """Batched fused defuzzify: ``(B, N)`` scalar pixel lanes + ``(B, c)``
+    centers -> ``(B, N)`` int32 labels in one launch. ``impl`` pins a
+    registry implementation (the engine's route programs resolve it at
+    build time); default is platform dispatch."""
+    sel = select_step("labels", prefer=impl, n_feat=1)
+    if sel.name == "pallas":
+        if interpret is None:
+            interpret = _interpret_default()
+        n = xs.shape[1]
+        x3, _ = tile_pixels_batched(xs, block_rows)
+        lab = KD.labels_pallas(x3, v, block_rows, interpret)
+        return lab.reshape(xs.shape[0], -1)[:, :n]
+    from repro.core import fcm as F
+    return jax.vmap(F.labels_from_centers)(xs, v)
+
+
 # ---------------------------------------------------------------------------
 # Step dispatch registry (what repro.core.solver routes through)
 # ---------------------------------------------------------------------------
@@ -229,20 +317,43 @@ class StepImpl:
     platforms: Tuple[str, ...] = ("cpu", "gpu", "tpu")
     scalar_only: bool = False
     batched: bool = True
+    #: VMEM-residency bounds (None = unbounded). An impl with bounds is
+    #: only eligible when the problem size is known and fits.
+    max_rows: Optional[int] = None
+    max_c: Optional[int] = None
+    max_feat: Optional[int] = None
+    #: name to dispatch to instead when the platform doesn't match
+    #: (the documented off-TPU behavior of the resident whole-solve).
+    fallback: Optional[str] = None
+
+    def fits(self, n_feat: int, n_rows: Optional[int],
+             c: Optional[int]) -> bool:
+        if self.max_feat is not None and n_feat > self.max_feat:
+            return False
+        if self.max_rows is not None and (n_rows is None
+                                          or n_rows > self.max_rows):
+            return False
+        if self.max_c is not None and (c is None or c > self.max_c):
+            return False
+        return True
 
 
 _STEP_REGISTRY: Dict[Tuple[str, str], StepImpl] = {}
 
 
 def register_step(kind: str, name: str, *, platforms=("cpu", "gpu", "tpu"),
-                  scalar_only: bool = False, batched: bool = True):
+                  scalar_only: bool = False, batched: bool = True,
+                  max_rows: Optional[int] = None, max_c: Optional[int] = None,
+                  max_feat: Optional[int] = None,
+                  fallback: Optional[str] = None):
     """Decorator: register a step builder under (kind, name). Adding an
     FCM variant = registering its step here + a problem factory in
     ``core/solver.py`` — no new fit module."""
     def deco(build):
         _STEP_REGISTRY[(kind, name)] = StepImpl(
             kind=kind, name=name, build=build, platforms=tuple(platforms),
-            scalar_only=scalar_only, batched=batched)
+            scalar_only=scalar_only, batched=batched, max_rows=max_rows,
+            max_c=max_c, max_feat=max_feat, fallback=fallback)
         return build
     return deco
 
@@ -255,11 +366,16 @@ def step_impls(kind: Optional[str] = None):
 
 def select_step(kind: str, *, prefer: Optional[str] = None,
                 platform: Optional[str] = None, n_feat: int = 1,
-                batched: bool = False) -> StepImpl:
+                batched: bool = False, n_rows: Optional[int] = None,
+                c: Optional[int] = None) -> StepImpl:
     """Dispatch: pick the step implementation for a problem shape and
-    platform. ``prefer`` forces a name; otherwise the Pallas kernel wins
-    on TPU when eligible (right platform, feature-dim and vmap support)
-    and the pure-jnp reference runs everywhere else."""
+    platform. ``prefer`` forces a name; otherwise the VMEM-resident
+    whole-solve wins on TPU when the problem is known to fit
+    (``n_rows``/``c`` within its bounds), then the Pallas step kernel
+    when eligible (right platform, feature-dim and vmap support), and
+    the pure-jnp reference runs everywhere else. A preferred impl with a
+    declared ``fallback`` (resident -> reference) degrades to it off its
+    platforms instead of erroring."""
     kinds = sorted({k for k, _ in _STEP_REGISTRY})
     if kind not in kinds:
         raise ValueError(f"unknown step kind {kind!r}; one of {kinds}")
@@ -275,13 +391,26 @@ def select_step(kind: str, *, prefer: Optional[str] = None,
         if batched and not impl.batched:
             raise ValueError(f"{kind}/{prefer} does not support batched "
                              f"(vmapped) solves")
+        if not impl.fits(n_feat, n_rows, c):
+            raise ValueError(
+                f"{kind}/{prefer} needs a VMEM-resident problem "
+                f"(rows <= {impl.max_rows}, c <= {impl.max_c}, "
+                f"D <= {impl.max_feat}); got rows={n_rows}, c={c}, "
+                f"D={n_feat}")
+        platform = platform or jax.default_backend()
+        if platform not in impl.platforms and impl.fallback is not None:
+            return select_step(kind, prefer=impl.fallback,
+                               platform=platform, n_feat=n_feat,
+                               batched=batched, n_rows=n_rows, c=c)
         return impl
     platform = platform or jax.default_backend()
-    pallas = _STEP_REGISTRY.get((kind, "pallas"))
-    if (pallas is not None and platform in pallas.platforms
-            and not (pallas.scalar_only and n_feat != 1)
-            and not (batched and not pallas.batched)):
-        return pallas
+    for name in ("resident", "pallas"):
+        impl = _STEP_REGISTRY.get((kind, name))
+        if (impl is not None and platform in impl.platforms
+                and not (impl.scalar_only and n_feat != 1)
+                and not (batched and not impl.batched)
+                and impl.fits(n_feat, n_rows, c)):
+            return impl
     return _STEP_REGISTRY[(kind, "reference")]
 
 
@@ -314,6 +443,62 @@ def _flat_pallas(x2d, w2d, m, block_rows=64, interpret=None, **_):
                                             block_rows, interpret)
         return (num / jnp.maximum(den, 1e-12))[:, None]
     return step
+
+
+@register_step("flat", "resident", platforms=("tpu",), batched=True,
+               max_rows=KR.MAX_ROWS, max_c=KR.MAX_C, max_feat=KR.MAX_FEAT,
+               fallback="reference")
+def _flat_resident(x4, w3, m, max_iters, interpret=None, **_):
+    """The VMEM-resident whole-solve: unlike the other builders this
+    returns a complete ``(v0, tol) -> (v, delta, iters)`` solver, not a
+    ``v -> v'`` step — the convergence loop runs INSIDE the kernel.
+    Inputs are pre-tiled by :func:`tile_rows_batched` (lanes of
+    ``(D, R, 128)`` rows + ``(R, 128)`` weights)."""
+    if interpret is None:
+        interpret = _interpret_default()
+
+    def solve_fn(v0, tol):
+        return KR.resident_solve_pallas(x4, w3, v0, tol, m, max_iters,
+                                        interpret)
+    return solve_fn
+
+
+@register_step("bin", "reference")
+def _bin_reference(n_bins=256, **_):
+    """Scatter-add binning (what ``intensity_histogram`` jits); the
+    algebraic oracle for the Pallas one-pass kernel."""
+    def counts(px):
+        def one(p):
+            idx = jnp.clip(p.astype(jnp.int32), 0, n_bins - 1)
+            return jnp.zeros((n_bins,), jnp.float32).at[idx].add(1.0)
+        return one(px) if px.ndim == 1 else jax.vmap(one)(px)
+    return counts
+
+
+@register_step("bin", "pallas", platforms=("tpu",))
+def _bin_pallas(n_bins=256, block_rows=8, interpret=None, **_):
+    """One-pass comparison-binning kernel over (B, M, 128) tiles."""
+    return lambda px: histogram_counts(px, n_bins, block_rows, interpret)
+
+
+@register_step("labels", "reference")
+def _labels_reference(**_):
+    """argmin-distance labels via the pure-jnp (c, N) distance matrix."""
+    from repro.core import fcm as F
+    return lambda x, v: F.labels_from_centers(x, v)
+
+
+@register_step("labels", "pallas", platforms=("tpu",), scalar_only=True)
+def _labels_pallas(block_rows=64, interpret=None, **_):
+    """Fused O(N) argmin tile kernel (scalar features)."""
+    if interpret is None:
+        interpret = _interpret_default()
+
+    def labels(x, v):
+        x3, _ = tile_pixels_batched(x[None], block_rows)
+        lab = KD.labels_pallas(x3, v[None], block_rows, interpret)
+        return lab.reshape(-1)[:x.shape[0]]
+    return labels
 
 
 @register_step("stencil", "reference")

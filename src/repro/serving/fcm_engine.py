@@ -16,11 +16,14 @@ Because every route builds a solver problem, *all four* methods batch
 across concurrent requests — including ``spatial`` (same-shape FCM_S
 grids stack into one per-lane-masked stencil loop) and ``superpixel``
 ((K, D) payload groups), which previously ran one fit per request.
-Two batching tricks keep XLA recompilation at zero:
+Two batching tricks keep XLA recompilation off the steady-state path:
 
 * **Bucketing** — queued requests are padded up to the nearest size in
   ``batch_sizes`` (padding lanes are dropped on output), so only
-  ``len(batch_sizes)`` jit signatures compile per payload shape.
+  ``len(batch_sizes)`` jit signatures compile per payload shape (the
+  pixel-exact route programs additionally key on payload size; both
+  program caches are LRU-bounded so heterogeneous long-tail traffic
+  recycles executables rather than accreting them).
 * **Histogram-keyed LRU cache** — identical intensity histograms hit an
   exact-key lookup; near-identical ones (adjacent slices of a volume,
   repeat studies with fresh noise — L1 distance between normalized
@@ -29,9 +32,23 @@ Two batching tricks keep XLA recompilation at zero:
   gather runs. Only the histogram route is cacheable: spatial requests
   depend on pixel positions and vector features have no 256-bin key.
 
+**Device-resident route programs** (the serving face of the paper's
+"never leave the device" lesson): the hot routes additionally register a
+:class:`RouteProgram` — one *jitted* ingest->solve->defuzzify pipeline
+per (route, bucket, payload-shape), cached and reused across flushes —
+so a drained bucket is ONE device dispatch instead of four
+host-synchronized stages (host binning, bucket assembly, batched solve,
+per-request label dispatches). On TPU the program's stages are the
+Pallas binning / VMEM-resident whole-solve / fused defuzzify kernels;
+off-TPU the binning runs as host numpy (XLA CPU has no fast scatter)
+and the solve as the vmapped reference loop, still fused into one
+dispatch. Re-registering a route bumps its generation and evicts its
+compiled programs, so a replaced spec can never serve a stale pipeline.
+
 Results are hard labels per request (same spatial shape as the input
 image) plus the fitted centers; :meth:`FCMServeEngine.stats` exposes
-queue / throughput / per-route request, batch and cache-hit counters.
+queue / throughput / per-route request, batch and cache-hit counters,
+plus a per-route ingest/solve/materialize stage-seconds breakdown.
 """
 from __future__ import annotations
 
@@ -41,6 +58,7 @@ import time
 from typing import (Any, Callable, Dict, Hashable, List, Optional,
                     Sequence, Tuple)
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -48,6 +66,7 @@ from repro.core import fcm as F
 from repro.core import solver as SV
 from repro.core import spatial as SP
 from repro.core.batched import hist_rows
+from repro.kernels import ops as kops
 from repro.superpixel import pipeline as SX
 
 
@@ -68,11 +87,17 @@ class SegmentationResult:
 
 @dataclasses.dataclass
 class _Pending:
+    """A histogram-route request. Ingest keeps only the clipped flat
+    pixels: binning is deferred to the device program (Pallas on TPU) —
+    ``hist``/``key`` are filled lazily and only when the LRU cache or
+    the mixed-size fallback program actually needs them."""
     request_id: int
     shape: Tuple[int, ...]
-    flat: np.ndarray              # clipped int image, flattened
-    hist: np.ndarray              # (n_bins,) float32
-    key: bytes
+    flat: np.ndarray              # flat bin indices: a zero-copy uint8
+                                  # view for 8-bit payloads, clipped
+                                  # int32 otherwise
+    hist: Optional[np.ndarray] = None   # (n_bins,) float32, lazy
+    key: Optional[bytes] = None         # cache/dedup key, lazy
 
 
 @dataclasses.dataclass
@@ -142,26 +167,89 @@ class RouteSpec:
                  List[SegmentationResult]]] = None
     cacheable: bool = False
     stats_prefix: str = ""        # "" keeps the legacy histogram names
+    #: device-resident fast path: ``program_key(engine, chunk)`` names
+    #: the compiled-program shape a drained chunk can share (None =
+    #: this chunk has no fused program) and ``make_program(engine, key,
+    #: bucket)`` builds the :class:`RouteProgram` compiled once per
+    #: (route generation, bucket, key) and cached on the engine.
+    program_key: Optional[
+        Callable[["FCMServeEngine", List[Any]], Optional[Hashable]]] = None
+    make_program: Optional[
+        Callable[["FCMServeEngine", Hashable, int], "RouteProgram"]] = None
 
     def stat(self, name: str) -> str:
         if not self.stats_prefix:   # the histogram route predates routes
             return {"seconds": "fit_seconds", "iters": "fit_iters",
                     "batches": "batches", "images": "batched_images",
-                    "padded": "padded_lanes"}[name]
+                    "padded": "padded_lanes",
+                    "ingest": "ingest_seconds",
+                    "materialize": "materialize_seconds"}[name]
         legacy = {"seconds": "seconds", "iters": "iters",
                   "batches": "batches", "images": "batched_images",
-                  "padded": "padded_lanes"}[name]
+                  "padded": "padded_lanes", "ingest": "ingest_seconds",
+                  "materialize": "materialize_seconds"}[name]
         return f"{self.stats_prefix}_{legacy}"
 
 
+@dataclasses.dataclass(frozen=True)
+class RouteProgram:
+    """One compiled single-dispatch serving pipeline.
+
+    ``gather(engine, chunk, bucket)`` finishes ingest on the host
+    (stack + pad payloads into fixed-shape device inputs);
+    ``launch(*inputs)`` is ONE jitted device dispatch covering
+    ingest-binning, the batched solve and defuzzification;
+    ``scatter(engine, chunk, outputs)`` unpacks the device outputs into
+    per-request results and returns ``(results, centers (B, ...),
+    n_iters (B,), total_iters)`` so flush-side stats and the LRU cache
+    see exactly what the staged path would have produced.
+    """
+    gather: Callable[["FCMServeEngine", List[Any], int], Tuple]
+    launch: Callable[..., Tuple]
+    scatter: Callable[["FCMServeEngine", List[Any], Tuple],
+                      Tuple[List[SegmentationResult], np.ndarray,
+                            np.ndarray, int]]
+
+
+#: Module-level cache of *compiled* launch functions, keyed on the full
+#: static math signature (route flavor, platform, bucket, shapes and
+#: hyper-parameters). Engines hold their own RouteProgram cache for
+#: generation-based eviction, but the jitted launch is shared here so a
+#: fresh engine (cold LRU, same traffic shape) pays zero recompilation.
+#: LRU-bounded: pixel-exact program flavors key on payload size, so
+#: long-tail heterogeneous traffic must recycle executables instead of
+#: retaining one per size ever seen for the process lifetime.
+_LAUNCH_CACHE: "collections.OrderedDict[Hashable, Callable]" = \
+    collections.OrderedDict()
+_LAUNCH_CACHE_SIZE = 64
+
+
+def _cached_launch(key: Hashable, build: Callable[[], Callable]) -> Callable:
+    fn = _LAUNCH_CACHE.get(key)
+    if fn is None:
+        fn = build()
+        _LAUNCH_CACHE[key] = fn
+        while len(_LAUNCH_CACHE) > _LAUNCH_CACHE_SIZE:
+            _LAUNCH_CACHE.popitem(last=False)
+    else:
+        _LAUNCH_CACHE.move_to_end(key)
+    return fn
+
+
 ROUTES: "collections.OrderedDict[str, RouteSpec]" = collections.OrderedDict()
+
+#: Route generations: bumped on every (re-)registration so engine-held
+#: compiled programs for a replaced spec are evicted, never served stale.
+_ROUTE_GEN: Dict[str, int] = collections.defaultdict(int)
 
 
 def register_route(spec: RouteSpec) -> RouteSpec:
     """Add (or replace) a serving route; see the specs below for the
     shape. New FCM variants serve by registering here — ``flush`` and
-    the stats plumbing need no changes."""
+    the stats plumbing need no changes. Replacing a spec invalidates
+    any compiled route programs built from the old one."""
     ROUTES[spec.name] = spec
+    _ROUTE_GEN[spec.name] += 1
     global METHODS
     METHODS = tuple(ROUTES)
     return spec
@@ -171,14 +259,33 @@ def register_route(spec: RouteSpec) -> RouteSpec:
 
 def _ingest_histogram(eng: "FCMServeEngine", img: np.ndarray,
                       rid: int) -> _Pending:
-    flat = np.clip(img.reshape(-1).astype(np.int64), 0, eng.n_bins - 1)
-    hist = np.bincount(flat, minlength=eng.n_bins
-                       ).astype(np.float32)[:eng.n_bins]
-    return _Pending(rid, img.shape, flat, hist, hist.tobytes())
+    # No binning here: the device program bins on-chip (Pallas kernel on
+    # TPU); the histogram only materializes lazily for cache keys or the
+    # mixed-size fallback program (see _ensure_hist). uint8 payloads
+    # (the 8-bit serving case) cannot exceed the bin range, so ingest is
+    # a zero-copy flat view — the request pipeline stays uint8 until the
+    # device LUT gather.
+    if img.dtype == np.uint8 and eng.n_bins >= 256:
+        # .copy(), not a view: the caller may reuse its buffer between
+        # submit() and flush() (a 16 KB memcpy, vs the clip+widen pass
+        # the non-uint8 path pays).
+        flat = img.reshape(-1).copy()
+    else:
+        flat = np.clip(img.reshape(-1), 0, eng.n_bins - 1).astype(np.int32)
+    return _Pending(rid, img.shape, flat)
+
+
+def _ensure_hist(eng: "FCMServeEngine", p: _Pending) -> _Pending:
+    if p.hist is None:
+        p.hist = np.bincount(p.flat, minlength=eng.n_bins
+                             ).astype(np.float32)[:eng.n_bins]
+        if p.key is None:       # dedup may have keyed on pixel bytes
+            p.key = p.hist.tobytes()
+    return p
 
 
 def _build_histogram(eng, chunk, bucket):
-    hists = np.stack([p.hist for p in chunk])
+    hists = np.stack([_ensure_hist(eng, p).hist for p in chunk])
     n_pad = bucket - len(chunk)
     if n_pad:
         # Uniform-histogram padding lanes converge fast and are dropped.
@@ -188,13 +295,128 @@ def _build_histogram(eng, chunk, bucket):
     return SV.batch_problems(hist_rows(hists), hists, cfg=eng.cfg), eng.cfg
 
 
+def _label_lut(centers: np.ndarray, n_bins: int) -> np.ndarray:
+    """n_bins-entry defuzzify LUT in plain numpy — identical f32
+    arithmetic and tie-breaking to labels_from_centers, without a device
+    dispatch per request (cache hits and duplicates ride this)."""
+    vals = np.arange(n_bins, dtype=np.float32)
+    c2 = np.asarray(centers, np.float32).reshape(-1, 1)
+    return np.argmin((c2 - vals[None, :]) ** 2, axis=0).astype(np.int32)
+
+
 def _materialize_histogram(eng, p, centers, n_iters, cache_hit):
-    # Defuzzify via a n_bins-entry LUT: label each bin once, gather.
-    vals = jnp.arange(eng.n_bins, dtype=jnp.float32)
-    lut = np.asarray(F.labels_from_centers(vals, jnp.asarray(centers)))
-    labels = lut[p.flat].reshape(p.shape)
+    labels = _label_lut(centers, eng.n_bins)[p.flat].reshape(p.shape)
     return SegmentationResult(p.request_id, labels, np.asarray(centers),
                               n_iters, cache_hit)
+
+
+def _histogram_program_key(eng, chunk):
+    # Same-size payloads share the full pixels->binning->solve->labels
+    # program (the defuzzify gather rides the dispatch: XLA's batched
+    # gather beats a per-request numpy LUT loop even on CPU); mixed
+    # sizes fall back to the histograms-only program + host LUT gather.
+    sizes = {p.flat.size for p in chunk}
+    return ("px", sizes.pop()) if len(sizes) == 1 else ("hist",)
+
+
+def _make_histogram_program(eng, key, bucket) -> RouteProgram:
+    cfg = eng.cfg
+    c, m = cfg.n_clusters, float(cfg.m)
+    eps, max_iters = float(cfg.eps), int(cfg.max_iters)
+    nb = eng.n_bins
+    platform = jax.default_backend()
+    impl = kops.select_step("flat", platform=platform, n_feat=1,
+                            batched=True, n_rows=nb, c=c).name
+    vals = jnp.arange(nb, dtype=jnp.float32)
+    feats = jnp.broadcast_to(vals[None, :, None], (bucket, nb, 1))
+
+    def _solve_lut(hists):
+        v, delta, iters, total = SV.flat_batched_solve(
+            feats, hists, c, m, eps, max_iters, impl=impl)
+        v2 = v[..., 0]
+        lut = jax.vmap(lambda vv: F.labels_from_centers(vals, vv))(v2)
+        return v2, delta, iters, total, lut
+
+    def _gather_hists(eng_, chunk):
+        hists = np.ones((bucket, nb), np.float32)
+        for i, p in enumerate(chunk):
+            hists[i] = _ensure_hist(eng_, p).hist
+        return hists
+
+    cache_key = ("histogram", platform, bucket, key, nb, c, m, eps,
+                 max_iters, impl)
+
+    if key[0] == "px":
+        n = key[1]
+        on_tpu = platform == "tpu"
+        if on_tpu:
+            def launch_fn(px):
+                # Ingest binning on-chip: the Pallas one-pass kernel.
+                # With the LRU enabled the cache lookup has already host-
+                # binned these pixels for the key; the on-chip re-bin is
+                # cheaper than widening the launch signature to ship the
+                # host histograms in — the host bincount is the price of
+                # a histogram-keyed cache, not of this program.
+                hists = kops.histogram_counts(px, nb, interpret=False)
+                v2, delta, iters, total, lut = _solve_lut(hists)
+                return v2, delta, iters, total, \
+                    jnp.take_along_axis(lut, px, axis=1)
+            launch = _cached_launch(
+                cache_key, lambda: jax.jit(launch_fn, donate_argnums=(0,)))
+        else:
+            def launch_fn(px, hists):
+                v2, delta, iters, total, lut = _solve_lut(hists)
+                return v2, delta, iters, total, \
+                    jnp.take_along_axis(lut, px, axis=1)
+            launch = _cached_launch(cache_key, lambda: jax.jit(launch_fn))
+
+        def gather(eng_, chunk, bucket_):
+            # uint8 traffic stages uint8 (16 KB memcpy per lane); mixed
+            # dtypes fall back to int32. Padding lanes replay lane 0.
+            dtype = (np.uint8 if all(p.flat.dtype == np.uint8
+                                     for p in chunk) else np.int32)
+            px = np.empty((bucket_, n), dtype)
+            for i, p in enumerate(chunk):
+                px[i] = p.flat
+            for i in range(len(chunk), bucket_):
+                px[i] = px[0]
+            if on_tpu:
+                return (px,)
+            return px, _gather_hists(eng_, chunk)
+
+        def scatter(eng_, chunk, outs):
+            v2, _, iters, total, labels = outs
+            centers = np.asarray(v2)
+            iters_np = np.asarray(iters)
+            labels_np = np.asarray(labels)
+            res = [SegmentationResult(p.request_id,
+                                      labels_np[i].reshape(p.shape),
+                                      centers[i], int(iters_np[i]), False)
+                   for i, p in enumerate(chunk)]
+            return res, centers, iters_np, int(total)
+
+        return RouteProgram(gather, launch, scatter)
+
+    # Mixed payload sizes: one solve dispatch on the stacked histograms,
+    # per-request labels via the (cheap) host LUT gather.
+    launch = _cached_launch(cache_key,
+                            lambda: jax.jit(lambda hists: _solve_lut(hists)))
+
+    def gather(eng_, chunk, bucket_):
+        return (_gather_hists(eng_, chunk),)
+
+    def scatter(eng_, chunk, outs):
+        v2, _, iters, total, lut = outs
+        centers = np.asarray(v2)
+        iters_np = np.asarray(iters)
+        lut_np = np.asarray(lut)
+        res = [SegmentationResult(p.request_id,
+                                  lut_np[i][p.flat].reshape(p.shape),
+                                  centers[i], int(iters_np[i]), False)
+               for i, p in enumerate(chunk)]
+        return res, centers, iters_np, int(total)
+
+    return RouteProgram(gather, launch, scatter)
 
 
 # -- pixel route ------------------------------------------------------------
@@ -231,11 +453,76 @@ def _build_pixel(eng, chunk, bucket):
 def _materialize_pixel(eng, q, centers, n_iters, cache_hit):
     img = q.pixels
     spatial_shape = img.shape[:-1] if img.ndim == 3 else img.shape
-    labels = np.asarray(F.labels_from_centers(
+    # Fused argmin labels: the (c, N) distance/membership matrix is
+    # never materialized (Pallas kernel on TPU, reference elsewhere).
+    labels = np.asarray(kops.defuzzify_labels(
         jnp.asarray(_pixel_rows(img)),
         jnp.asarray(centers))).reshape(spatial_shape)
     return SegmentationResult(q.request_id, labels, np.asarray(centers),
                               n_iters, cache_hit, method="pixel")
+
+
+def _pixel_program_key(eng, chunk):
+    return ("px",) + chunk[0].pixels.shape  # bucket_key groups by shape
+
+
+def _make_pixel_program(eng, key, bucket) -> RouteProgram:
+    shape = key[1:]
+    scalar = len(shape) == 2
+    d = 1 if scalar else shape[-1]
+    n = int(np.prod(shape[:2]))
+    cfg = eng.cfg
+    c, m = cfg.n_clusters, float(cfg.m)
+    eps, max_iters = float(cfg.eps), int(cfg.max_iters)
+    platform = jax.default_backend()
+    impl = kops.select_step("flat", platform=platform, n_feat=d,
+                            batched=True, n_rows=n, c=c).name
+    labels_impl = kops.select_step("labels", platform=platform,
+                                   n_feat=d).name
+
+    def launch_fn(xs):
+        w = jnp.ones(xs.shape[:2], jnp.float32)
+        feats = xs[..., None] if scalar else xs
+        v, delta, iters, total = SV.flat_batched_solve(
+            feats, w, c, m, eps, max_iters, impl=impl)
+        if scalar:
+            v2 = v[..., 0]
+            labels = kops.defuzzify_labels_batched(
+                xs, v2, impl=labels_impl, interpret=False)
+            return v2, delta, iters, total, labels
+        labels = jax.vmap(F.labels_from_centers)(feats, v)
+        return v, delta, iters, total, labels
+
+    launch = _cached_launch(
+        ("pixel", platform, bucket, key, c, m, eps, max_iters, impl,
+         labels_impl),
+        lambda: jax.jit(launch_fn,
+                        donate_argnums=(0,) if platform == "tpu" else ()))
+
+    def gather(eng_, chunk, bucket_):
+        xs = np.empty((bucket_, n) if scalar else (bucket_, n, d),
+                      np.float32)
+        for i, q in enumerate(chunk):
+            xs[i] = _pixel_rows(q.pixels)
+        # Padding lanes replay the first image (frozen-lane masking makes
+        # them cost one lane of compute; dropped on output).
+        for i in range(len(chunk), bucket_):
+            xs[i] = xs[0]
+        return (xs,)
+
+    def scatter(eng_, chunk, outs):
+        v, _, iters, total, labels = outs
+        centers = np.asarray(v)
+        iters_np = np.asarray(iters)
+        labels_np = np.asarray(labels)
+        res = [SegmentationResult(q.request_id,
+                                  labels_np[i].reshape(shape[:2]),
+                                  centers[i], int(iters_np[i]), False,
+                                  method="pixel")
+               for i, q in enumerate(chunk)]
+        return res, centers, iters_np, int(total)
+
+    return RouteProgram(gather, launch, scatter)
 
 
 # -- spatial route ----------------------------------------------------------
@@ -336,12 +623,16 @@ register_route(RouteSpec(
     name="histogram", ingest=_ingest_histogram,
     bucket_key=lambda eng, p: ("hist",),
     build_problem=_build_histogram, materialize=_materialize_histogram,
-    cacheable=True))
+    cacheable=True,
+    program_key=_histogram_program_key,
+    make_program=_make_histogram_program))
 register_route(RouteSpec(
     name="pixel", ingest=_ingest_pixel,
     bucket_key=lambda eng, p: ("pixel",) + p.pixels.shape,
     build_problem=_build_pixel, materialize=_materialize_pixel,
-    stats_prefix="pixel"))
+    stats_prefix="pixel",
+    program_key=_pixel_program_key,
+    make_program=_make_pixel_program))
 register_route(RouteSpec(
     name="spatial", ingest=_ingest_spatial,
     bucket_key=lambda eng, p: ("spatial",) + p.pixels.shape,
@@ -394,6 +685,10 @@ class FCMServeEngine:
         self._cache: "collections.OrderedDict[bytes, Tuple[np.ndarray, np.ndarray]]" = \
             collections.OrderedDict()
         self._queues: Dict[str, List[Any]] = {name: [] for name in ROUTES}
+        #: compiled RouteProgram cache keyed on (route, generation,
+        #: bucket, payload-shape key); the generation key is what makes
+        #: re-registered routes drop their stale programs.
+        self._programs: Dict[Hashable, RouteProgram] = {}
         self._next_id = 0
         self._stats: Dict[str, float] = {
             "requests": 0, "cache_hits": 0,
@@ -402,6 +697,8 @@ class FCMServeEngine:
         }
         for route in ROUTES.values():
             self._stats.setdefault(route.stat("seconds"), 0.0)
+            self._stats.setdefault(route.stat("ingest"), 0.0)
+            self._stats.setdefault(route.stat("materialize"), 0.0)
             for k in ("batches", "images", "padded", "iters"):
                 self._stats.setdefault(route.stat(k), 0)
         # Per-route request/cache-hit counters (the route mix is what the
@@ -424,7 +721,9 @@ class FCMServeEngine:
         # Ingest validates eagerly: a request failing inside flush()
         # would discard the whole drained batch's results. A raise here
         # consumes neither a request id nor a counter.
+        t0 = time.perf_counter()
         pending = route.ingest(self, img, self._next_id)
+        self._stats[route.stat("ingest")] += time.perf_counter() - t0
         rid = self._next_id
         self._next_id += 1
         self._stats["requests"] += 1
@@ -484,9 +783,17 @@ class FCMServeEngine:
     def _answer_from_cache(self, route: RouteSpec, pend: List[Any],
                            results: Dict[int, SegmentationResult]):
         """Cache lookups + intra-flush dedup (one fit per distinct key);
-        returns (representatives to fit, duplicates)."""
+        returns (representatives to fit, duplicates). With the LRU
+        disabled neither histograms nor dedup keys are ever computed:
+        duplicate payloads simply occupy identical lanes of the batched
+        solve (identical lanes converge identically, so results match)
+        — hashing 64 KB of pixels per request to *maybe* merge lanes
+        inside an already-padded bucket costs more than it saves."""
         misses: List[Any] = []
+        if self.cache_size <= 0:
+            return pend, []
         for p in pend:
+            _ensure_hist(self, p)
             centers = self._cache_get(p.key, p.hist)
             if centers is not None:
                 self._stats["cache_hits"] += 1
@@ -510,30 +817,83 @@ class FCMServeEngine:
                 return b
         return self.batch_sizes[-1]
 
+    def _program_for(self, route: RouteSpec,
+                     chunk: List[Any], bucket: int) -> Optional[RouteProgram]:
+        """The compiled single-dispatch program this chunk can ride, or
+        None (route has no programs / chunk shape has none). Programs
+        are cached per (route generation, bucket, shape key); stale
+        generations from a re-registered route are purged here."""
+        if route.make_program is None or route.program_key is None:
+            return None
+        key = route.program_key(self, chunk)
+        if key is None:
+            return None
+        gen = _ROUTE_GEN[route.name]
+        stale = [k for k in self._programs
+                 if k[0] == route.name and k[1] != gen]
+        for k in stale:
+            del self._programs[k]
+        full_key = (route.name, gen, bucket, key)
+        prog = self._programs.get(full_key)
+        if prog is None:
+            prog = route.make_program(self, key, bucket)
+            self._programs[full_key] = prog
+            # Same bound rationale as _LAUNCH_CACHE: size-keyed program
+            # flavors must not accumulate one entry per payload size.
+            while len(self._programs) > _LAUNCH_CACHE_SIZE:
+                oldest = next(iter(self._programs))
+                del self._programs[oldest]
+        return prog
+
     def _run_bucket(self, route: RouteSpec, chunk: List[Any], bucket: int,
                     results: Dict[int, SegmentationResult],
                     fitted: Dict[bytes, np.ndarray]):
-        problem, cfg = route.build_problem(self, chunk, bucket)
-        t0 = time.perf_counter()
-        res = SV.solve_batched(problem, cfg)
-        centers = np.asarray(res.centers)
-        self._stats[route.stat("seconds")] += time.perf_counter() - t0
+        prog = self._program_for(route, chunk, bucket)
+        if prog is not None:
+            # Device-resident fast path: host-side stacking, ONE jitted
+            # dispatch (ingest-binning + solve + defuzzify), unpack.
+            t0 = time.perf_counter()
+            inputs = prog.gather(self, chunk, bucket)
+            t1 = time.perf_counter()
+            outs = jax.block_until_ready(prog.launch(*inputs))
+            t2 = time.perf_counter()
+            res_list, centers, n_iters, total_iters = prog.scatter(
+                self, chunk, outs)
+            t3 = time.perf_counter()
+            self._stats[route.stat("ingest")] += t1 - t0
+            self._stats[route.stat("seconds")] += t2 - t1
+            self._stats[route.stat("materialize")] += t3 - t2
+            for r in res_list:
+                results[r.request_id] = r
+        else:
+            t0 = time.perf_counter()
+            problem, cfg = route.build_problem(self, chunk, bucket)
+            t1 = time.perf_counter()
+            res = SV.solve_batched(problem, cfg)
+            t2 = time.perf_counter()
+            centers = np.asarray(res.centers)
+            total_iters = int(res.total_iters)
+            if route.materialize_batch is not None:
+                for r in route.materialize_batch(self, chunk, centers,
+                                                 res.n_iters):
+                    results[r.request_id] = r
+            else:
+                for lane, p in enumerate(chunk):
+                    results[p.request_id] = route.materialize(
+                        self, p, centers[lane], int(res.n_iters[lane]),
+                        False)
+            t3 = time.perf_counter()
+            self._stats[route.stat("ingest")] += t1 - t0
+            self._stats[route.stat("seconds")] += t2 - t1
+            self._stats[route.stat("materialize")] += t3 - t2
         self._stats[route.stat("batches")] += 1
         self._stats[route.stat("images")] += len(chunk)
         self._stats[route.stat("padded")] += bucket - len(chunk)
-        self._stats[route.stat("iters")] += int(res.total_iters)
-        if route.cacheable:
+        self._stats[route.stat("iters")] += int(total_iters)
+        if route.cacheable and self.cache_size > 0:
             for lane, p in enumerate(chunk):
                 fitted[p.key] = centers[lane]
                 self._cache_put(p.key, centers[lane], p.hist)
-        if route.materialize_batch is not None:
-            for r in route.materialize_batch(self, chunk, centers,
-                                             res.n_iters):
-                results[r.request_id] = r
-        else:
-            for lane, p in enumerate(chunk):
-                results[p.request_id] = route.materialize(
-                    self, p, centers[lane], int(res.n_iters[lane]), False)
 
     # -- cache -------------------------------------------------------------
 
@@ -605,4 +965,13 @@ class FCMServeEngine:
                                if cacheable else 0.0)
         s["images_per_sec"] = (s["batched_images"] / s["fit_seconds"]
                                if s["fit_seconds"] > 0 else 0.0)
+        # Per-route stage breakdown (ingest = submit validation + flush
+        # stacking, solve = the device dispatch, materialize = unpack /
+        # per-request labeling) — what overhead regressions page on.
+        s["stage_seconds"] = {
+            r.name: {"ingest": self._stats[r.stat("ingest")],
+                     "solve": self._stats[r.stat("seconds")],
+                     "materialize": self._stats[r.stat("materialize")]}
+            for r in ROUTES.values()}
+        s["compiled_programs"] = len(self._programs)
         return s

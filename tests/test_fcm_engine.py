@@ -1,5 +1,8 @@
-"""FCMServeEngine: bucketing, caching, and correctness of served labels
-against the single-image histogram fit."""
+"""FCMServeEngine: bucketing, caching, correctness of served labels
+against the single-image histogram fit, and the device-resident route
+programs (single-dispatch serving, program-cache lifecycle)."""
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -391,6 +394,159 @@ def test_pixel_requests_batch_across_requests():
         np.testing.assert_allclose(r.centers, np.asarray(solo.centers),
                                    atol=1e-5)
         assert (r.labels == np.asarray(solo.labels).reshape(40, 44)).all()
+
+
+# ---------------------------------------------------------------------------
+# Device-resident route programs (single-dispatch serving pipeline)
+# ---------------------------------------------------------------------------
+
+def test_fused_program_matches_staged_route_path():
+    """The single-dispatch histogram program must serve exactly what the
+    staged build_problem -> solve_batched -> materialize path serves."""
+    from repro.serving import fcm_engine as E
+
+    imgs = [phantom.phantom_slice(48, 56, noise=2.0 + i, seed=i)[0]
+            for i in range(5)]
+    fused = FCMServeEngine(CFG, batch_sizes=(8,), cache_size=0)
+    res_fused = fused.segment(imgs)
+    assert fused.stats()["compiled_programs"] == 1
+
+    # Staged comparator: same route minus the program hooks.
+    base = E.ROUTES["histogram"]
+    E.register_route(dataclasses.replace(base, program_key=None,
+                                         make_program=None))
+    try:
+        staged = FCMServeEngine(CFG, batch_sizes=(8,), cache_size=0)
+        res_staged = staged.segment(imgs)
+        assert staged.stats()["compiled_programs"] == 0
+    finally:
+        E.register_route(base)
+    for f, s in zip(res_fused, res_staged):
+        np.testing.assert_allclose(f.centers, s.centers, atol=1e-5)
+        assert f.n_iters == s.n_iters
+        assert (f.labels == s.labels).all()
+
+
+def test_fused_program_mixed_sizes_one_dispatch():
+    """Heterogeneous payload sizes still share ONE solve via the
+    histograms-only program flavor."""
+    imgs = [phantom.phantom_slice(64 + 8 * i, 96, seed=i)[0]
+            for i in range(4)]
+    eng = FCMServeEngine(CFG, batch_sizes=(4,), cache_size=0)
+    results = eng.segment(imgs)
+    assert eng.stats()["batches"] == 1
+    for img, r in zip(imgs, results):
+        single = H.fit_histogram(img.ravel().astype(np.float32), CFG)
+        np.testing.assert_allclose(r.centers, np.asarray(single.centers),
+                                   atol=1e-4)
+        assert (r.labels == np.asarray(single.labels).reshape(img.shape)
+                ).all()
+
+
+def test_program_cache_reused_across_flushes_and_engines():
+    imgs = [phantom.phantom_slice(32, 32, noise=2.0 + i, seed=i)[0]
+            for i in range(3)]
+    eng = FCMServeEngine(CFG, batch_sizes=(4,), cache_size=0)
+    eng.segment(imgs)
+    eng.segment(imgs)
+    assert eng.stats()["compiled_programs"] == 1      # same shape key
+    eng.segment([phantom.phantom_slice(16, 16, seed=9)[0]])
+    assert eng.stats()["compiled_programs"] == 2      # new payload size
+
+
+def test_program_cache_evicts_on_route_reregistration():
+    """Regression: register_route replacing a spec must not leave an
+    engine serving the old spec's compiled program."""
+    from repro.serving import fcm_engine as E
+
+    img, _ = phantom.phantom_slice(32, 32, seed=3)
+    eng = FCMServeEngine(CFG, batch_sizes=(1,), cache_size=0)
+    first = eng.segment([img])[0]
+    assert eng.stats()["compiled_programs"] == 1
+
+    base = E.ROUTES["histogram"]
+    calls = []
+
+    def make_program(e, key, bucket):
+        calls.append(key)
+        return base.make_program(e, key, bucket)
+
+    E.register_route(dataclasses.replace(base, make_program=make_program))
+    try:
+        again = eng.segment([img])[0]
+        assert calls, "stale compiled program served after re-registration"
+        np.testing.assert_allclose(again.centers, first.centers, atol=1e-6)
+        assert (again.labels == first.labels).all()
+        # the old generation's entry was purged, not orphaned
+        assert eng.stats()["compiled_programs"] == 1
+    finally:
+        E.register_route(base)
+
+
+def test_stage_seconds_breakdown_in_stats():
+    eng = FCMServeEngine(CFG)
+    s = eng.stats()["stage_seconds"]
+    assert set(s) == set(eng.stats()["method_requests"])
+    for route_stages in s.values():
+        assert set(route_stages) == {"ingest", "solve", "materialize"}
+    img, _ = phantom.phantom_slice(32, 32, seed=0)
+    eng.segment([img])
+    eng.segment([img], method="spatial")
+    s = eng.stats()["stage_seconds"]
+    assert s["histogram"]["ingest"] >= 0 and s["histogram"]["solve"] > 0
+    assert s["spatial"]["solve"] > 0
+
+
+def test_histogram_materialize_lut_matches_labels_from_centers():
+    """Satellite: the np defuzzify LUT used for cache hits / duplicates
+    is numerically identical to the old jnp labels_from_centers path."""
+    import jax.numpy as jnp
+    from repro.serving.fcm_engine import _label_lut
+
+    rng = np.random.default_rng(0)
+    for _ in range(5):
+        centers = np.sort(rng.uniform(0, 255, 4)).astype(np.float32)
+        vals = jnp.arange(256, dtype=jnp.float32)
+        want = np.asarray(F.labels_from_centers(vals, jnp.asarray(centers)))
+        np.testing.assert_array_equal(_label_lut(centers, 256), want)
+    # exact ties resolve to the lowest cluster index in both
+    centers = np.asarray([10.0, 30.0, 20.0], np.float32)
+    vals = jnp.arange(256, dtype=jnp.float32)
+    np.testing.assert_array_equal(
+        _label_lut(centers, 256),
+        np.asarray(F.labels_from_centers(vals, jnp.asarray(centers))))
+
+
+def test_pixel_materialize_fused_labels_match_full_membership_path():
+    """Satellite: pixel-route labels via the fused argmin kernel path
+    equal the old materialize-the-membership-then-argmax path."""
+    import jax.numpy as jnp
+    from repro.kernels import ops as kops
+
+    rng = np.random.default_rng(1)
+    x = rng.uniform(0, 255, 4000).astype(np.float32)
+    v = np.sort(rng.uniform(10, 240, 4)).astype(np.float32)
+    old = np.asarray(F.defuzzify(F.update_membership(
+        jnp.asarray(x), jnp.asarray(v), 2.0)))
+    new = np.asarray(kops.defuzzify_labels(jnp.asarray(x), jnp.asarray(v)))
+    np.testing.assert_array_equal(new, old)
+    # and through the kernel itself (interpret mode)
+    kern = np.asarray(kops.defuzzify_labels_batched(
+        jnp.asarray(x)[None], jnp.asarray(v)[None],
+        impl="pallas", interpret=True))[0]
+    np.testing.assert_array_equal(kern, old)
+
+
+def test_uint8_zero_copy_ingest_matches_clipped_path():
+    """uint8 payloads skip the clip pass; results must match a clipped
+    int submission of the same values."""
+    img_u8 = phantom.phantom_slice(40, 40, seed=7)[0]
+    assert img_u8.dtype == np.uint8
+    eng = FCMServeEngine(CFG, cache_size=0)
+    a = eng.segment([img_u8])[0]
+    b = eng.segment([img_u8.astype(np.int32)])[0]
+    np.testing.assert_allclose(a.centers, b.centers, atol=0)
+    assert (a.labels == b.labels).all()
 
 
 def test_route_registration_roundtrip():

@@ -89,3 +89,117 @@ def test_fused_iteration_fixed_point_matches_two_stage():
     v_two = np.asarray(num2[:, 0] / jnp.maximum(den2, 1e-12))
     v_fused = np.asarray(ops.fused_step(x, v, 2.0, interpret=True))
     np.testing.assert_allclose(v_fused, v_two, rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# One-pass binning kernel (serving ingest on-chip)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [96, 1024, 8192 + 17, 40000])
+def test_histogram_bin_kernel_matches_bincount(n):
+    """Parity with jnp.bincount / intensity_histogram on ragged sizes
+    (incl. non-multiple-of-128 => zero-weight padding)."""
+    from repro.core.histogram import intensity_histogram
+    rng = np.random.default_rng(n)
+    x = rng.integers(0, 256, n).astype(np.float32)
+    got = np.asarray(ops.histogram_counts(jnp.asarray(x), interpret=True))
+    want_np = np.bincount(x.astype(np.int64), minlength=256
+                          ).astype(np.float32)
+    want_ref = np.asarray(intensity_histogram(jnp.asarray(x)))
+    np.testing.assert_array_equal(got, want_np)
+    np.testing.assert_array_equal(got, want_ref)
+    assert got.sum() == n
+
+
+def test_histogram_bin_kernel_all_one_value():
+    x = jnp.full((3000,), 137.0, jnp.float32)
+    got = np.asarray(ops.histogram_counts(x, interpret=True))
+    assert got[137] == 3000 and got.sum() == 3000
+
+
+def test_histogram_bin_kernel_empty_after_padding_tiles():
+    """A 1-pixel payload: every tile but one lane is padding — the
+    validity weights must keep bin 0 (where padded pixels land) clean."""
+    x = jnp.asarray([200.0])
+    got = np.asarray(ops.histogram_counts(x, interpret=True))
+    assert got[200] == 1 and got.sum() == 1
+    assert got[0] == 0
+
+
+def test_histogram_bin_kernel_batched_lanes_independent():
+    rng = np.random.default_rng(0)
+    px = rng.integers(0, 256, (3, 777)).astype(np.int32)
+    got = np.asarray(ops.histogram_counts(jnp.asarray(px), interpret=True))
+    for i in range(3):
+        np.testing.assert_array_equal(
+            got[i], np.bincount(px[i], minlength=256).astype(np.float32))
+
+
+def test_histogram_bin_kernel_clamps_out_of_range():
+    """Same clamp semantics as intensity_histogram(clip=True)."""
+    x = jnp.asarray([-5.0, 0.0, 255.0, 300.0])
+    got = np.asarray(ops.histogram_counts(x, interpret=True))
+    assert got[0] == 2 and got[255] == 2
+
+
+def test_histogram_bin_kernel_weighted_matches_manual():
+    """The weighted kernel body (validity/count weights) against a
+    manual weighted bincount; histogram_counts itself rides the
+    unit-weight fast path, so the weighted face is pinned here."""
+    from repro.kernels import histogram_bin as KB
+    rng = np.random.default_rng(3)
+    n = 2000
+    x = rng.integers(0, 256, n).astype(np.float32)
+    w = rng.uniform(0, 3, n).astype(np.float32)
+    x3, w3 = ops.tile_pixels_batched(jnp.asarray(x)[None], 8)
+    w3 = w3 * jnp.pad(jnp.asarray(w), (0, w3.size - n)).reshape(w3.shape)
+    got = np.asarray(KB.histogram_bin_pallas(x3, w3, 256, 8,
+                                             interpret=True))[0]
+    want = np.zeros(256, np.float32)
+    np.add.at(want, x.astype(np.int64), w)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-4)
+
+
+def test_bin_registry_dispatch():
+    assert ops.select_step("bin", platform="cpu").name == "reference"
+    assert ops.select_step("bin", platform="tpu").name == "pallas"
+    ref_counts = ops.build_step("bin", "reference", n_bins=256)
+    x = jnp.asarray(np.random.default_rng(1).integers(0, 256, 500),
+                    jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(ref_counts(x)),
+        np.asarray(ops.histogram_counts(x, interpret=True)))
+
+
+# ---------------------------------------------------------------------------
+# Fused defuzzify (argmin-label) kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [96, 8192 + 17])
+@pytest.mark.parametrize("c", [2, 4, 7])
+def test_defuzzify_kernel_matches_labels_from_centers(n, c):
+    from repro.core import fcm as F
+    x, v = _data(n, c, jnp.float32, seed=6)
+    got = np.asarray(ops.defuzzify_labels_batched(
+        x[None], v[None], impl="pallas", interpret=True))[0]
+    want = np.asarray(F.labels_from_centers(x, v))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_defuzzify_kernel_tie_breaks_to_lowest_index():
+    from repro.core import fcm as F
+    x = jnp.full((300,), 100.0, jnp.float32)
+    v = jnp.asarray([50.0, 150.0, 100.0])     # ties between 0/1; 2 exact
+    got = np.asarray(ops.defuzzify_labels_batched(
+        x[None], v[None], impl="pallas", interpret=True))[0]
+    np.testing.assert_array_equal(got,
+                                  np.asarray(F.labels_from_centers(x, v)))
+    assert (got == 2).all()
+
+
+def test_labels_registry_dispatch():
+    assert ops.select_step("labels", platform="cpu").name == "reference"
+    assert ops.select_step("labels", platform="tpu").name == "pallas"
+    # vector features are reference-only (the kernel is scalar)
+    assert ops.select_step("labels", platform="tpu", n_feat=3
+                           ).name == "reference"

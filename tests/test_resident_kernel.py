@@ -1,0 +1,188 @@
+"""VMEM-resident whole-solve kernel: parity suite.
+
+The resident kernel runs the COMPLETE convergence loop inside one
+``pallas_call`` (interpret mode here), so the bar is higher than
+step-level parity: against ``solve()``/``solve_batched()`` it must match
+**center-for-center** (<= 1e-5; relative, since a 3e-5 absolute drift on
+a ~200-valued f32 center is sub-ulp reduction-order noise) and
+**iteration-for-iteration** — the in-kernel ``max|v' - v| < tol`` test
+must fire on exactly the same iteration as the reference loop. Plus the
+registry dispatch contract: eligibility bounds enforced, ``"resident"``
+falling back to ``"reference"`` off-TPU.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import batched as B
+from repro.core import solver as SV
+from repro.data import phantom
+from repro.kernels import ops as kops
+
+ATOL = 1e-5
+RTOL = 1e-5
+
+
+def _assert_centers(got, want):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# Single-problem parity (solve(backend="resident", interpret=True))
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(37, 53), (45, 59), (64, 64)])
+def test_histogram_resident_matches_reference(shape):
+    img, _ = phantom.phantom_slice(*shape, seed=shape[0])
+    x = img.ravel().astype(np.float32)
+    ref = SV.solve(SV.histogram_problem(x), max_iters=300)
+    res = SV.solve(SV.histogram_problem(x), backend="resident",
+                   interpret=True, max_iters=300)
+    _assert_centers(res.centers, ref.centers)
+    assert res.n_iters == ref.n_iters
+    assert (np.asarray(res.labels) == np.asarray(ref.labels)).all()
+
+
+@pytest.mark.parametrize("c", [2, 4, 8])
+def test_resident_cluster_count_sweep(c):
+    rng = np.random.default_rng(c)
+    x = rng.integers(0, 256, 3000).astype(np.float32)
+    ref = SV.solve(SV.histogram_problem(x, c=c))
+    res = SV.solve(SV.histogram_problem(x, c=c), backend="resident",
+                   interpret=True)
+    _assert_centers(res.centers, ref.centers)
+    assert res.n_iters == ref.n_iters
+
+
+@pytest.mark.parametrize("k,d", [(73, 3), (200, 2), (256, 1)])
+def test_vector_resident_matches_reference(k, d):
+    """Weighted (K, D) rows — the superpixel-compression payload."""
+    rng = np.random.default_rng(k + d)
+    feats = rng.uniform(0, 255, (k, d)).astype(np.float32)
+    w = rng.integers(1, 40, k).astype(np.float32)
+    ref = SV.solve(SV.vector_problem(feats, w))
+    res = SV.solve(SV.vector_problem(feats, w), backend="resident",
+                   interpret=True)
+    _assert_centers(res.centers, ref.centers)
+    assert res.n_iters == ref.n_iters
+
+
+def test_resident_ragged_row_counts():
+    """Non-128-multiple row counts pad at zero weight — inert rows."""
+    rng = np.random.default_rng(5)
+    for k in (17, 100, 129, 255):
+        vals = np.sort(rng.uniform(0, 255, k)).astype(np.float32)
+        w = rng.integers(1, 20, k).astype(np.float32)
+        ref = SV.solve(SV.vector_problem(vals[:, None], w))
+        res = SV.solve(SV.vector_problem(vals[:, None], w),
+                       backend="resident", interpret=True)
+        _assert_centers(res.centers, ref.centers)
+        assert res.n_iters == ref.n_iters, f"k={k}"
+
+
+def test_resident_tol_override_forces_fixed_iterations():
+    img, _ = phantom.phantom_slice(21, 27, seed=13)
+    x = img.ravel().astype(np.float32)
+    res = SV.solve(SV.histogram_problem(x), backend="resident",
+                   interpret=True, tol=-1.0, max_iters=7)
+    assert res.n_iters == 7
+
+
+# ---------------------------------------------------------------------------
+# Batched parity (per-lane trajectories == solo solves)
+# ---------------------------------------------------------------------------
+
+def test_batched_resident_lanes_match_reference_and_solo():
+    imgs = [phantom.phantom_slice(37 + 6 * i, 53, noise=2.0 + 3 * i,
+                                  seed=i)[0] for i in range(4)]
+    hists = B.histograms_of(imgs)
+    batch = SV.batch_problems(B.hist_rows(hists), hists)
+    ref = SV.solve_batched(batch)
+    res = SV.solve_batched(batch, backend="resident", interpret=True)
+    _assert_centers(res.centers, ref.centers)
+    np.testing.assert_array_equal(res.n_iters, ref.n_iters)
+    assert res.total_iters == ref.total_iters
+    for i, img in enumerate(imgs):
+        solo = SV.solve(SV.histogram_problem(
+            img.ravel().astype(np.float32)))
+        np.testing.assert_allclose(np.asarray(res.centers[i]),
+                                   np.asarray(solo.centers),
+                                   rtol=1e-4, atol=1e-4)
+        assert res.n_iters[i] == solo.n_iters
+
+
+def test_batched_resident_divergent_lane_iterations():
+    """Each grid step runs its lane to ITS OWN convergence — no frozen
+    masking; verify lanes genuinely stop at different counts."""
+    imgs = [phantom.phantom_slice(48, 48, noise=1.0 + 6 * i, seed=i)[0]
+            for i in range(3)]
+    hists = B.histograms_of(imgs)
+    batch = SV.batch_problems(B.hist_rows(hists), hists)
+    res = SV.solve_batched(batch, backend="resident", interpret=True)
+    assert len(set(res.n_iters.tolist())) > 1
+    assert res.total_iters == int(res.n_iters.max())
+
+
+# ---------------------------------------------------------------------------
+# Registry dispatch
+# ---------------------------------------------------------------------------
+
+def test_resident_registered_with_bounds():
+    impl = kops.select_step("flat", prefer="resident", platform="tpu",
+                            n_rows=256, c=8)
+    assert impl.name == "resident"
+    assert impl.max_rows == 256 and impl.max_c == 8
+
+
+def test_resident_falls_back_to_reference_off_tpu():
+    """The documented off-TPU behavior: prefer="resident" degrades to
+    the reference step instead of erroring or interpreting."""
+    impl = kops.select_step("flat", prefer="resident", platform="cpu",
+                            n_rows=256, c=4)
+    assert impl.name == "reference"
+    # and solve(backend="resident") without interpret matches the
+    # reference backend bit-for-bit (it IS the reference backend here)
+    img, _ = phantom.phantom_slice(33, 35, seed=5)
+    x = img.ravel().astype(np.float32)
+    ref = SV.solve(SV.histogram_problem(x), backend="reference")
+    res = SV.solve(SV.histogram_problem(x), backend="resident")
+    np.testing.assert_array_equal(np.asarray(res.centers),
+                                  np.asarray(ref.centers))
+    assert res.n_iters == ref.n_iters
+
+
+def test_resident_auto_dispatch_on_tpu_when_fits():
+    # auto picks resident on TPU only when rows/c/D fit VMEM ...
+    assert kops.select_step("flat", platform="tpu", n_feat=1,
+                            n_rows=256, c=4).name == "resident"
+    assert kops.select_step("flat", platform="tpu", n_feat=3,
+                            n_rows=200, c=4, batched=True
+                            ).name == "resident"
+    # ... and falls through (pallas / reference) when it does not.
+    assert kops.select_step("flat", platform="tpu", n_feat=1,
+                            n_rows=100000, c=4).name == "pallas"
+    assert kops.select_step("flat", platform="tpu", n_feat=1,
+                            n_rows=256, c=16).name == "pallas"
+    # unknown row count (legacy callers) can never claim residency
+    assert kops.select_step("flat", platform="tpu", n_feat=1
+                            ).name == "pallas"
+    # off-TPU auto stays on the reference step
+    assert kops.select_step("flat", platform="cpu", n_feat=1,
+                            n_rows=256, c=4).name == "reference"
+
+
+def test_resident_rejects_oversized_problems():
+    x = np.arange(5000, dtype=np.float32)
+    with pytest.raises(ValueError, match="VMEM-resident"):
+        SV.solve(SV.pixel_problem(x), backend="resident")
+    rng = np.random.default_rng(0)
+    feats = rng.uniform(0, 1, (64, 16)).astype(np.float32)
+    with pytest.raises(ValueError, match="VMEM-resident"):
+        SV.solve(SV.vector_problem(feats), backend="resident")
+
+
+def test_resident_rejects_stencil_problems():
+    img = np.zeros((16, 16), np.float32)
+    with pytest.raises(ValueError, match="no 'stencil' step"):
+        SV.solve(SV.spatial_problem(img), backend="resident")
