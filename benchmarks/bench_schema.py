@@ -1,0 +1,91 @@
+"""Schema validation for the consolidated BENCH JSON.
+
+``validate(bench)`` raises ``ValueError`` listing every problem found:
+missing top-level sections, a roofline section that does not cover
+every (kind, impl) cell registered in ``kernels/ops.py``, or serving
+latency/convergence blocks without the percentile fields the
+observability layer promises. CI runs it against the ``--tiny`` output
+so a PR cannot silently drop a section or a registry cell from the
+perf record.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_schema benchmarks/out/BENCH_pr6.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import List
+
+TOP_KEYS = ("pr", "backend", "tiny", "batched_throughput", "spatial_fcm",
+            "superpixel_fcm", "roofline")
+
+CELL_KEYS = ("kind", "impl", "backend", "shape", "flops", "bytes",
+             "wall_s", "achieved_flops_per_s", "achieved_bytes_per_s",
+             "t_roofline", "bound", "frac_of_roofline")
+
+HIST_KEYS = ("count", "mean", "p50", "p90", "p99")
+
+
+def _check_roofline(section, problems: List[str]) -> None:
+    from repro.kernels import ops as kops
+    cells = {(c.get("kind"), c.get("impl")): c
+             for c in section.get("cells", [])}
+    for impl in kops.step_impls():
+        cell = cells.get((impl.kind, impl.name))
+        if cell is None:
+            problems.append(f"roofline: no cell for registered kernel "
+                            f"{impl.kind}/{impl.name}")
+        elif "error" in cell:
+            problems.append(f"roofline: cell {impl.kind}/{impl.name} "
+                            f"errored: {cell['error']}")
+        else:
+            for k in CELL_KEYS:
+                if k not in cell:
+                    problems.append(f"roofline: cell {impl.kind}/"
+                                    f"{impl.name} missing {k!r}")
+    if "hw" not in section:
+        problems.append("roofline: missing hw peaks")
+
+
+def _check_latency(block, where: str, problems: List[str]) -> None:
+    if not isinstance(block, dict):
+        problems.append(f"{where}: latency block missing")
+        return
+    for k in HIST_KEYS:
+        if k not in block:
+            problems.append(f"{where}: latency missing {k!r}")
+
+
+def validate(bench: dict) -> None:
+    """Raise ValueError naming every schema violation (None when OK)."""
+    problems: List[str] = []
+    for k in TOP_KEYS:
+        if k not in bench:
+            problems.append(f"missing top-level key {k!r}")
+    if "roofline" in bench:
+        _check_roofline(bench["roofline"], problems)
+    bt = bench.get("batched_throughput", {})
+    hist = bt.get("histogram", {}) if isinstance(bt, dict) else {}
+    _check_latency(hist.get("latency"), "batched_throughput.histogram",
+                   problems)
+    if "convergence" not in hist:
+        problems.append("batched_throughput.histogram: convergence "
+                        "block missing")
+    if "tracing_overhead_ratio" not in hist:
+        problems.append("batched_throughput.histogram: "
+                        "tracing_overhead_ratio missing")
+    if problems:
+        raise ValueError("BENCH schema violations:\n  "
+                         + "\n  ".join(problems))
+
+
+def main(argv=None):
+    path = (argv or sys.argv[1:])[0]
+    with open(path) as f:
+        bench = json.load(f)
+    validate(bench)
+    print(f"{path}: schema OK")
+
+
+if __name__ == "__main__":
+    main()

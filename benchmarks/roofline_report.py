@@ -1,14 +1,240 @@
-"""Render the EXPERIMENTS.md roofline table from the dry-run JSONL
-(single-pod mesh rows, per the assignment; multi-pod rows prove the pod
-axis shards and are summarized separately)."""
+"""Roofline-vs-achieved report for every registered kernel cell.
+
+For each (step kind, impl) in the ``kernels/ops.py`` dispatch registry
+this probes one representative invocation: analytic FLOPs/bytes from
+:func:`repro.analysis.roofline.kernel_step_costs` (the intrinsic math,
+comparable across impls of a kind), HLO-walker FLOPs/bytes where the
+compiled module is parseable (Pallas custom-calls are opaque — those
+record 0), a median wall time, and the roofline bound
+``max(flops/peak, bytes/bw)`` from ``analysis/hw.py``. The JSON lands
+in ``benchmarks/out/roofline_report.json`` and is folded into
+``BENCH_pr6.json`` by ``benchmarks/run.py`` — the measurement the
+registry's dispatch thresholds are supposed to be chosen from.
+
+Off-TPU the Pallas impls run in interpret mode; their wall times are
+the interpreter's, not the kernel's (``interpret: true`` marks them),
+but every registry cell still gets an entry so the report's coverage
+is platform-independent.
+
+Run:  PYTHONPATH=src python -m benchmarks.roofline_report [--smoke]
+
+The legacy EXPERIMENTS.md dry-run table (``load``/``markdown_table``)
+is kept below; it renders from ``experiments/dryrun.jsonl`` when that
+artifact exists.
+"""
 from __future__ import annotations
 
+import argparse
 import json
 import os
 
+import numpy as np
+
+try:
+    from .common import emit, time_fn
+except ImportError:                      # run as a plain script
+    from common import emit, time_fn
+
 DEFAULT = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "dryrun.jsonl")
+OUT_PATH = os.path.join(os.path.dirname(__file__), "out",
+                        "roofline_report.json")
 
+
+# ---------------------------------------------------------------------------
+# Kernel probes: one representative invocation per registry cell
+# ---------------------------------------------------------------------------
+
+def _hlo_costs(fn, *args):
+    """HLO-walker flops/bytes for a jitted call, or zeros when the
+    module will not lower/parse (Pallas interpret closures, custom
+    calls)."""
+    import jax
+
+    from repro.analysis import hlo_cost
+    try:
+        txt = jax.jit(fn).lower(*args).compile().as_text()
+        c = hlo_cost.analyze_text(txt, 1)
+        return float(c.flops), float(c.bytes)
+    except Exception:
+        return 0.0, 0.0
+
+
+def _probe(impl, smoke: bool):
+    """(callable, args, shape-dict, analytic costs) for one registry
+    cell. Shapes are kept modest: interpret-mode Pallas on CPU pays the
+    interpreter per block, and the cell's point is coverage + the
+    achieved-vs-bound ratio, not a stress test."""
+    import jax.numpy as jnp
+
+    from repro.analysis import roofline as R
+    from repro.core import spatial as SP
+    from repro.kernels import ops as kops
+    from repro.superpixel import slic as SL
+
+    kind, name = impl.kind, impl.name
+    c, m = 4, 2.0
+    rng = np.random.default_rng(0)
+    interpret = kops._interpret_default()
+
+    if kind == "flat":
+        n = 2048 if smoke else 16384
+        x = jnp.asarray(rng.random(n, dtype=np.float32)) * 255.0
+        w = jnp.ones((n,), jnp.float32)
+        v = jnp.linspace(0.0, 255.0, c, dtype=jnp.float32)[:, None]
+        shape = {"n_rows": n, "c": c, "n_feat": 1}
+        if name == "reference":
+            step = kops.build_step("flat", "reference", feats=x[:, None],
+                                   weights=w, m=m)
+            costs = R.kernel_step_costs("flat", n_rows=n, c=c, n_feat=1)
+            return step, (v,), shape, costs
+        if name == "pallas":
+            br = 8
+            x2d, w2d = kops.tile_rows(x, w, br)
+            step = kops.build_step("flat", "pallas", x2d=x2d, w2d=w2d,
+                                   m=m, block_rows=br, interpret=interpret)
+            costs = R.kernel_step_costs("flat", n_rows=n, c=c, n_feat=1)
+            return step, (v,), shape, costs
+        # resident: the whole convergence loop runs inside the kernel —
+        # probe a fixed-trip solve and scale the per-step model by it.
+        iters = 8
+        x4, w3 = kops.tile_rows_batched(x[None, :, None], w[None])
+        solve_fn = kops.build_step("flat", "resident", x4=x4, w3=w3, m=m,
+                                   max_iters=iters, interpret=interpret)
+        shape = {"n_rows": n, "c": c, "n_feat": 1, "n_iters": iters}
+        costs = R.kernel_step_costs("flat", n_rows=n, c=c, n_feat=1,
+                                    n_iters=iters)
+        return (solve_fn, (v[None], jnp.zeros((1,), jnp.float32)),
+                shape, costs)
+
+    if kind == "stencil":
+        hw_ = 48 if smoke else 128
+        img = jnp.asarray(rng.random((hw_, hw_), dtype=np.float32)) * 255.0
+        v = jnp.linspace(0.0, 255.0, c, dtype=jnp.float32)[:, None]
+        alpha, neighbors = 1.0, SP.SpatialFCMConfig().neighbors
+        shape = {"h": hw_, "w": hw_, "c": c, "neighbors": neighbors}
+        costs = R.kernel_step_costs("stencil", h=hw_, w=hw_, c=c,
+                                    neighbors=neighbors)
+        if name == "reference":
+            step = kops.build_step("stencil", "reference", img=img, m=m,
+                                   alpha=alpha, neighbors=neighbors)
+            return step, (v,), shape, costs
+        br = 8
+        xpad, wpad = kops.tile_grid(img, br)
+        step = kops.build_step("stencil", "pallas", xpad=xpad, wpad=wpad,
+                               m=m, alpha=alpha, neighbors=neighbors,
+                               block_rows=br, interpret=interpret)
+        return step, (v,), shape, costs
+
+    if kind == "bin":
+        b, n = (2, 4096) if smoke else (4, 65536)
+        px = jnp.asarray(rng.integers(0, 256, (b, n)).astype(np.float32))
+        shape = {"b": b, "n_rows": n, "n_bins": 256}
+        costs = R.kernel_step_costs("bin", b=b, n_rows=n, n_bins=256)
+        counts = kops.build_step("bin", name, n_bins=256,
+                                 **({} if name == "reference"
+                                    else {"interpret": interpret}))
+        return counts, (px,), shape, costs
+
+    if kind == "labels":
+        n = 8192 if smoke else 262144
+        x = jnp.asarray(rng.random(n, dtype=np.float32)) * 255.0
+        v = jnp.linspace(0.0, 255.0, c, dtype=jnp.float32)
+        shape = {"n_rows": n, "c": c, "n_feat": 1}
+        costs = R.kernel_step_costs("labels", n_rows=n, c=c, n_feat=1)
+        labels = kops.build_step("labels", name,
+                                 **({} if name == "reference"
+                                    else {"interpret": interpret}))
+        return labels, (x, v), shape, costs
+
+    if kind == "slic_assign":
+        hw_, d = (32, 3) if smoke else (96, 3)
+        img = jnp.asarray(rng.random((hw_, hw_, d), dtype=np.float32))
+        gy, gx = SL.grid_shape(hw_, hw_, 64)
+        sw = SL.spatial_weight(hw_, hw_, gy, gx, 10.0)
+        centers = SL.seed_centers(img, gy, gx)
+        shape = {"h": hw_, "w": hw_, "d": d, "n_centers": gy * gx}
+        costs = R.kernel_step_costs("slic_assign", h=hw_, w=hw_, d=d,
+                                    n_centers=gy * gx)
+        if name == "reference":
+            assign = kops.build_step("slic_assign", "reference",
+                                     gy=gy, gx=gx, sw=sw)
+            return assign, (img, centers), shape, costs
+        br = 8
+        xpad, _ = kops.tile_channels(img, br)
+        assign = kops.build_step("slic_assign", "pallas", h=hw_, w=hw_,
+                                 gy=gy, gx=gx, sw=sw, block_rows=br,
+                                 interpret=interpret)
+        return assign, (xpad, centers), shape, costs
+
+    raise ValueError(f"no probe for step kind {kind!r}")
+
+
+def _measure_cell(impl, smoke: bool) -> dict:
+    import jax
+
+    from repro.analysis import roofline as R
+    from repro.kernels import ops as kops
+
+    backend = jax.default_backend()
+    fn, args, shape, costs = _probe(impl, smoke)
+    jfn = jax.jit(fn)
+    run = lambda: jax.block_until_ready(jfn(*args))  # noqa: E731
+    wall_s = time_fn(run, warmup=1, iters=2 if smoke else 5)
+    hlo_flops, hlo_bytes = _hlo_costs(fn, *args)
+    cell = R.kernel_cell(
+        impl.kind, impl.name, backend, shape,
+        costs["flops"], costs["bytes"], wall_s,
+        interpret=(backend not in impl.platforms
+                   and kops._interpret_default()),
+        hlo_flops=hlo_flops, hlo_bytes=hlo_bytes)
+    return cell.row()
+
+
+def kernel_report(smoke: bool = False) -> dict:
+    """One roofline-vs-achieved entry per registered (kind, impl) —
+    coverage is asserted by the BENCH schema validator, so a probe
+    failure records an error cell instead of silently dropping one."""
+    import jax
+
+    from repro.analysis import hw
+    from repro.kernels import ops as kops
+
+    cells = []
+    for impl in kops.step_impls():
+        try:
+            row = _measure_cell(impl, smoke)
+        except Exception as e:           # keep the cell, name the failure
+            row = {"kind": impl.kind, "impl": impl.name,
+                   "backend": jax.default_backend(), "error": repr(e)}
+        cells.append(row)
+        if "error" in row:
+            emit(f"roofline/{row['kind']}/{row['impl']}", 0.0,
+                 f"ERROR {row['error']}")
+        else:
+            emit(f"roofline/{row['kind']}/{row['impl']}",
+                 row["wall_s"] * 1e6,
+                 f"achieved={row['achieved_flops_per_s']:.3e}F/s "
+                 f"bound={row['bound']} "
+                 f"roofline_frac={row['frac_of_roofline']:.2e}")
+    return {"backend": jax.default_backend(), "smoke": smoke,
+            "hw": {"peak_flops_bf16": hw.PEAK_FLOPS_BF16,
+                   "hbm_bytes_per_s": hw.HBM_BW},
+            "cells": cells}
+
+
+def write_kernel_report(smoke: bool = False, out_path: str = OUT_PATH):
+    report = kernel_report(smoke=smoke)
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"wrote {out_path}")
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Legacy EXPERIMENTS.md dry-run table (dryrun.jsonl renderer)
+# ---------------------------------------------------------------------------
 
 def load(path=DEFAULT):
     rows = []
@@ -45,23 +271,35 @@ def markdown_table(rows, mesh="16x16"):
     return "\n".join(out)
 
 
-def run():
+def run(smoke: bool = False):
+    """The benchmarks/run.py section: kernel cells always, plus the
+    dry-run summary when its JSONL artifact exists."""
+    report = write_kernel_report(smoke=smoke)
     rows = load()
-    if not rows:
-        print("# roofline: no dryrun.jsonl yet — run "
-              "PYTHONPATH=src python -m repro.launch.dryrun first")
-        return
-    single = [r for r in rows if r["mesh"] == "16x16"]
-    multi = [r for r in rows if r["mesh"] != "16x16"]
-    print(f"# roofline: {len(single)} single-pod cells, "
-          f"{len(multi)} multi-pod cells")
-    for r in sorted(single, key=lambda r: (r["arch"], r["shape"])):
-        dom = {"compute": r["t_compute"], "memory": r["t_memory"],
-               "collective": r["t_collective"]}[r["bottleneck"]]
-        print(f"roofline/{r['arch']}/{r['shape']},{dom * 1e6:.1f},"
-              f"bottleneck={r['bottleneck']} "
-              f"useful={r['useful_flops_frac']:.2f} fits={r['fits_hbm']}")
+    if rows:
+        single = [r for r in rows if r["mesh"] == "16x16"]
+        multi = [r for r in rows if r["mesh"] != "16x16"]
+        print(f"# roofline: {len(single)} single-pod cells, "
+              f"{len(multi)} multi-pod cells")
+        for r in sorted(single, key=lambda r: (r["arch"], r["shape"])):
+            dom = {"compute": r["t_compute"], "memory": r["t_memory"],
+                   "collective": r["t_collective"]}[r["bottleneck"]]
+            print(f"roofline/{r['arch']}/{r['shape']},{dom * 1e6:.1f},"
+                  f"bottleneck={r['bottleneck']} "
+                  f"useful={r['useful_flops_frac']:.2f} "
+                  f"fits={r['fits_hbm']}")
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny probe shapes, 2 timing reps")
+    ap.add_argument("--out", default=OUT_PATH)
+    args = ap.parse_args(argv)
+    print("benchmark,us_per_call,derived")
+    return write_kernel_report(smoke=args.smoke, out_path=args.out)
 
 
 if __name__ == "__main__":
-    print(markdown_table(load()))
+    main()

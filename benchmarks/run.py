@@ -1,15 +1,19 @@
 """Benchmark harness: one module per paper table/figure. Prints
 ``name,us_per_call,derived`` CSV lines and writes the consolidated
-``benchmarks/out/BENCH_pr5.json`` aggregating the batched / spatial /
-superpixel serving numbers (including the engine-overhead gate the
-device-resident route programs must hold), so the perf trajectory is
-machine-readable across PRs.
+``benchmarks/out/BENCH_pr6.json`` aggregating the batched / spatial /
+superpixel serving numbers (engine-overhead + tracing-overhead gates,
+per-route latency percentiles, convergence telemetry) and the
+roofline-vs-achieved kernel report, validates the result against
+``bench_schema.py``, and perf-gates the B=64 engine overhead against
+the committed ``BENCH_pr5.json`` baseline — so the perf trajectory is
+machine-readable AND regression-guarded across PRs.
 
   table1_variants    — paper Table 1 analogue (variant ladder)
   fig7_dsc           — paper Fig. 7 DSC parity (parallel == sequential)
   table3_speedup     — paper Table 3 exec times + Fig. 8 speedup curve
                        (sequential vs device, one solve() entry point)
-  roofline_report    — §Roofline summary from the dry-run JSONL
+  roofline_report    — roofline-vs-achieved per registered kernel cell
+                       (always runs: BENCH needs full cell coverage)
   batched_throughput — beyond-paper: images/sec vs batch size for the
                        histogram AND batched-spatial serving paths
   spatial_fcm        — FCM_S noise-robustness + wall clock
@@ -23,6 +27,52 @@ import argparse
 import json
 import os
 
+#: Allowed growth of the B=64 histogram engine wall time over the
+#: committed BENCH_pr5 baseline. The gate rides on the engine's OWN
+#: seconds, not the overhead-vs-solve_batched ratio: the raw solve's
+#: run-to-run variance would otherwise fail the serving path for
+#: getting a faster denominator. The slack absorbs scheduler noise on
+#: a ~10 ms sample.
+PERF_GATE_RATIO = 1.5
+BASELINE = os.path.join(os.path.dirname(__file__), "out", "BENCH_pr5.json")
+
+
+def perf_gate(bench: dict, baseline_path: str = BASELINE) -> None:
+    """Fail on regressions vs the committed baseline's B=64 engine
+    seconds; print the stage-seconds comparison so a failure names its
+    stage. Only comparable (full-vs-full) runs gate — a --tiny run
+    against the full-size baseline reports but cannot fail."""
+    if not os.path.exists(baseline_path):
+        print("# perf-gate: no committed baseline, skipping")
+        return
+    with open(baseline_path) as f:
+        base = json.load(f)
+    try:
+        bh = base["batched_throughput"]["histogram"]
+        nh = bench["batched_throughput"]["histogram"]
+        base_s = bh["64"]["engine_s"]
+        now_s = nh[64]["engine_s"]
+        base_st, now_st = bh["stage_seconds"], nh["stage_seconds"]
+    except KeyError as e:
+        print(f"# perf-gate: baseline incomparable ({e!r}), skipping")
+        return
+    for stage in ("ingest", "solve", "materialize"):
+        b, n = base_st.get(stage, 0.0), now_st.get(stage, 0.0)
+        print(f"# perf-gate stage {stage}: {n * 1e3:.2f} ms "
+              f"(baseline {b * 1e3:.2f} ms)")
+    ceiling = base_s * PERF_GATE_RATIO
+    verdict = (f"B=64 engine {now_s * 1e3:.2f} ms (baseline "
+               f"{base_s * 1e3:.2f} ms, ceiling {ceiling * 1e3:.2f} ms "
+               f"= {PERF_GATE_RATIO}x)")
+    if bench.get("tiny") and not base.get("tiny"):
+        print(f"# perf-gate (informational, tiny vs full baseline): "
+              f"{verdict}")
+        return
+    if now_s > ceiling:
+        raise SystemExit(f"FAIL perf-gate: {verdict}; the stage lines "
+                         "above name the regression")
+    print(f"# perf-gate OK: {verdict}")
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
@@ -30,21 +80,24 @@ def main(argv=None):
                     help="CI smoke: small images, single timing reps")
     ap.add_argument("--skip-paper-tables", action="store_true",
                     help="run only the serving sections that feed "
-                         "BENCH_pr5.json")
+                         "BENCH_pr6.json")
     args = ap.parse_args(argv)
 
     import jax
 
-    from . import (batched_throughput, fig7_dsc, roofline_report,
-                   spatial_fcm, superpixel_fcm, table1_variants,
-                   table3_speedup)
+    from . import (batched_throughput, bench_schema, fig7_dsc,
+                   roofline_report, spatial_fcm, superpixel_fcm,
+                   table1_variants, table3_speedup)
 
     print("benchmark,us_per_call,derived")
     if not args.skip_paper_tables:
         table1_variants.run()
         fig7_dsc.run()
         table3_speedup.run()
-        roofline_report.run()
+
+    # The kernel roofline cells always run (even --skip-paper-tables):
+    # the BENCH schema requires an entry per registered kernel cell.
+    roofline = roofline_report.run(smoke=args.tiny)
 
     throughput = batched_throughput.run(tiny=args.tiny)
     spatial_argv = [] if jax.default_backend() == "tpu" else ["--no-pallas"]
@@ -54,20 +107,26 @@ def main(argv=None):
     superpixel = superpixel_fcm.main(["--tiny"] if args.tiny else [])
 
     bench = {
-        "pr": 5,
+        "pr": 6,
         "backend": jax.default_backend(),
         "tiny": args.tiny,
         # serving-path throughput (batched histogram + batched spatial),
-        # incl. the B=64 engine-overhead gate and stage breakdown
+        # incl. the engine/tracing overhead gates, stage breakdown, and
+        # per-route latency + convergence telemetry
         "batched_throughput": throughput,
         # FCM_S robustness/wall-clock sweep
         "spatial_fcm": spatial,
         # superpixel compression ladder
         "superpixel_fcm": superpixel,
+        # roofline-vs-achieved, one cell per registered kernel impl
+        "roofline": roofline,
     }
+    bench_schema.validate(bench)
+    print("# BENCH schema OK")
+    perf_gate(bench)
     out_dir = os.path.join(os.path.dirname(__file__), "out")
     os.makedirs(out_dir, exist_ok=True)
-    out_path = os.path.join(out_dir, "BENCH_pr5.json")
+    out_path = os.path.join(out_dir, "BENCH_pr6.json")
     with open(out_path, "w") as f:
         json.dump(bench, f, indent=1)
     print(f"wrote {out_path}")

@@ -189,3 +189,96 @@ def analyze(arch: str, shape, mesh_label: str, n_devices: int,
         xla_bytes_per_dev=(float(cost.get("bytes accessed", 0.0))
                            if cost else 0.0),
     )
+
+
+# ---------------------------------------------------------------------------
+# Kernel roofline-vs-achieved cells (the registered FCM step kernels)
+# ---------------------------------------------------------------------------
+
+_F32 = 4  # every step kernel streams f32 (labels write int32: same width)
+
+
+def kernel_step_costs(kind: str, *, n_rows: int = 0, c: int = 0,
+                      n_feat: int = 1, n_bins: int = 256, b: int = 1,
+                      h: int = 0, w: int = 0, d: int = 0,
+                      neighbors: int = 4, n_iters: int = 1,
+                      n_centers: int = 0) -> Dict[str, float]:
+    """Analytic per-invocation FLOPs/bytes for one registered step kind.
+
+    This is the *achieved-work numerator*: the intrinsic math of the
+    step at the probe shape, independent of implementation (the Pallas
+    custom-calls are opaque to the HLO walker, so the analytic model is
+    the one number comparable across reference/pallas/resident impls of
+    the same kind). Bytes are the minimal HBM traffic: inputs once,
+    outputs once, plus the (c, N)-sized intermediate for kinds whose
+    reference impl materializes it. Constants are documented inline;
+    they bound achieved/roofline from above, not below.
+    """
+    if kind == "flat":
+        # distances 3D, membership ~6 (pow, recip, normalize), weighted
+        # partials 2(D+1) — per (row, cluster); per convergence iter.
+        flops = n_rows * c * (5 * n_feat + 8) * n_iters
+        bytes_ = _F32 * (n_rows * (n_feat + 1)   # feats + weights
+                         + n_rows * c            # (c, N) membership
+                         + 2 * c * n_feat) * n_iters
+    elif kind == "stencil":
+        # neighbor sum + distance/membership for center and neighbor
+        # terms + partials — per (pixel, cluster), plus the stencil pass.
+        flops = h * w * (2 * neighbors + c * (10 + neighbors)) * n_iters
+        bytes_ = _F32 * (h * w * (2 + c) + 2 * c) * n_iters
+    elif kind == "bin":
+        flops = b * n_rows            # one increment per pixel
+        bytes_ = _F32 * b * (n_rows + n_bins)
+    elif kind == "labels":
+        flops = n_rows * c * (3 * n_feat + 1)
+        bytes_ = _F32 * (n_rows * (n_feat + 1) + c * n_feat)
+    elif kind == "slic_assign":
+        # 9 grid-cell candidates x joint distance over D+2 dims.
+        flops = h * w * 9 * (3 * (d + 2) + 1)
+        bytes_ = _F32 * (h * w * (d + 1) + n_centers * (d + 2))
+    else:
+        raise ValueError(f"no analytic cost model for step kind {kind!r}")
+    return {"flops": float(flops), "bytes": float(bytes_)}
+
+
+@dataclasses.dataclass
+class KernelCell:
+    """Roofline-vs-achieved for one (step kind, impl) registry cell."""
+    kind: str
+    impl: str
+    backend: str
+    interpret: bool               # Pallas interpret mode (off-platform)
+    shape: Dict[str, int]
+    flops: float                  # analytic model, one invocation
+    bytes: float
+    hlo_flops: float              # HLO walker (0 when the kernel is an
+    hlo_bytes: float              # opaque custom-call)
+    wall_s: float                 # median measured wall time
+    achieved_flops_per_s: float
+    achieved_bytes_per_s: float
+    t_roofline: float             # max(flops/peak, bytes/bw)
+    bound: str                    # "compute" | "memory"
+    frac_of_roofline: float       # t_roofline / wall_s (1.0 = at roof)
+
+    def row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def kernel_cell(kind: str, impl: str, backend: str, shape: Dict[str, int],
+                flops: float, bytes_: float, wall_s: float, *,
+                interpret: bool = False, hlo_flops: float = 0.0,
+                hlo_bytes: float = 0.0) -> KernelCell:
+    """Fold one measured kernel invocation into its roofline cell."""
+    t_c = flops / hw.PEAK_FLOPS_BF16
+    t_m = bytes_ / hw.HBM_BW
+    t_roof = max(t_c, t_m)
+    return KernelCell(
+        kind=kind, impl=impl, backend=backend, interpret=interpret,
+        shape=dict(shape), flops=flops, bytes=bytes_,
+        hlo_flops=hlo_flops, hlo_bytes=hlo_bytes, wall_s=wall_s,
+        achieved_flops_per_s=flops / wall_s if wall_s > 0 else 0.0,
+        achieved_bytes_per_s=bytes_ / wall_s if wall_s > 0 else 0.0,
+        t_roofline=t_roof,
+        bound="compute" if t_c >= t_m else "memory",
+        frac_of_roofline=t_roof / wall_s if wall_s > 0 else 0.0,
+    )

@@ -66,6 +66,36 @@ BACKENDS = ("auto", "reference", "pallas", "staged", "sequential",
             "resident")
 
 
+def _record_telemetry(kind: str, impl: str, n_iters: int,
+                      final_delta: Optional[float] = None,
+                      lane_iters=None) -> None:
+    """Convergence telemetry into the process-wide obs registry: every
+    solve records its iterations-to-converge (per lane for batched
+    solves) and final residual, so iteration-count regressions are
+    visible independently of wall time. Counters/histograms:
+
+      solver.solves{kind,impl}        — solve() / solve_batched() calls
+      solver.lanes{kind,impl}         — problems solved (B per batch)
+      solver.iters{kind}              — iteration-count histogram
+      solver.last_final_delta{kind}   — last center-movement residual
+    """
+    from repro import obs
+    reg = obs.default_registry()
+    reg.counter("solver.solves", kind=kind, impl=impl).inc()
+    h = reg.histogram("solver.iters", edges=obs.ITER_EDGES, kind=kind)
+    if lane_iters is not None:
+        reg.counter("solver.lanes", kind=kind, impl=impl).inc(
+            len(lane_iters))
+        for it in lane_iters:
+            h.record(int(it))
+    else:
+        reg.counter("solver.lanes", kind=kind, impl=impl).inc(1)
+        h.record(int(n_iters))
+    if final_delta is not None and not np.isnan(final_delta):
+        reg.gauge("solver.last_final_delta", kind=kind).set(
+            float(final_delta))
+
+
 def warn_deprecated(old: str, new: str) -> None:
     """One-release deprecation shim for the legacy ``fit_*`` aliases."""
     warnings.warn(
@@ -567,11 +597,16 @@ def solve(problem: FCMProblem, cfg: Optional[F.FCMConfig] = None, *,
     eps, max_iters, seed = _resolve(cfg, eps, max_iters, seed)
 
     if backend == "sequential":
-        return _solve_sequential(problem, eps, max_iters, seed, u0)
+        res = _solve_sequential(problem, eps, max_iters, seed, u0)
+        _record_telemetry("flat", "sequential", res.n_iters,
+                          res.final_delta)
+        return res
     if backend == "staged":
-        return solve_staged(problem, eps=eps, max_iters=max_iters,
-                            seed=seed, u0=u0,
-                            keep_membership=keep_membership)
+        res = solve_staged(problem, eps=eps, max_iters=max_iters,
+                           seed=seed, u0=u0,
+                           keep_membership=keep_membership)
+        _record_telemetry("flat", "staged", res.n_iters, res.final_delta)
+        return res
 
     # interpret=True forces Pallas-family impls off-platform (tests);
     # without it backend="resident" degrades to the reference step
@@ -598,6 +633,7 @@ def solve(problem: FCMProblem, cfg: Optional[F.FCMConfig] = None, *,
         from . import spatial as SP
         u = SP.spatial_membership(img, v[:, 0], m, alpha, neighbors)
         labels = F.defuzzify(u.reshape(c, -1)).reshape(img.shape)
+        _record_telemetry("stencil", impl, int(it), float(delta))
         return F.FCMResult(centers=v[:, 0], labels=labels, n_iters=int(it),
                            final_delta=float(delta),
                            membership=u if keep_membership else None)
@@ -623,6 +659,7 @@ def solve(problem: FCMProblem, cfg: Optional[F.FCMConfig] = None, *,
     labels = kops.defuzzify_labels(feats2, v, interpret=interpret)
     u = F.update_membership(feats2, v, m) if keep_membership else None
     centers = v[:, 0] if problem.scalar else v
+    _record_telemetry("flat", impl, int(it), float(delta))
     return F.FCMResult(centers=centers, labels=labels, n_iters=int(it),
                        final_delta=float(delta), membership=u)
 
@@ -676,8 +713,13 @@ def solve_batched(problem: FCMProblem, cfg: Optional[F.FCMConfig] = None, *,
                                                      max_iters)
         if problem.scalar:
             v = v[..., 0]
-    return BatchedFCMResult(centers=v, n_iters=np.asarray(iters),
-                            final_delta=np.asarray(delta),
+    n_iters = np.asarray(iters)
+    final_delta = np.asarray(delta)
+    kind = "stencil" if problem.stencil is not None else "flat"
+    _record_telemetry(kind, impl, int(it),
+                      float(np.max(final_delta)), lane_iters=n_iters)
+    return BatchedFCMResult(centers=v, n_iters=n_iters,
+                            final_delta=final_delta,
                             total_iters=int(it))
 
 

@@ -62,6 +62,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import fcm as F
 from repro.core import solver as SV
 from repro.core import spatial as SP
@@ -183,10 +184,12 @@ class RouteSpec:
                     "batches": "batches", "images": "batched_images",
                     "padded": "padded_lanes",
                     "ingest": "ingest_seconds",
+                    "compress": "compress_seconds",
                     "materialize": "materialize_seconds"}[name]
         legacy = {"seconds": "seconds", "iters": "iters",
                   "batches": "batches", "images": "batched_images",
                   "padded": "padded_lanes", "ingest": "ingest_seconds",
+                  "compress": "compress_seconds",
                   "materialize": "materialize_seconds"}[name]
         return f"{self.stats_prefix}_{legacy}"
 
@@ -201,8 +204,10 @@ class RouteProgram:
     ingest-binning, the batched solve and defuzzification;
     ``scatter(engine, chunk, outputs)`` unpacks the device outputs into
     per-request results and returns ``(results, centers (B, ...),
-    n_iters (B,), total_iters)`` so flush-side stats and the LRU cache
-    see exactly what the staged path would have produced.
+    n_iters (B,), total_iters[, final_delta (B,)])`` so flush-side
+    stats, convergence telemetry and the LRU cache see exactly what the
+    staged path would have produced (the trailing per-lane residual is
+    optional: pre-telemetry programs returning 4-tuples still run).
     """
     gather: Callable[["FCMServeEngine", List[Any], int], Tuple]
     launch: Callable[..., Tuple]
@@ -385,7 +390,7 @@ def _make_histogram_program(eng, key, bucket) -> RouteProgram:
             return px, _gather_hists(eng_, chunk)
 
         def scatter(eng_, chunk, outs):
-            v2, _, iters, total, labels = outs
+            v2, delta, iters, total, labels = outs
             centers = np.asarray(v2)
             iters_np = np.asarray(iters)
             labels_np = np.asarray(labels)
@@ -393,7 +398,7 @@ def _make_histogram_program(eng, key, bucket) -> RouteProgram:
                                       labels_np[i].reshape(p.shape),
                                       centers[i], int(iters_np[i]), False)
                    for i, p in enumerate(chunk)]
-            return res, centers, iters_np, int(total)
+            return res, centers, iters_np, int(total), np.asarray(delta)
 
         return RouteProgram(gather, launch, scatter)
 
@@ -406,7 +411,7 @@ def _make_histogram_program(eng, key, bucket) -> RouteProgram:
         return (_gather_hists(eng_, chunk),)
 
     def scatter(eng_, chunk, outs):
-        v2, _, iters, total, lut = outs
+        v2, delta, iters, total, lut = outs
         centers = np.asarray(v2)
         iters_np = np.asarray(iters)
         lut_np = np.asarray(lut)
@@ -414,7 +419,7 @@ def _make_histogram_program(eng, key, bucket) -> RouteProgram:
                                   lut_np[i][p.flat].reshape(p.shape),
                                   centers[i], int(iters_np[i]), False)
                for i, p in enumerate(chunk)]
-        return res, centers, iters_np, int(total)
+        return res, centers, iters_np, int(total), np.asarray(delta)
 
     return RouteProgram(gather, launch, scatter)
 
@@ -511,7 +516,7 @@ def _make_pixel_program(eng, key, bucket) -> RouteProgram:
         return (xs,)
 
     def scatter(eng_, chunk, outs):
-        v, _, iters, total, labels = outs
+        v, delta, iters, total, labels = outs
         centers = np.asarray(v)
         iters_np = np.asarray(iters)
         labels_np = np.asarray(labels)
@@ -520,7 +525,7 @@ def _make_pixel_program(eng, key, bucket) -> RouteProgram:
                                   centers[i], int(iters_np[i]), False,
                                   method="pixel")
                for i, q in enumerate(chunk)]
-        return res, centers, iters_np, int(total)
+        return res, centers, iters_np, int(total), np.asarray(delta)
 
     return RouteProgram(gather, launch, scatter)
 
@@ -585,9 +590,12 @@ def _ingest_superpixel(eng, img, rid) -> _PendingSuperpixel:
     if img.ndim not in (2, 3):
         raise ValueError(f"superpixel requests need (H, W) or "
                          f"(H, W, D) input, got shape {img.shape}")
-    t0 = time.perf_counter()
-    comp = SX.compress(img.astype(np.float32), eng.superpixel_cfg)
-    eng._stats["compress_seconds"] += time.perf_counter() - t0
+    # Per-route span + stage counter (not a global stat key): compress
+    # is a stage of *this* route's ingest, and any future compressing
+    # route gets its own `<prefix>_compress_seconds` for free.
+    with eng.tracer.span("compress", ring=False, route="superpixel") as sp:
+        comp = SX.compress(img.astype(np.float32), eng.superpixel_cfg)
+    eng._stage_seconds("superpixel", "compress").inc(sp.wall_s)
     return _PendingSuperpixel(rid, np.asarray(comp.features),
                               np.asarray(comp.weights),
                               np.asarray(comp.label_map), comp.slic_iters)
@@ -665,7 +673,9 @@ class FCMServeEngine:
                  cache_size: int = 256,
                  cache_tol: float = 0.15,
                  spatial_cfg: Optional[SP.SpatialFCMConfig] = None,
-                 superpixel_cfg: Optional[SX.SuperpixelFCMConfig] = None):
+                 superpixel_cfg: Optional[SX.SuperpixelFCMConfig] = None,
+                 tracing: bool = True,
+                 trace_ring: int = 64):
         if not batch_sizes or any(b <= 0 for b in batch_sizes):
             raise ValueError(f"bad batch_sizes {batch_sizes!r}")
         self.cfg = cfg
@@ -690,21 +700,63 @@ class FCMServeEngine:
         #: re-registered routes drop their stale programs.
         self._programs: Dict[Hashable, RouteProgram] = {}
         self._next_id = 0
-        self._stats: Dict[str, float] = {
-            "requests": 0, "cache_hits": 0,
-            "spatial_requests": 0,          # legacy pre-registry counter
-            "compress_seconds": 0.0,
-        }
+        # All engine instrumentation lives on the obs layer: a private
+        # MetricsRegistry (stats() renders the legacy flat keys from it)
+        # plus a Tracer whose ring keeps the last ``trace_ring`` flush
+        # traces. ``tracing=False`` keeps every stats counter (they are
+        # the backward-compatible API) but skips ring-buffer and
+        # span-histogram recording — the knob the tracing-overhead
+        # benchmark toggles.
+        self.metrics = obs.MetricsRegistry()
+        self.tracer = obs.Tracer(max_traces=trace_ring, enabled=tracing,
+                                 metrics=self.metrics)
+        #: request id -> (submit perf_counter, route name); consumed when
+        #: the request's result materializes, feeding the per-route
+        #: submit->result latency histogram.
+        self._submit_t: Dict[int, Tuple[float, str]] = {}
+        # Pre-register the schema for the routes known at construction
+        # (zero-valued stats appear before any traffic; routes registered
+        # later join lazily through the get-or-create registry).
+        self.metrics.counter("requests")
+        self.metrics.counter("cache_hits")
         for route in ROUTES.values():
-            self._stats.setdefault(route.stat("seconds"), 0.0)
-            self._stats.setdefault(route.stat("ingest"), 0.0)
-            self._stats.setdefault(route.stat("materialize"), 0.0)
+            self._route_counter("requests", route.name)
+            self._route_counter("cache_hits", route.name)
             for k in ("batches", "images", "padded", "iters"):
-                self._stats.setdefault(route.stat(k), 0)
-        # Per-route request/cache-hit counters (the route mix is what the
-        # ops dashboards page on; only cacheable routes can ever hit).
-        self._method_requests = {m: 0 for m in ROUTES}
-        self._method_cache_hits = {m: 0 for m in ROUTES}
+                self._route_counter(k, route.name)
+            for stage in ("ingest", "solve", "materialize", "compress"):
+                self._stage_seconds(route.name, stage)
+            self._latency_hist(route.name)
+            self._iters_hist(route.name)
+
+    # -- metric accessors --------------------------------------------------
+
+    def _route_counter(self, name: str, route_name: str) -> obs.Counter:
+        return self.metrics.counter(f"route.{name}", route=route_name)
+
+    def _stage_seconds(self, route_name: str, stage: str) -> obs.Counter:
+        return self.metrics.counter("route.stage_seconds",
+                                    route=route_name, stage=stage)
+
+    def _latency_hist(self, route_name: str) -> obs.Histogram:
+        """Per-route submit->result latency (seconds)."""
+        return self.metrics.histogram("route.latency_seconds",
+                                      route=route_name)
+
+    def _iters_hist(self, route_name: str) -> obs.Histogram:
+        """Per-route iterations-to-converge, one sample per real lane."""
+        return self.metrics.histogram("route.lane_iters",
+                                      edges=obs.ITER_EDGES,
+                                      route=route_name)
+
+    def _finish(self, route: RouteSpec, results: Dict[int, Any],
+                r: SegmentationResult) -> None:
+        """Record one materialized result + its submit->result latency."""
+        results[r.request_id] = r
+        sub = self._submit_t.pop(r.request_id, None)
+        if sub is not None:
+            self._latency_hist(route.name).record(
+                time.perf_counter() - sub[0])
 
     # -- ingest ------------------------------------------------------------
 
@@ -718,18 +770,19 @@ class FCMServeEngine:
             raise ValueError(f"unknown method {method!r}; registered "
                              f"routes: {METHODS}")
         img = np.asarray(img)
+        t_submit = time.perf_counter()
         # Ingest validates eagerly: a request failing inside flush()
         # would discard the whole drained batch's results. A raise here
-        # consumes neither a request id nor a counter.
-        t0 = time.perf_counter()
-        pending = route.ingest(self, img, self._next_id)
-        self._stats[route.stat("ingest")] += time.perf_counter() - t0
+        # consumes neither a request id nor a counter (the span records
+        # status="error" and re-raises before any counter moves).
+        with self.tracer.span("ingest", ring=False, route=method) as sp:
+            pending = route.ingest(self, img, self._next_id)
+        self._stage_seconds(method, "ingest").inc(sp.wall_s)
         rid = self._next_id
         self._next_id += 1
-        self._stats["requests"] += 1
-        self._method_requests[method] += 1
-        if method == "spatial":
-            self._stats["spatial_requests"] += 1
+        self.metrics.counter("requests").inc()
+        self._route_counter("requests", method).inc()
+        self._submit_t[rid] = (t_submit, method)
         self._queues[method].append(pending)
         return rid
 
@@ -742,36 +795,41 @@ class FCMServeEngine:
     def flush(self) -> List[SegmentationResult]:
         """Run every queued request; returns results in submit order.
         Route-agnostic: cache/dedup for cacheable routes, then group by
-        bucket key and run one batched solve per bucket."""
+        bucket key and run one batched solve per bucket. Each flush
+        leaves one root trace (per-bucket child spans inside) in
+        ``tracer``'s ring."""
         results: Dict[int, SegmentationResult] = {}
-        for route in ROUTES.values():
-            pend = self._queues[route.name]
-            self._queues[route.name] = []
-            if not pend:
-                continue
-            dups: List[Any] = []
-            fitted: Dict[bytes, np.ndarray] = {}
-            if route.cacheable:
-                pend, dups = self._answer_from_cache(route, pend, results)
-            groups: "collections.OrderedDict[Hashable, List[Any]]" = \
-                collections.OrderedDict()
-            for p in pend:
-                groups.setdefault(route.bucket_key(self, p), []).append(p)
-            for group in groups.values():
-                i = 0
-                while i < len(group):
-                    chunk = group[i:i + self.batch_sizes[-1]]
-                    i += len(chunk)
-                    self._run_bucket(route, chunk,
-                                     self._bucket_for(len(chunk)),
-                                     results, fitted)
-            # duplicates ride on their representative's centers (kept
-            # locally: the LRU may be disabled, or evict mid-flush)
-            for p in dups:
-                self._stats["cache_hits"] += 1
-                self._method_cache_hits[route.name] += 1
-                results[p.request_id] = route.materialize(
-                    self, p, fitted[p.key], 0, True)
+        with self.tracer.span("flush", queued=self.queue_depth):
+            for route in ROUTES.values():
+                pend = self._queues[route.name]
+                self._queues[route.name] = []
+                if not pend:
+                    continue
+                dups: List[Any] = []
+                fitted: Dict[bytes, np.ndarray] = {}
+                if route.cacheable:
+                    pend, dups = self._answer_from_cache(route, pend,
+                                                         results)
+                groups: "collections.OrderedDict[Hashable, List[Any]]" = \
+                    collections.OrderedDict()
+                for p in pend:
+                    groups.setdefault(route.bucket_key(self, p),
+                                      []).append(p)
+                for group in groups.values():
+                    i = 0
+                    while i < len(group):
+                        chunk = group[i:i + self.batch_sizes[-1]]
+                        i += len(chunk)
+                        self._run_bucket(route, chunk,
+                                         self._bucket_for(len(chunk)),
+                                         results, fitted)
+                # duplicates ride on their representative's centers (kept
+                # locally: the LRU may be disabled, or evict mid-flush)
+                for p in dups:
+                    self.metrics.counter("cache_hits").inc()
+                    self._route_counter("cache_hits", route.name).inc()
+                    self._finish(route, results, route.materialize(
+                        self, p, fitted[p.key], 0, True))
         return [results[rid] for rid in sorted(results)]
 
     def segment(self, imgs: Sequence[np.ndarray],
@@ -796,10 +854,10 @@ class FCMServeEngine:
             _ensure_hist(self, p)
             centers = self._cache_get(p.key, p.hist)
             if centers is not None:
-                self._stats["cache_hits"] += 1
-                self._method_cache_hits[route.name] += 1
-                results[p.request_id] = route.materialize(
-                    self, p, centers, 0, True)
+                self.metrics.counter("cache_hits").inc()
+                self._route_counter("cache_hits", route.name).inc()
+                self._finish(route, results, route.materialize(
+                    self, p, centers, 0, True))
             else:
                 misses.append(p)
         uniq: Dict[bytes, Any] = {}
@@ -849,47 +907,63 @@ class FCMServeEngine:
                     results: Dict[int, SegmentationResult],
                     fitted: Dict[bytes, np.ndarray]):
         prog = self._program_for(route, chunk, bucket)
-        if prog is not None:
-            # Device-resident fast path: host-side stacking, ONE jitted
-            # dispatch (ingest-binning + solve + defuzzify), unpack.
-            t0 = time.perf_counter()
-            inputs = prog.gather(self, chunk, bucket)
-            t1 = time.perf_counter()
-            outs = jax.block_until_ready(prog.launch(*inputs))
-            t2 = time.perf_counter()
-            res_list, centers, n_iters, total_iters = prog.scatter(
-                self, chunk, outs)
-            t3 = time.perf_counter()
-            self._stats[route.stat("ingest")] += t1 - t0
-            self._stats[route.stat("seconds")] += t2 - t1
-            self._stats[route.stat("materialize")] += t3 - t2
-            for r in res_list:
-                results[r.request_id] = r
-        else:
-            t0 = time.perf_counter()
-            problem, cfg = route.build_problem(self, chunk, bucket)
-            t1 = time.perf_counter()
-            res = SV.solve_batched(problem, cfg)
-            t2 = time.perf_counter()
-            centers = np.asarray(res.centers)
-            total_iters = int(res.total_iters)
-            if route.materialize_batch is not None:
-                for r in route.materialize_batch(self, chunk, centers,
-                                                 res.n_iters):
-                    results[r.request_id] = r
+        n_iters = None
+        deltas = None
+        with self.tracer.span("bucket", route=route.name, bucket=bucket,
+                              n=len(chunk), fused=prog is not None,
+                              requests=[p.request_id for p in chunk]):
+            if prog is not None:
+                # Device-resident fast path: host-side stacking, ONE
+                # jitted dispatch (ingest-binning + solve + defuzzify),
+                # unpack.
+                with self.tracer.span("gather", route=route.name) as sp_g:
+                    inputs = prog.gather(self, chunk, bucket)
+                with self.tracer.span("launch", route=route.name) as sp_s:
+                    outs = sp_s.fence(prog.launch(*inputs))
+                with self.tracer.span("scatter", route=route.name) as sp_m:
+                    scattered = prog.scatter(self, chunk, outs)
+                res_list, centers, n_iters, total_iters = scattered[:4]
+                if len(scattered) > 4:      # telemetry-aware program
+                    deltas = np.asarray(scattered[4])
+                for r in res_list:
+                    self._finish(route, results, r)
             else:
-                for lane, p in enumerate(chunk):
-                    results[p.request_id] = route.materialize(
-                        self, p, centers[lane], int(res.n_iters[lane]),
-                        False)
-            t3 = time.perf_counter()
-            self._stats[route.stat("ingest")] += t1 - t0
-            self._stats[route.stat("seconds")] += t2 - t1
-            self._stats[route.stat("materialize")] += t3 - t2
-        self._stats[route.stat("batches")] += 1
-        self._stats[route.stat("images")] += len(chunk)
-        self._stats[route.stat("padded")] += bucket - len(chunk)
-        self._stats[route.stat("iters")] += int(total_iters)
+                with self.tracer.span("build", route=route.name) as sp_g:
+                    problem, cfg = route.build_problem(self, chunk, bucket)
+                with self.tracer.span("solve", route=route.name) as sp_s:
+                    res = sp_s.fence(SV.solve_batched(problem, cfg))
+                with self.tracer.span("materialize",
+                                      route=route.name) as sp_m:
+                    centers = np.asarray(res.centers)
+                    total_iters = int(res.total_iters)
+                    n_iters = res.n_iters
+                    deltas = np.asarray(res.final_delta)
+                    if route.materialize_batch is not None:
+                        for r in route.materialize_batch(
+                                self, chunk, centers, res.n_iters):
+                            self._finish(route, results, r)
+                    else:
+                        for lane, p in enumerate(chunk):
+                            self._finish(route, results, route.materialize(
+                                self, p, centers[lane],
+                                int(res.n_iters[lane]), False))
+            self._stage_seconds(route.name, "ingest").inc(sp_g.wall_s)
+            self._stage_seconds(route.name, "solve").inc(sp_s.wall_s)
+            self._stage_seconds(route.name, "materialize").inc(sp_m.wall_s)
+        self._route_counter("batches", route.name).inc()
+        self._route_counter("images", route.name).inc(len(chunk))
+        self._route_counter("padded", route.name).inc(bucket - len(chunk))
+        self._route_counter("iters", route.name).inc(int(total_iters))
+        # Convergence telemetry: one sample per *real* lane (padding
+        # lanes converge artificially fast and would skew the mix).
+        if n_iters is not None:
+            h = self._iters_hist(route.name)
+            for it in np.asarray(n_iters)[:len(chunk)]:
+                h.record(int(it))
+        if deltas is not None and len(deltas):
+            self.metrics.gauge("route.last_final_delta",
+                               route=route.name).set(
+                float(np.max(deltas[:len(chunk)])))
         if route.cacheable and self.cache_size > 0:
             for lane, p in enumerate(chunk):
                 fitted[p.key] = centers[lane]
@@ -949,29 +1023,94 @@ class FCMServeEngine:
     def queue_depth(self) -> int:
         return sum(len(q) for q in self._queues.values())
 
-    def stats(self) -> Dict[str, float]:
-        s = dict(self._stats)
+    def stats(self) -> Dict[str, Any]:
+        """The flat legacy stat keys (rendered from the metrics
+        registry — the registry is the single source of truth) plus the
+        per-route ``latency`` (submit->result percentiles) and
+        ``convergence`` (iterations-to-converge) blocks. Everything in
+        the returned dict is plain JSON-serializable."""
+        s: Dict[str, Any] = {}
+        s["requests"] = self.metrics.counter("requests").snapshot()
+        s["cache_hits"] = self.metrics.counter("cache_hits").snapshot()
+        for route in ROUTES.values():
+            s[route.stat("seconds")] = \
+                self._stage_seconds(route.name, "solve").snapshot()
+            s[route.stat("ingest")] = \
+                self._stage_seconds(route.name, "ingest").snapshot()
+            s[route.stat("materialize")] = \
+                self._stage_seconds(route.name, "materialize").snapshot()
+            s[route.stat("compress")] = \
+                self._stage_seconds(route.name, "compress").snapshot()
+            for k in ("batches", "images", "padded", "iters"):
+                s[route.stat(k)] = \
+                    self._route_counter(k, route.name).snapshot()
+        # Legacy aggregates: the pre-registry spatial counter, and
+        # compress_seconds summed over routes (historically one global
+        # key written by superpixel ingest; now per-route stage time).
+        if "spatial" in ROUTES:
+            s["spatial_requests"] = \
+                self._route_counter("requests", "spatial").snapshot()
+        s["compress_seconds"] = sum(
+            self._stage_seconds(r.name, "compress").snapshot()
+            for r in ROUTES.values())
         s["queue_depth"] = self.queue_depth
         s["cache_entries"] = len(self._cache)
         # Per-route request/cache-hit mix (only cacheable routes can hit,
         # but the dashboards want every column).
-        s["method_requests"] = dict(self._method_requests)
-        s["method_cache_hits"] = dict(self._method_cache_hits)
+        s["method_requests"] = {
+            r.name: self._route_counter("requests", r.name).snapshot()
+            for r in ROUTES.values()}
+        s["method_cache_hits"] = {
+            r.name: self._route_counter("cache_hits", r.name).snapshot()
+            for r in ROUTES.values()}
         # Hit rate over cacheable traffic only — the bypass routes must
         # not dilute it.
-        cacheable = sum(self._method_requests[r.name]
+        cacheable = sum(s["method_requests"][r.name]
                         for r in ROUTES.values() if r.cacheable)
         s["cache_hit_rate"] = (s["cache_hits"] / cacheable
                                if cacheable else 0.0)
-        s["images_per_sec"] = (s["batched_images"] / s["fit_seconds"]
-                               if s["fit_seconds"] > 0 else 0.0)
+        fit_s = s.get("fit_seconds", 0.0)
+        s["images_per_sec"] = (s.get("batched_images", 0) / fit_s
+                               if fit_s > 0 else 0.0)
         # Per-route stage breakdown (ingest = submit validation + flush
         # stacking, solve = the device dispatch, materialize = unpack /
         # per-request labeling) — what overhead regressions page on.
         s["stage_seconds"] = {
-            r.name: {"ingest": self._stats[r.stat("ingest")],
-                     "solve": self._stats[r.stat("seconds")],
-                     "materialize": self._stats[r.stat("materialize")]}
+            r.name: {"ingest": s[r.stat("ingest")],
+                     "solve": s[r.stat("seconds")],
+                     "materialize": s[r.stat("materialize")]}
             for r in ROUTES.values()}
         s["compiled_programs"] = len(self._programs)
-        return s
+        # Per-route submit->result latency percentiles and convergence
+        # mix — the two new observability blocks.
+        s["latency"] = {r.name: self._latency_hist(r.name).snapshot()
+                        for r in ROUTES.values()}
+        s["convergence"] = {}
+        for r in ROUTES.values():
+            h = self._iters_hist(r.name)
+            g = self.metrics.peek("route.last_final_delta", route=r.name)
+            s["convergence"][r.name] = {
+                "lanes": h.count,
+                "mean_iters": h.mean,
+                "p50_iters": h.quantile(0.50),
+                "p99_iters": h.quantile(0.99),
+                "last_final_delta": g.snapshot() if g else None,
+            }
+        return obs.json_safe(s)
+
+    def reset_stats(self) -> None:
+        """Zero every counter/gauge/histogram and drop the trace ring;
+        registered metric keys survive so the stats schema is unchanged
+        after a reset (dashboards keep their columns)."""
+        self.metrics.reset()
+        self.tracer.clear()
+        self._submit_t.clear()
+
+    def snapshot(self) -> Dict[str, Any]:
+        """One JSON-serializable observability dump: the stats dict, the
+        raw metrics registry, and the recent flush traces."""
+        return obs.json_safe({
+            "stats": self.stats(),
+            "metrics": self.metrics.snapshot(),
+            "traces": self.tracer.traces(),
+        })

@@ -574,3 +574,124 @@ def test_route_registration_roundtrip():
     finally:
         del E.ROUTES["histogram-shadow"]
         E.METHODS = tuple(E.ROUTES)
+
+
+# ---------------------------------------------------------------------------
+# Observability layer (PR 6)
+# ---------------------------------------------------------------------------
+
+def test_stats_latency_percentiles_per_route(volume):
+    eng = FCMServeEngine(CFG, batch_sizes=(4, 16), cache_size=0)
+    eng.segment(volume)
+    lat = eng.stats()["latency"]["histogram"]
+    assert lat["count"] == len(volume)       # one sample per request
+    for k in ("p50", "p90", "p99", "mean", "min", "max"):
+        assert lat[k] is not None and lat[k] > 0.0
+    assert lat["min"] <= lat["p50"] <= lat["p99"] <= lat["max"]
+    # untouched routes keep an empty (schema'd) histogram
+    assert eng.stats()["latency"]["spatial"]["count"] == 0
+
+
+def test_stats_convergence_per_route(volume):
+    eng = FCMServeEngine(CFG, batch_sizes=(4, 16), cache_size=0)
+    results = eng.segment(volume)
+    conv = eng.stats()["convergence"]["histogram"]
+    iters = [r.n_iters for r in results]
+    assert conv["lanes"] == len(volume)
+    assert conv["mean_iters"] == pytest.approx(np.mean(iters), abs=1e-6)
+    assert conv["p50_iters"] == pytest.approx(np.percentile(iters, 50),
+                                              abs=1.0)
+    # the residual is the center-movement delta at the final accepted
+    # iteration (convergence itself gates on membership change)
+    assert conv["last_final_delta"] is not None
+    assert np.isfinite(conv["last_final_delta"])
+    assert conv["last_final_delta"] >= 0.0
+    # a route that never solved reports no residual
+    assert eng.stats()["convergence"]["pixel"]["last_final_delta"] is None
+
+
+def test_cache_hits_do_not_pollute_convergence(volume):
+    eng = FCMServeEngine(CFG, batch_sizes=(1, 8))
+    eng.segment([volume[0]])
+    eng.segment([volume[0]])                 # cache hit: no solve ran
+    conv = eng.stats()["convergence"]["histogram"]
+    assert conv["lanes"] == 1
+    lat = eng.stats()["latency"]["histogram"]
+    assert lat["count"] == 2                 # but both requests have latency
+
+
+def test_reset_stats_zeroes_but_keeps_schema(volume):
+    eng = FCMServeEngine(CFG, batch_sizes=(4, 16), cache_size=0)
+    eng.segment(volume)
+    before = eng.stats()
+    assert before["requests"] == len(volume)
+    eng.reset_stats()
+    after = eng.stats()
+    assert set(after) == set(before)         # same schema
+    assert after["requests"] == 0 and after["batches"] == 0
+    assert after["latency"]["histogram"]["count"] == 0
+    assert after["convergence"]["histogram"]["lanes"] == 0
+    assert eng.tracer.traces() == []
+    # and the engine keeps serving after a reset
+    res = eng.segment([volume[0]])[0]
+    assert res.labels.shape == volume[0].shape
+    assert eng.stats()["requests"] == 1
+
+
+def test_snapshot_is_plain_json(volume):
+    import json as _json
+    eng = FCMServeEngine(CFG, batch_sizes=(4, 16))
+    eng.segment(volume)
+    eng.segment([volume[0]], method="spatial")
+    snap = eng.snapshot()
+    _json.dumps(snap)                        # no numpy scalars anywhere
+    assert set(snap) == {"stats", "metrics", "traces"}
+    assert snap["stats"]["requests"] == len(volume) + 1
+    assert "route.latency_seconds{route=histogram}" in \
+        snap["metrics"]["histograms"]
+
+
+def test_trace_ring_records_flush_tree(volume):
+    eng = FCMServeEngine(CFG, batch_sizes=(4, 16), cache_size=0,
+                         trace_ring=8)
+    eng.segment(volume[:4])
+    flushes = [t for t in eng.tracer.traces() if t["name"] == "flush"]
+    assert flushes
+    bucket = flushes[-1]["children"][0]
+    assert bucket["name"] == "bucket"
+    assert bucket["attrs"]["route"] == "histogram"
+    assert bucket["attrs"]["n"] == 4
+    stages = [c["name"] for c in bucket["children"]]
+    assert "scatter" in stages or "solve" in stages
+    launch = [c for c in bucket["children"]
+              if c["name"] in ("launch", "solve")][0]
+    assert launch.get("device_s") is not None  # fenced device time
+
+
+def test_tracing_disabled_keeps_stats_but_no_traces(volume):
+    eng = FCMServeEngine(CFG, batch_sizes=(4, 16), cache_size=0,
+                         tracing=False)
+    eng.segment(volume)
+    s = eng.stats()
+    assert s["requests"] == len(volume)
+    assert s["latency"]["histogram"]["count"] == len(volume)
+    assert s["stage_seconds"]["histogram"]["solve"] > 0
+    assert eng.tracer.traces() == []
+
+
+def test_compress_seconds_accounted_per_route():
+    """Satellite: compress used to land in one global stats key; it is
+    now a per-route stage counter surfaced through route.stat()."""
+    rgb = np.stack([phantom.phantom_slice(48, 48, seed=i)[0]
+                    for i in range(3)], axis=-1)
+    eng = FCMServeEngine(CFG)
+    eng.segment([rgb], method="superpixel")
+    s = eng.stats()
+    assert s["superpixel_compress_seconds"] > 0.0
+    assert s["compress_seconds"] == pytest.approx(
+        s["superpixel_compress_seconds"])
+    # histogram traffic adds no compress time
+    img, _ = phantom.phantom_slice(32, 32, seed=0)
+    eng.segment([img])
+    assert eng.stats()["compress_seconds"] == pytest.approx(
+        eng.stats()["superpixel_compress_seconds"])
