@@ -215,7 +215,7 @@ def run(tiny: bool = False):
         raise SystemExit(
             f"FAIL: batched-spatial speedup at B={SPATIAL_B} is "
             f"{sp:.2f}x (acceptance floor {SPATIAL_MIN_SPEEDUP}x over "
-            "one-at-a-time fit_spatial)")
+            "one-at-a-time spatial solves)")
     tr = hist["tracing_overhead_ratio"]
     if tr > TRACING_MAX_OVERHEAD:
         raise SystemExit(

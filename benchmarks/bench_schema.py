@@ -8,7 +8,7 @@ observability layer promises. CI runs it against the ``--tiny`` output
 so a PR cannot silently drop a section or a registry cell from the
 perf record.
 
-Run:  PYTHONPATH=src python -m benchmarks.bench_schema benchmarks/out/BENCH_pr6.json
+Run:  PYTHONPATH=src python -m benchmarks.bench_schema benchmarks/out/BENCH_pr7.json
 """
 from __future__ import annotations
 
@@ -25,24 +25,32 @@ CELL_KEYS = ("kind", "impl", "backend", "shape", "flops", "bytes",
 
 HIST_KEYS = ("count", "mean", "p50", "p90", "p99")
 
+#: Cells the perf record must carry even if someone deregisters the
+#: impl: the whole-solve resident kernels are the dispatch thresholds'
+#: evidence, so dropping their measurement is a schema violation.
+REQUIRED_CELLS = (("flat", "resident"), ("flat", "resident_streamed"),
+                  ("stencil", "resident"))
+
 
 def _check_roofline(section, problems: List[str]) -> None:
     from repro.kernels import ops as kops
     cells = {(c.get("kind"), c.get("impl")): c
              for c in section.get("cells", [])}
-    for impl in kops.step_impls():
-        cell = cells.get((impl.kind, impl.name))
+    required = {(i.kind, i.name) for i in kops.step_impls()}
+    required.update(REQUIRED_CELLS)
+    for kind, name in sorted(required):
+        cell = cells.get((kind, name))
         if cell is None:
             problems.append(f"roofline: no cell for registered kernel "
-                            f"{impl.kind}/{impl.name}")
+                            f"{kind}/{name}")
         elif "error" in cell:
-            problems.append(f"roofline: cell {impl.kind}/{impl.name} "
+            problems.append(f"roofline: cell {kind}/{name} "
                             f"errored: {cell['error']}")
         else:
             for k in CELL_KEYS:
                 if k not in cell:
-                    problems.append(f"roofline: cell {impl.kind}/"
-                                    f"{impl.name} missing {k!r}")
+                    problems.append(f"roofline: cell {kind}/"
+                                    f"{name} missing {k!r}")
     if "hw" not in section:
         problems.append("roofline: missing hw peaks")
 

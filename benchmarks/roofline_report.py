@@ -95,11 +95,23 @@ def _probe(impl, smoke: bool):
                                    m=m, block_rows=br, interpret=interpret)
             costs = R.kernel_step_costs("flat", n_rows=n, c=c, n_feat=1)
             return step, (v,), shape, costs
-        # resident: the whole convergence loop runs inside the kernel —
-        # probe a fixed-trip solve and scale the per-step model by it.
+        # resident / resident_streamed: the whole convergence loop runs
+        # inside the kernel — probe a fixed-trip solve (tol=0 never
+        # early-stops) and scale the per-step model by the trip count.
         iters = 8
-        x4, w3 = kops.tile_rows_batched(x[None, :, None], w[None])
-        solve_fn = kops.build_step("flat", "resident", x4=x4, w3=w3, m=m,
+        if name == "resident_streamed":
+            from repro.kernels import fcm_resident as KR
+            # rows beyond the VMEM-resident bound, so the probe actually
+            # exercises the HBM-streamed double-buffer path.
+            n = 2048 if smoke else max(n, KR.MAX_ROWS * 128 * 2)
+            x = jnp.asarray(rng.random(n, dtype=np.float32)) * 255.0
+            w = jnp.ones((n,), jnp.float32)
+            x4, w3 = kops.tile_rows_batched(
+                x[None, :, None], w[None],
+                rows_multiple=KR.STREAM_CHUNK_ROWS)
+        else:
+            x4, w3 = kops.tile_rows_batched(x[None, :, None], w[None])
+        solve_fn = kops.build_step("flat", name, x4=x4, w3=w3, m=m,
                                    max_iters=iters, interpret=interpret)
         shape = {"n_rows": n, "c": c, "n_feat": 1, "n_iters": iters}
         costs = R.kernel_step_costs("flat", n_rows=n, c=c, n_feat=1,
@@ -119,6 +131,22 @@ def _probe(impl, smoke: bool):
             step = kops.build_step("stencil", "reference", img=img, m=m,
                                    alpha=alpha, neighbors=neighbors)
             return step, (v,), shape, costs
+        if name == "resident":
+            # whole-solve FCM_S: fixed-trip in-kernel convergence loop.
+            iters = 8
+            xpad, vpad = kops.tile_grid_batched(img[None])
+            solve_fn = kops.build_step("stencil", "resident", xpad=xpad,
+                                       vpad=vpad, m=m, alpha=alpha,
+                                       neighbors=neighbors,
+                                       max_iters=iters,
+                                       interpret=interpret)
+            shape = dict(shape, n_iters=iters)
+            costs = R.kernel_step_costs("stencil", h=hw_, w=hw_, c=c,
+                                        neighbors=neighbors,
+                                        n_iters=iters)
+            return (solve_fn, (v[:, 0][None],
+                               jnp.zeros((1,), jnp.float32)),
+                    shape, costs)
         br = 8
         xpad, wpad = kops.tile_grid(img, br)
         step = kops.build_step("stencil", "pallas", xpad=xpad, wpad=wpad,

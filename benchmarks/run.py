@@ -1,11 +1,11 @@
 """Benchmark harness: one module per paper table/figure. Prints
 ``name,us_per_call,derived`` CSV lines and writes the consolidated
-``benchmarks/out/BENCH_pr6.json`` aggregating the batched / spatial /
+``benchmarks/out/BENCH_pr7.json`` aggregating the batched / spatial /
 superpixel serving numbers (engine-overhead + tracing-overhead gates,
 per-route latency percentiles, convergence telemetry) and the
 roofline-vs-achieved kernel report, validates the result against
 ``bench_schema.py``, and perf-gates the B=64 engine overhead against
-the committed ``BENCH_pr5.json`` baseline — so the perf trajectory is
+the committed ``BENCH_pr6.json`` baseline — so the perf trajectory is
 machine-readable AND regression-guarded across PRs.
 
   table1_variants    — paper Table 1 analogue (variant ladder)
@@ -28,13 +28,13 @@ import json
 import os
 
 #: Allowed growth of the B=64 histogram engine wall time over the
-#: committed BENCH_pr5 baseline. The gate rides on the engine's OWN
+#: committed BENCH_pr6 baseline. The gate rides on the engine's OWN
 #: seconds, not the overhead-vs-solve_batched ratio: the raw solve's
 #: run-to-run variance would otherwise fail the serving path for
 #: getting a faster denominator. The slack absorbs scheduler noise on
 #: a ~10 ms sample.
 PERF_GATE_RATIO = 1.5
-BASELINE = os.path.join(os.path.dirname(__file__), "out", "BENCH_pr5.json")
+BASELINE = os.path.join(os.path.dirname(__file__), "out", "BENCH_pr6.json")
 
 
 def perf_gate(bench: dict, baseline_path: str = BASELINE) -> None:
@@ -80,7 +80,7 @@ def main(argv=None):
                     help="CI smoke: small images, single timing reps")
     ap.add_argument("--skip-paper-tables", action="store_true",
                     help="run only the serving sections that feed "
-                         "BENCH_pr6.json")
+                         "BENCH_pr7.json")
     args = ap.parse_args(argv)
 
     import jax
@@ -107,7 +107,7 @@ def main(argv=None):
     superpixel = superpixel_fcm.main(["--tiny"] if args.tiny else [])
 
     bench = {
-        "pr": 6,
+        "pr": 7,
         "backend": jax.default_backend(),
         "tiny": args.tiny,
         # serving-path throughput (batched histogram + batched spatial),
@@ -126,7 +126,7 @@ def main(argv=None):
     perf_gate(bench)
     out_dir = os.path.join(os.path.dirname(__file__), "out")
     os.makedirs(out_dir, exist_ok=True)
-    out_path = os.path.join(out_dir, "BENCH_pr6.json")
+    out_path = os.path.join(out_dir, "BENCH_pr7.json")
     with open(out_path, "w") as f:
         json.dump(bench, f, indent=1)
     print(f"wrote {out_path}")

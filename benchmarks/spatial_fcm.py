@@ -3,7 +3,7 @@
 Sweeps the (gaussian sigma, impulse fraction) noise levels from
 ``repro.data.phantom.NOISE_LEVELS`` on a phantom slice and compares
 
-* ``plain``        — histogram-blind fused FCM (``fit_fused``),
+* ``plain``        — histogram-blind fused FCM (fused pixel solve),
 * ``spatial_ref``  — FCM_S with the pure-jnp stencil reference,
 * ``spatial_pallas`` — FCM_S with the fused Pallas stencil kernel
   (interpret mode off-TPU, so its wall clock on CPU measures the

@@ -2,7 +2,7 @@
 
 The headline claim: for a 512x512 RGB phantom, SLIC-compressing N =
 262144 pixels to ~256 superpixel rows makes the FCM fit >= 10x faster
-than ``fit_fused`` on raw pixels at DSC parity (within 0.02 per class).
+than the fused pixel solve at DSC parity (within 0.02 per class).
 Records, per image size:
 
 * ``pixel_fit_s``      — fused vector FCM over the (N, 3) pixel rows,

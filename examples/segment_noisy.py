@@ -2,7 +2,7 @@
 
 Corrupts a phantom slice with heavy Gaussian + salt-and-pepper noise,
 segments it with the histogram fast path (plain FCM, spatial-blind) and
-with :func:`repro.core.spatial.fit_spatial` (8-neighbor FCM_S, both
+with the spatial solver route (8-neighbor FCM_S, both
 through the serving engine's ``method="spatial"`` route and directly),
 then reports per-tissue DSC. Outputs land in the gitignored
 ``examples/out/``.

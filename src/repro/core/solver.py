@@ -191,11 +191,13 @@ class FCMProblem:
 
     @property
     def n_rows(self) -> Optional[int]:
-        """Row count of a flat problem (None for stencil problems) —
-        what the registry's VMEM-residency bounds are checked against."""
-        if self.stencil is not None:
-            return None
+        """Problem size the registry's VMEM-residency bounds are
+        checked against: the row count of a flat problem, or the
+        per-lane PIXEL count of a stencil problem (what the resident
+        stencil solve must hold in VMEM)."""
         lead = 1 if self.batch else 0
+        if self.stencil is not None:
+            return int(np.prod(self.features.shape[lead:]))
         return int(self.features.shape[lead])
 
     def rows(self) -> Tuple[jax.Array, jax.Array]:
@@ -458,6 +460,19 @@ def _stencil_loop(img, v0, m, alpha, neighbors, tol, max_iters):
     return while_centers(step, v0, tol, max_iters)
 
 
+@partial(jax.jit, static_argnames=("c", "m", "max_iters", "interpret"))
+def _flat_loop_resident_streamed(x4, w3, v0, c, m, tol, max_iters,
+                                 interpret):
+    """Single-problem face of the HBM-streamed whole-solve kernel
+    (inputs pre-tiled with ``rows_multiple=STREAM_CHUNK_ROWS``)."""
+    from repro.kernels import ops as kops
+    solve_fn = kops.build_step("flat", "resident_streamed", x4=x4, w3=w3,
+                               m=m, max_iters=max_iters,
+                               interpret=interpret)
+    v, delta, it = solve_fn(v0[None], jnp.asarray(tol, jnp.float32)[None])
+    return v[0], delta[0], it[0]
+
+
 @partial(jax.jit, static_argnames=("m", "alpha", "neighbors", "max_iters",
                                    "block_rows", "interpret"))
 def _stencil_loop_pallas(xpad, wpad, v0, m, alpha, neighbors, tol,
@@ -469,6 +484,22 @@ def _stencil_loop_pallas(xpad, wpad, v0, m, alpha, neighbors, tol,
     return while_centers(step, v0, tol, max_iters)
 
 
+@partial(jax.jit, static_argnames=("m", "alpha", "neighbors", "max_iters",
+                                   "interpret"))
+def _stencil_loop_resident(xpad, vpad, v0, m, alpha, neighbors, tol,
+                           max_iters, interpret):
+    """Single-problem face of the VMEM-resident FCM_S whole-solve
+    (one lane; inputs from ``tile_grid_batched``). Returns the same
+    ``(v (c, 1), delta, it)`` triple as the other stencil drivers."""
+    from repro.kernels import ops as kops
+    solve_fn = kops.build_step("stencil", "resident", xpad=xpad, vpad=vpad,
+                               m=m, alpha=alpha, neighbors=neighbors,
+                               max_iters=max_iters, interpret=interpret)
+    v, delta, it = solve_fn(v0[None, :, 0],
+                            jnp.asarray(tol, jnp.float32)[None])
+    return v[0][:, None], delta[0], it[0]
+
+
 def flat_batched_solve(feats, w, c, m, eps, max_iters,
                        impl: str = "reference", interpret: bool = False):
     """Traceable batched flat solve: feats (B, K, D), w (B, K) ->
@@ -477,19 +508,24 @@ def flat_batched_solve(feats, w, c, m, eps, max_iters,
     (the serving engine's fused route programs) can inline it and keep a
     whole request batch at ONE dispatch. ``impl`` picks the registry
     implementation: ``"reference"`` is the per-lane-masked vmapped
-    ``while_loop``; ``"resident"`` runs every lane's complete
-    convergence loop inside one whole-solve kernel (each lane stops at
-    its own convergence point, so trajectories match solo solves either
+    ``while_loop``; ``"resident"`` / ``"resident_streamed"`` run every
+    lane's complete convergence loop inside one whole-solve kernel
+    (VMEM-held vs HBM-streamed rows; each lane stops at its own
+    convergence point, so trajectories match solo solves either
     way)."""
     from repro.kernels import ops as kops
+    from repro.kernels import fcm_resident as KR
     b, _, d = feats.shape
     lo, hi = jax.vmap(weighted_support)(feats, w)           # (B, D) each
     v0 = linspace_from_support(lo, hi, c)                   # (B, c, D)
     tol = _tol_from_range(jnp.max(hi - lo, axis=1), eps)
 
-    if impl == "resident":
-        x4, w3 = kops.tile_rows_batched(feats, w)
-        solve_fn = kops.build_step("flat", "resident", x4=x4, w3=w3, m=m,
+    if impl in ("resident", "resident_streamed"):
+        rows_multiple = (KR.STREAM_CHUNK_ROWS
+                         if impl == "resident_streamed" else 1)
+        x4, w3 = kops.tile_rows_batched(feats, w,
+                                        rows_multiple=rows_multiple)
+        solve_fn = kops.build_step("flat", impl, x4=x4, w3=w3, m=m,
                                    max_iters=max_iters, interpret=interpret)
         v, delta, iters = solve_fn(v0, tol)
         return v, delta, iters, jnp.max(iters)
@@ -518,12 +554,26 @@ def _flat_batched_loop_resident(feats, w, c, m, eps, max_iters, interpret):
                               impl="resident", interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("c", "m", "alpha", "neighbors",
-                                   "max_iters"))
-def _stencil_batched_loop(imgs, c, m, alpha, neighbors, eps, max_iters):
-    """imgs (B, *grid) -> (v (B, c), delta, iters, total). The batched
-    FCM_S path: same per-lane masking as the flat batch, stencil step
-    vmapped over lanes — what makes spatial serving traffic batchable."""
+@partial(jax.jit, static_argnames=("c", "m", "max_iters", "interpret"))
+def _flat_batched_loop_resident_streamed(feats, w, c, m, eps, max_iters,
+                                         interpret):
+    """HBM-streamed twin of :func:`_flat_batched_loop_resident` for
+    lanes whose rows exceed the VMEM-held bound."""
+    return flat_batched_solve(feats, w, c, m, eps, max_iters,
+                              impl="resident_streamed",
+                              interpret=interpret)
+
+
+def stencil_batched_solve(imgs, c, m, alpha, neighbors, eps, max_iters,
+                          impl: str = "reference",
+                          interpret: bool = False):
+    """Traceable batched FCM_S solve: imgs (B, *grid) -> (v (B, c),
+    delta, iters, total) — the stencil twin of
+    :func:`flat_batched_solve`, exported un-jitted so the serving
+    engine's fused spatial route program can inline it. ``impl``:
+    ``"reference"`` vmaps the shifted-array stencil step through the
+    per-lane-masked ``while_loop``; ``"resident"`` runs every lane's
+    complete fixed point inside one whole-solve stencil kernel."""
     from . import spatial as SP
     b = imgs.shape[0]
     flat = imgs.reshape(b, -1)
@@ -533,12 +583,43 @@ def _stencil_batched_loop(imgs, c, m, alpha, neighbors, eps, max_iters):
     v0 = lo[:, None] + frac[None, :] * (hi - lo)[:, None]
     tol = _tol_from_range(hi - lo, eps)
 
+    if impl == "resident":
+        from repro.kernels import ops as kops
+        xpad, vpad = kops.tile_grid_batched(imgs)
+        solve_fn = kops.build_step("stencil", "resident", xpad=xpad,
+                                   vpad=vpad, m=m, alpha=alpha,
+                                   neighbors=neighbors,
+                                   max_iters=max_iters, interpret=interpret)
+        v, delta, iters = solve_fn(v0, tol)
+        return v, delta, iters, jnp.max(iters)
+
     vstep = jax.vmap(SP.spatial_center_step, in_axes=(0, 0, None, None, None))
 
     def step(v):
         return vstep(imgs, v, m, alpha, neighbors)
 
     return masked_while_centers(step, v0, tol, max_iters)
+
+
+@partial(jax.jit, static_argnames=("c", "m", "alpha", "neighbors",
+                                   "max_iters"))
+def _stencil_batched_loop(imgs, c, m, alpha, neighbors, eps, max_iters):
+    """imgs (B, *grid) -> (v (B, c), delta, iters, total). The batched
+    FCM_S path: same per-lane masking as the flat batch, stencil step
+    vmapped over lanes — what makes spatial serving traffic batchable."""
+    return stencil_batched_solve(imgs, c, m, alpha, neighbors, eps,
+                                 max_iters)
+
+
+@partial(jax.jit, static_argnames=("c", "m", "alpha", "neighbors",
+                                   "max_iters", "interpret"))
+def _stencil_batched_loop_resident(imgs, c, m, alpha, neighbors, eps,
+                                   max_iters, interpret):
+    """Whole-solve-kernel twin of :func:`_stencil_batched_loop`: one
+    ``pallas_call`` runs every lane's FCM_S fixed point."""
+    return stencil_batched_solve(imgs, c, m, alpha, neighbors, eps,
+                                 max_iters, impl="resident",
+                                 interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -559,11 +640,19 @@ def _select_impl(problem: FCMProblem, backend: str, batch: bool = False,
                  force_platform: Optional[str] = None) -> str:
     """Registry dispatch: which step implementation runs this problem.
     ``force_platform`` overrides the platform check (``interpret=True``
-    forces the resident kernel off-TPU for parity testing)."""
+    forces the resident kernel off-TPU for parity testing).
+    ``backend="resident"`` routes by problem size: the VMEM-held
+    whole-solve when the rows fit its bounds, the HBM-streamed variant
+    for larger flat problems, the resident stencil solve for stencil
+    problems."""
     from repro.kernels import ops as kops
     prefer = {"auto": None, "reference": "reference",
               "pallas": "pallas", "resident": "resident"}[backend]
     kind = "stencil" if problem.stencil is not None else "flat"
+    if backend == "resident" and kind == "flat":
+        small = kops._STEP_REGISTRY[("flat", "resident")]
+        if not small.fits(problem.n_feat, problem.n_rows, problem.c):
+            prefer = "resident_streamed"
     impl = kops.select_step(kind, prefer=prefer, platform=force_platform,
                             n_feat=problem.n_feat, batched=batch,
                             n_rows=problem.n_rows, c=problem.c)
@@ -627,6 +716,14 @@ def solve(problem: FCMProblem, cfg: Optional[F.FCMConfig] = None, *,
             v, delta, it = _stencil_loop_pallas(
                 xpad, wpad, v0, m, alpha, neighbors, tol, max_iters,
                 block_rows, interpret)
+        elif impl == "resident":
+            from repro.kernels import ops as kops
+            xpad, vpad = kops.tile_grid_batched(img[None])
+            if interpret is None:
+                interpret = kops._interpret_default()
+            v, delta, it = _stencil_loop_resident(
+                xpad, vpad, v0, m, alpha, neighbors, tol, max_iters,
+                interpret)
         else:
             v, delta, it = _stencil_loop(img, v0, m, alpha, neighbors,
                                          tol, max_iters)
@@ -646,6 +743,15 @@ def solve(problem: FCMProblem, cfg: Optional[F.FCMConfig] = None, *,
             interpret = kops._interpret_default()
         v, delta, it = _flat_loop_resident(x4, w3, v0, c, m, tol,
                                            max_iters, interpret)
+    elif impl == "resident_streamed":
+        from repro.kernels import ops as kops
+        from repro.kernels import fcm_resident as KR
+        x4, w3 = kops.tile_rows_batched(
+            feats2[None], w[None], rows_multiple=KR.STREAM_CHUNK_ROWS)
+        if interpret is None:
+            interpret = kops._interpret_default()
+        v, delta, it = _flat_loop_resident_streamed(
+            x4, w3, v0, c, m, tol, max_iters, interpret)
     elif impl == "pallas":
         from repro.kernels import ops as kops
         x2d, w2d = kops.tile_rows(feats2[:, 0], w, block_rows)
@@ -697,17 +803,29 @@ def solve_batched(problem: FCMProblem, cfg: Optional[F.FCMConfig] = None, *,
     c, m = problem.c, problem.m
 
     if problem.stencil is not None:
-        v, delta, iters, it = _stencil_batched_loop(
-            problem.features, c, m, problem.stencil.alpha,
-            problem.stencil.neighbors, eps, max_iters)
-    else:
-        feats, w = problem.rows()
         if impl == "resident":
             from repro.kernels import ops as kops
             if interpret is None:
                 interpret = kops._interpret_default()
-            v, delta, iters, it = _flat_batched_loop_resident(
-                feats, w, c, m, eps, max_iters, interpret)
+            v, delta, iters, it = _stencil_batched_loop_resident(
+                problem.features, c, m, problem.stencil.alpha,
+                problem.stencil.neighbors, eps, max_iters, interpret)
+        else:
+            v, delta, iters, it = _stencil_batched_loop(
+                problem.features, c, m, problem.stencil.alpha,
+                problem.stencil.neighbors, eps, max_iters)
+    else:
+        feats, w = problem.rows()
+        if impl in ("resident", "resident_streamed"):
+            from repro.kernels import ops as kops
+            if interpret is None:
+                interpret = kops._interpret_default()
+            if impl == "resident":
+                v, delta, iters, it = _flat_batched_loop_resident(
+                    feats, w, c, m, eps, max_iters, interpret)
+            else:
+                v, delta, iters, it = _flat_batched_loop_resident_streamed(
+                    feats, w, c, m, eps, max_iters, interpret)
         else:
             v, delta, iters, it = _flat_batched_loop(feats, w, c, m, eps,
                                                      max_iters)

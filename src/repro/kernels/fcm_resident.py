@@ -20,6 +20,26 @@ masking work at all.
 
 Rows are tiled ``(D, R, 128)`` per lane with zero-weight padding;
 centers travel lane-broadcast as ``(c, D, 128)`` blocks.
+
+Two residency extensions lift the whole-solve shape to real workloads:
+
+* :func:`resident_streamed_solve_pallas` — same convergence loop, but
+  the rows live in HBM and are double-buffered into VMEM in
+  ``(STREAM_CHUNK_ROWS, 128)`` tiles per center step (async copy into
+  one buffer slot while the other is reduced), so only the centers and
+  the running Eq. 3 partials stay resident. That lifts the row bound
+  from ``MAX_ROWS`` (256) to ``STREAM_MAX_ROWS`` (tens of thousands):
+  superpixel/vector problems run their complete fixed point in ONE
+  ``pallas_call``.
+* :func:`resident_stencil_solve_pallas` — the FCM_S analogue: a whole
+  padded pixel grid (plus validity sheet) sits in VMEM and the fused
+  stencil + membership + center reduction iterates to convergence
+  inside the kernel, collapsing the spatial route's per-iteration
+  dispatch entirely. Stencil semantics (zero-filled shifts, per-pixel
+  neighbor counts, Eq. 3' on the effective pixels) mirror
+  :func:`repro.core.spatial.neighbor_fields` /
+  :func:`~repro.core.spatial.spatial_center_step` exactly, with the
+  validity sheet standing in for the image border.
 """
 from __future__ import annotations
 
@@ -28,6 +48,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from .fcm_membership import membership_from_d2_tile
 
@@ -38,6 +59,22 @@ _D2_FLOOR = 1e-12
 MAX_ROWS = 256
 MAX_C = 8
 MAX_FEAT = 8
+
+#: HBM-streamed variant: rows per DMA chunk (R axis), and the row bound
+#: for dispatch. VMEM holding the stream is only the double buffer
+#: (2 * D * STREAM_CHUNK_ROWS * 128 f32 = 512 KiB at D=8), so the row
+#: bound is a wall-clock choice, not a fit constraint: the roofline
+#: report (benchmarks/roofline_report.py) measures the streamed cell at
+#: probe sizes up to this bound to keep it honest.
+STREAM_CHUNK_ROWS = 8
+STREAM_MAX_ROWS = 131072
+
+#: Resident stencil bounds: the padded grid, validity sheet, the
+#: hoisted neighborhood fields and the (c, *grid) membership
+#: temporaries must all sit in VMEM: ~(6 + 4c) * pixels * 4 bytes,
+#: about 10 MiB at the c=8 / 64k-pixel corner.
+STENCIL_MAX_PIXELS = 65536
+STENCIL_MAX_C = 8
 
 
 def _resident_kernel(x_ref, w_ref, v0_ref, tol_ref,
@@ -105,4 +142,246 @@ def resident_solve_pallas(x4: jax.Array, w3: jax.Array, v0: jax.Array,
         ],
         interpret=interpret,
     )(x4, w3, v0b, tolb)
+    return v[..., 0], delta[:, 0], it[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# HBM-streamed whole-solve (rows beyond VMEM, centers + partials resident)
+# ---------------------------------------------------------------------------
+
+def _streamed_kernel(x_hbm, w_hbm, v0_ref, tol_ref,
+                     v_ref, delta_ref, it_ref,
+                     xbuf, wbuf, xsem, wsem,
+                     *, m: float, max_iters: int, n_chunks: int):
+    lane = pl.program_id(0)
+    v0 = v0_ref[...][0, :, :, 0].astype(jnp.float32)  # (c, D)
+    tol = tol_ref[...][0, 0]
+    c, d = v0.shape
+    chunk = xbuf.shape[2]                             # (2, D, chunk, 128)
+
+    def copies(k, slot):
+        return (pltpu.make_async_copy(
+                    x_hbm.at[lane, :, pl.ds(k * chunk, chunk), :],
+                    xbuf.at[slot], xsem.at[slot]),
+                pltpu.make_async_copy(
+                    w_hbm.at[lane, pl.ds(k * chunk, chunk), :],
+                    wbuf.at[slot], wsem.at[slot]))
+
+    def step(v):
+        # Prime slot 0, then stream: start chunk k+1 into the other
+        # slot while chunk k is reduced into the Eq. 3 partials. Every
+        # started copy is waited exactly once (k+1 starts are gated on
+        # k + 1 < n_chunks; chunk k's wait reconstructs the same
+        # (ref, sem) descriptor — the documented Pallas-TPU pattern).
+        for cp in copies(0, 0):
+            cp.start()
+
+        def chunk_body(k, acc):
+            num, den = acc
+            slot = jax.lax.rem(k, 2)
+            nxt = jax.lax.rem(k + 1, 2)
+
+            @pl.when(k + 1 < n_chunks)
+            def _():
+                for cp in copies(k + 1, nxt):
+                    cp.start()
+
+            for cp in copies(k, slot):
+                cp.wait()
+            x = xbuf[slot]                         # (D, chunk, 128)
+            w = wbuf[slot]                         # (chunk, 128)
+            d2 = jnp.sum((v[:, :, None, None] - x[None]) ** 2, axis=1)
+            u = membership_from_d2_tile(d2, m)     # (c, chunk, 128)
+            um = (u ** m) * w[None]
+            den = den + jnp.sum(um, axis=(1, 2))
+            num = num + jnp.sum(um[:, None] * x[None], axis=(2, 3))
+            return num, den
+
+        num, den = jax.lax.fori_loop(
+            0, n_chunks, chunk_body,
+            (jnp.zeros((c, d), jnp.float32), jnp.zeros((c,), jnp.float32)))
+        return num / jnp.maximum(den, _D2_FLOOR)[:, None]
+
+    def cond(state):
+        _, delta, it = state
+        return jnp.logical_and(delta >= tol, it < max_iters)
+
+    def body(state):
+        v, _, it = state
+        v_new = step(v)
+        return v_new, jnp.max(jnp.abs(v_new - v)), it + 1
+
+    v, delta, it = jax.lax.while_loop(
+        cond, body, (v0, jnp.asarray(jnp.inf, jnp.float32),
+                     jnp.asarray(0, jnp.int32)))
+    v_ref[...] = jnp.broadcast_to(v[None, :, :, None], v_ref.shape)
+    delta_ref[...] = jnp.broadcast_to(delta, delta_ref.shape)
+    it_ref[...] = jnp.broadcast_to(it, it_ref.shape)
+
+
+def resident_streamed_solve_pallas(x4: jax.Array, w3: jax.Array,
+                                   v0: jax.Array, tol: jax.Array, m: float,
+                                   max_iters: int, interpret: bool = False):
+    """HBM-streamed twin of :func:`resident_solve_pallas`, same
+    signature and per-lane convergence semantics. ``x4``/``w3`` must
+    have ``R % STREAM_CHUNK_ROWS == 0`` (``tile_rows_batched`` pads
+    with ``rows_multiple=STREAM_CHUNK_ROWS``); the row tiles stay in
+    HBM and are double-buffered through a 2-slot VMEM scratch."""
+    b, d, r, _ = x4.shape
+    c = v0.shape[1]
+    if r % STREAM_CHUNK_ROWS != 0:
+        raise ValueError(f"streamed solve needs R % {STREAM_CHUNK_ROWS} "
+                         f"== 0, got R={r} (pad with tile_rows_batched("
+                         f"..., rows_multiple=STREAM_CHUNK_ROWS))")
+    n_chunks = r // STREAM_CHUNK_ROWS
+    v0b = jnp.broadcast_to(v0.astype(jnp.float32)[..., None],
+                           (b, c, d, LANES))
+    tolb = jnp.broadcast_to(tol.astype(jnp.float32)[:, None], (b, LANES))
+    v, delta, it = pl.pallas_call(
+        partial(_streamed_kernel, m=m, max_iters=max_iters,
+                n_chunks=n_chunks),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((1, c, d, LANES), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, d, LANES), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, LANES), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, c, d, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((b, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((b, LANES), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((2, d, STREAM_CHUNK_ROWS, LANES), jnp.float32),
+            pltpu.VMEM((2, STREAM_CHUNK_ROWS, LANES), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(x4.astype(jnp.float32), w3.astype(jnp.float32), v0b, tolb)
+    return v[..., 0], delta[:, 0], it[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# VMEM-resident FCM_S stencil whole-solve
+# ---------------------------------------------------------------------------
+
+def _shift_grid(a: jax.Array, off) -> jax.Array:
+    """Zero-filled shift, out[i] = a[i - off] per axis — the VMEM-array
+    face of :func:`repro.core.spatial._shift` (same border semantics)."""
+    pads, slices = [], []
+    for ax, o in enumerate(off):
+        n = a.shape[ax]
+        if o >= 0:
+            pads.append((o, 0))
+            slices.append(slice(0, n))
+        else:
+            pads.append((0, -o))
+            slices.append(slice(-o, None))
+    return jnp.pad(a, pads)[tuple(slices)]
+
+
+def _resident_stencil_kernel(x_ref, valid_ref, v0_ref, tol_ref,
+                             v_ref, delta_ref, it_ref, *, m: float,
+                             alpha: float, offsets, max_iters: int):
+    x = x_ref[...][0].astype(jnp.float32)          # (Hp, Wp) / (D, Hp, Wp)
+    valid = valid_ref[...][0].astype(jnp.float32)
+    v0 = v0_ref[...][0, :, 0].astype(jnp.float32)  # (c,)
+    tol = tol_ref[...][0, 0]
+    c = v0.shape[0]
+    axes = tuple(range(1, 1 + x.ndim))
+
+    # Iteration-invariant neighborhood fields. The validity sheet plays
+    # the border role: padding pixels carry valid=0 and x=0, so shifts
+    # that cross the true image edge contribute nothing — exactly the
+    # zero-filled out-of-bounds semantics of core.spatial.neighbor_fields
+    # (per-pixel neighbor counts included).
+    xv = x * valid
+    cnt = jnp.zeros_like(x)
+    sx = jnp.zeros_like(x)
+    for off in offsets:
+        cnt = cnt + _shift_grid(valid, off)
+        sx = sx + _shift_grid(xv, off)
+    cnt = jnp.maximum(cnt, 1.0)
+    xbar = sx / cnt
+    # Eq. 3' as plain Eq. 3 on the effective pixels (the reference
+    # form: the (1 + alpha) divisor folded into x_eff, not the sums).
+    x_eff = (x + alpha * xbar) / (1.0 + alpha)
+
+    def step(v):
+        vb = v.reshape((c,) + (1,) * x.ndim)
+        d2 = (vb - x[None]) ** 2                   # (c, *grid)
+        d2v = d2 * valid[None]
+        nb = jnp.zeros_like(d2)
+        for off in offsets:
+            nb = nb + _shift_grid(d2v, (0,) + tuple(off))
+        u = membership_from_d2_tile(d2 + alpha * (nb / cnt[None]), m)
+        um = (u ** m) * valid[None]
+        den = jnp.sum(um, axis=axes)               # (c,)
+        num = jnp.sum(um * x_eff[None], axis=axes)
+        return num / jnp.maximum(den, _D2_FLOOR)
+
+    def cond(state):
+        _, delta, it = state
+        return jnp.logical_and(delta >= tol, it < max_iters)
+
+    def body(state):
+        v, _, it = state
+        v_new = step(v)
+        return v_new, jnp.max(jnp.abs(v_new - v)), it + 1
+
+    v, delta, it = jax.lax.while_loop(
+        cond, body, (v0, jnp.asarray(jnp.inf, jnp.float32),
+                     jnp.asarray(0, jnp.int32)))
+    v_ref[...] = jnp.broadcast_to(v[None, :, None], v_ref.shape)
+    delta_ref[...] = jnp.broadcast_to(delta, delta_ref.shape)
+    it_ref[...] = jnp.broadcast_to(it, it_ref.shape)
+
+
+def resident_stencil_solve_pallas(xpad: jax.Array, vpad: jax.Array,
+                                  v0: jax.Array, tol: jax.Array, m: float,
+                                  alpha: float, neighbors: int,
+                                  max_iters: int, interpret: bool = False):
+    """Whole-solve FCM_S: ``xpad`` (B, Hp, Wp) or (B, D, Hp, Wp) padded
+    pixel grids with matching validity ``vpad`` (0 on padding; from
+    ``ops.tile_grid_batched``), ``v0`` (B, c) scalar init centers,
+    ``tol`` (B,) -> (v (B, c), delta (B,), iters (B,) int32). Each
+    lane's complete Eq. 4'/Eq. 3' fixed point runs inside one kernel."""
+    from repro.core.spatial import neighbor_offsets
+    b = xpad.shape[0]
+    grid_shape = xpad.shape[1:]
+    c = v0.shape[1]
+    offsets = neighbor_offsets(len(grid_shape), neighbors)
+    v0b = jnp.broadcast_to(v0.astype(jnp.float32)[..., None], (b, c, LANES))
+    tolb = jnp.broadcast_to(tol.astype(jnp.float32)[:, None], (b, LANES))
+    gblock = (1,) + grid_shape
+    gmap = (lambda i: (i,) + (0,) * len(grid_shape))
+    v, delta, it = pl.pallas_call(
+        partial(_resident_stencil_kernel, m=m, alpha=alpha,
+                offsets=offsets, max_iters=max_iters),
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec(gblock, gmap),
+            pl.BlockSpec(gblock, gmap),
+            pl.BlockSpec((1, c, LANES), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, LANES), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, LANES), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, c, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((b, LANES), jnp.float32),
+            jax.ShapeDtypeStruct((b, LANES), jnp.int32),
+        ],
+        interpret=interpret,
+    )(xpad.astype(jnp.float32), vpad.astype(jnp.float32), v0b, tolb)
     return v[..., 0], delta[:, 0], it[:, 0]

@@ -63,14 +63,18 @@ def tile_rows(x: jax.Array, w: jax.Array, block_rows: int):
     return xp.reshape(m_rows, LANES), wp.reshape(m_rows, LANES)
 
 
-def tile_rows_batched(feats: jax.Array, w: jax.Array):
+def tile_rows_batched(feats: jax.Array, w: jax.Array,
+                      rows_multiple: int = 1):
     """Batched analogue of :func:`tile_rows` for the VMEM-resident
     solve: ``(B, K, D)`` feature rows + ``(B, K)`` weights become
     ``(B, D, R, 128)`` row tiles and ``(B, R, 128)`` weights with K
     padded to a 128 multiple at zero weight (padding rows are inert in
-    the weighted center step)."""
+    the weighted center step). ``rows_multiple`` additionally pads R to
+    a multiple of it — the HBM-streamed solve DMAs fixed
+    ``STREAM_CHUNK_ROWS``-row chunks."""
     b, k, d = feats.shape
-    n_pad = (-k) % LANES
+    per = rows_multiple * LANES
+    n_pad = (-k) % per
     xp = jnp.pad(feats.astype(jnp.float32), ((0, 0), (0, n_pad), (0, 0)))
     wp = jnp.pad(w.astype(jnp.float32), ((0, 0), (0, n_pad)))
     r = (k + n_pad) // LANES
@@ -106,6 +110,24 @@ def tile_grid(img: jax.Array, block_rows: int = 64):
     else:
         raise ValueError(f"tile_grid needs rank 2 or 3, got {img.shape}")
     return jnp.pad(img, pad), jnp.pad(jnp.ones(img.shape, jnp.float32), pad)
+
+
+def tile_grid_batched(imgs: jax.Array, block_rows: int = 8):
+    """Batched :func:`tile_grid` for the resident stencil solve: a
+    stack of same-shape grids ``(B, H, W)`` / ``(B, D, H, W)`` becomes
+    the padded stack plus a matching validity stack (0 on padding)."""
+    imgs = jnp.asarray(imgs, jnp.float32)
+    if imgs.ndim == 3:
+        _, h, w = imgs.shape
+        pad = ((0, 0), (0, (-h) % block_rows), (0, (-w) % LANES))
+    elif imgs.ndim == 4:
+        _, _, h, w = imgs.shape
+        pad = ((0, 0), (0, 0), (0, (-h) % 8), (0, (-w) % LANES))
+    else:
+        raise ValueError(f"tile_grid_batched needs rank 3 or 4, got "
+                         f"{imgs.shape}")
+    return jnp.pad(imgs, pad), jnp.pad(jnp.ones(imgs.shape, jnp.float32),
+                                       pad)
 
 
 def tile_channels(img: jax.Array, block_rows: int = 8):
@@ -371,11 +393,14 @@ def select_step(kind: str, *, prefer: Optional[str] = None,
     """Dispatch: pick the step implementation for a problem shape and
     platform. ``prefer`` forces a name; otherwise the VMEM-resident
     whole-solve wins on TPU when the problem is known to fit
-    (``n_rows``/``c`` within its bounds), then the Pallas step kernel
-    when eligible (right platform, feature-dim and vmap support), and
-    the pure-jnp reference runs everywhere else. A preferred impl with a
-    declared ``fallback`` (resident -> reference) degrades to it off its
-    platforms instead of erroring."""
+    (``n_rows``/``c`` within its bounds), then its HBM-streamed variant,
+    then the Pallas step kernel when eligible (right platform,
+    feature-dim and vmap support), and the pure-jnp reference runs
+    everywhere else. A preferred impl with a declared ``fallback``
+    degrades off its platforms by walking the whole fallback chain
+    (e.g. resident_streamed -> resident -> reference), skipping links
+    that are themselves ineligible, and raises only when the chain is
+    exhausted."""
     kinds = sorted({k for k, _ in _STEP_REGISTRY})
     if kind not in kinds:
         raise ValueError(f"unknown step kind {kind!r}; one of {kinds}")
@@ -398,13 +423,38 @@ def select_step(kind: str, *, prefer: Optional[str] = None,
                 f"D <= {impl.max_feat}); got rows={n_rows}, c={c}, "
                 f"D={n_feat}")
         platform = platform or jax.default_backend()
-        if platform not in impl.platforms and impl.fallback is not None:
-            return select_step(kind, prefer=impl.fallback,
-                               platform=platform, n_feat=n_feat,
-                               batched=batched, n_rows=n_rows, c=c)
-        return impl
+        if platform in impl.platforms or impl.fallback is None:
+            # Off-platform with no declared fallback = run the Pallas
+            # body in interpret mode (the documented parity-test path).
+            return impl
+        # Walk the fallback chain iteratively: a link that is itself
+        # off-platform (without being terminal) or ineligible for this
+        # problem is skipped, not an error — only an exhausted chain
+        # raises. (A single forced-`prefer` recursion used to re-apply
+        # the hard eligibility checks to the first link and blow up on
+        # 2-hop chains like resident_streamed -> resident -> reference.)
+        seen = {impl.name}
+        cur = impl
+        walked = []
+        while cur.fallback is not None and cur.fallback not in seen:
+            seen.add(cur.fallback)
+            nxt = _STEP_REGISTRY.get((kind, cur.fallback))
+            if nxt is None:
+                break
+            walked.append(nxt.name)
+            eligible = (not (nxt.scalar_only and n_feat != 1)
+                        and not (batched and not nxt.batched)
+                        and nxt.fits(n_feat, n_rows, c))
+            if eligible and (platform in nxt.platforms
+                             or nxt.fallback is None):
+                return nxt
+            cur = nxt
+        raise ValueError(
+            f"{kind}/{prefer} is unavailable on platform {platform!r} "
+            f"and its fallback chain {walked} has no eligible "
+            f"implementation for rows={n_rows}, c={c}, D={n_feat}")
     platform = platform or jax.default_backend()
-    for name in ("resident", "pallas"):
+    for name in ("resident", "resident_streamed", "pallas"):
         impl = _STEP_REGISTRY.get((kind, name))
         if (impl is not None and platform in impl.platforms
                 and not (impl.scalar_only and n_feat != 1)
@@ -460,6 +510,26 @@ def _flat_resident(x4, w3, m, max_iters, interpret=None, **_):
     def solve_fn(v0, tol):
         return KR.resident_solve_pallas(x4, w3, v0, tol, m, max_iters,
                                         interpret)
+    return solve_fn
+
+
+@register_step("flat", "resident_streamed", platforms=("tpu",), batched=True,
+               max_rows=KR.STREAM_MAX_ROWS, max_c=KR.MAX_C,
+               max_feat=KR.MAX_FEAT, fallback="resident")
+def _flat_resident_streamed(x4, w3, m, max_iters, interpret=None, **_):
+    """HBM-streamed whole-solve: same ``(v0, tol) -> (v, delta, iters)``
+    contract as ``flat/resident`` but rows stream from HBM in
+    double-buffered chunks, so the bound is ``STREAM_MAX_ROWS`` (its
+    wall-clock validation lives in benchmarks/roofline_report.py).
+    Inputs from ``tile_rows_batched(...,
+    rows_multiple=KR.STREAM_CHUNK_ROWS)``. Off-TPU the fallback chain
+    degrades through ``resident`` to ``reference``."""
+    if interpret is None:
+        interpret = _interpret_default()
+
+    def solve_fn(v0, tol):
+        return KR.resident_streamed_solve_pallas(x4, w3, v0, tol, m,
+                                                 max_iters, interpret)
     return solve_fn
 
 
@@ -522,6 +592,27 @@ def _stencil_pallas(xpad, wpad, m, alpha, neighbors, block_rows=64,
                                     neighbors, block_rows, interpret)
         return (num / jnp.maximum((1.0 + alpha) * den, 1e-12))[:, None]
     return step
+
+
+@register_step("stencil", "resident", platforms=("tpu",), batched=True,
+               max_rows=KR.STENCIL_MAX_PIXELS, max_c=KR.STENCIL_MAX_C,
+               fallback="reference")
+def _stencil_resident(xpad, vpad, m, alpha, neighbors, max_iters,
+                      interpret=None, **_):
+    """VMEM-resident whole-solve FCM_S: the complete Eq. 4'/Eq. 3'
+    fixed point of every lane runs inside one kernel (inputs from
+    :func:`tile_grid_batched`; ``max_rows`` bounds the per-lane PIXEL
+    count — ``FCMProblem.n_rows`` reports it for stencil problems).
+    Returns a ``(v0, tol) -> (v, delta, iters)`` solver like the other
+    resident builders."""
+    if interpret is None:
+        interpret = _interpret_default()
+
+    def solve_fn(v0, tol):
+        return KR.resident_stencil_solve_pallas(xpad, vpad, v0, tol, m,
+                                                alpha, neighbors,
+                                                max_iters, interpret)
+    return solve_fn
 
 
 @register_step("slic_assign", "reference", batched=False)

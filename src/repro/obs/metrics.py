@@ -131,14 +131,21 @@ class Histogram:
                                                            self.edges[-1])
         return lo, hi
 
-    def quantile(self, q: float) -> Optional[float]:
-        """Approximate q-quantile (numpy 'linear' rank convention),
-        linear-interpolated inside the containing bucket and clamped to
-        the observed [min, max]. None when empty."""
+    def quantile_info(self, q: float) -> Tuple[Optional[float], bool]:
+        """``(value, overflow)``: the approximate q-quantile (numpy
+        'linear' rank convention, linear-interpolated inside the
+        containing bucket, clamped to the observed [min, max]) plus
+        whether it landed in the overflow bucket. An overflow-derived
+        quantile interpolates between ``edges[-1]`` and the tracked
+        ``vmax`` — honest about the observed range (no silent clamp at
+        the last edge), but with only two real anchor points, so
+        consumers should treat it as a range estimate and widen the
+        edges. ``(None, False)`` when empty."""
         if self.count == 0:
-            return None
+            return None, False
         if not 0.0 <= q <= 1.0:
             raise ValueError(f"quantile q must be in [0, 1], got {q}")
+        overflow_bucket = len(self.edges)
         rank = q * (self.count - 1)
         cum = 0
         for i, c in enumerate(self.counts):
@@ -146,9 +153,14 @@ class Histogram:
                 lo, hi = self._bucket_bounds(i)
                 frac = (rank - cum + 0.5) / c
                 val = lo + frac * (hi - lo)
-                return min(max(val, self.vmin), self.vmax)
+                return (min(max(val, self.vmin), self.vmax),
+                        i == overflow_bucket)
             cum += c
-        return self.vmax
+        return self.vmax, self.counts[overflow_bucket] > 0
+
+    def quantile(self, q: float) -> Optional[float]:
+        """Approximate q-quantile; see :meth:`quantile_info`."""
+        return self.quantile_info(q)[0]
 
     @property
     def mean(self) -> Optional[float]:
@@ -156,16 +168,22 @@ class Histogram:
 
     def snapshot(self) -> dict:
         empty = self.count == 0
-        return {
+        quants = {f"p{int(q * 100)}": self.quantile_info(q)
+                  for q in (0.50, 0.90, 0.99)}
+        out = {
             "count": int(self.count),
             "sum": float(self.total),
             "mean": None if empty else float(self.total / self.count),
             "min": None if empty else float(self.vmin),
             "max": None if empty else float(self.vmax),
-            "p50": self.quantile(0.50),
-            "p90": self.quantile(0.90),
-            "p99": self.quantile(0.99),
         }
+        for name, (val, over) in quants.items():
+            out[name] = val
+            # overflow-derived quantiles interpolate off the tracked max
+            # rather than a real edge: flagged so dashboards can widen
+            # the histogram edges instead of trusting the estimate.
+            out[f"{name}_overflow"] = over
+        return out
 
 
 def _key(name: str, labels: Dict[str, str]) -> Hashable:

@@ -584,6 +584,65 @@ def _materialize_spatial_batch(eng, chunk, centers, n_iters):
             for i, q in enumerate(chunk)]
 
 
+def _spatial_program_key(eng, chunk):
+    return ("sp",) + chunk[0].pixels.shape  # bucket_key groups by shape
+
+
+def _make_spatial_program(eng, key, bucket) -> "RouteProgram":
+    """The fused spatial pipeline: stack -> batched FCM_S solve ->
+    stencil-membership labeling, ONE jitted dispatch per flush. On TPU
+    the solve stage is the VMEM-resident whole-solve stencil kernel
+    (when the grid fits its bounds); off-TPU it is the vmapped
+    reference stencil loop — either way the route sheds the
+    per-stage host synchronization that made spatial serving the
+    highest-overhead route."""
+    shape = key[1:]
+    scfg = eng.spatial_cfg
+    c, m = scfg.n_clusters, float(scfg.m)
+    alpha = float(scfg.alpha)
+    neighbors = _spatial_neighbors(eng, len(shape))
+    eps, max_iters = float(scfg.eps), int(scfg.max_iters)
+    platform = jax.default_backend()
+    impl = kops.select_step("stencil", platform=platform, batched=True,
+                            n_rows=int(np.prod(shape)), c=c).name
+
+    def launch_fn(imgs):
+        v, delta, iters, total = SV.stencil_batched_solve(
+            imgs, c, m, alpha, neighbors, eps, max_iters, impl=impl)
+        u = jax.vmap(lambda im, vv: SP.spatial_membership(
+            im, vv, m, alpha, neighbors))(imgs, v)
+        labels = jnp.argmax(u, axis=1).astype(jnp.int32)
+        return v, delta, iters, total, labels
+
+    launch = _cached_launch(
+        ("spatial", platform, bucket, key, c, m, alpha, neighbors, eps,
+         max_iters, impl),
+        lambda: jax.jit(launch_fn))
+
+    def gather(eng_, chunk, bucket_):
+        imgs = np.empty((bucket_,) + shape, np.float32)
+        for i, q in enumerate(chunk):
+            imgs[i] = q.pixels
+        # Padding lanes replay the first image (frozen-lane masking makes
+        # them cost one lane of compute; dropped on output).
+        for i in range(len(chunk), bucket_):
+            imgs[i] = imgs[0]
+        return (imgs,)
+
+    def scatter(eng_, chunk, outs):
+        v, delta, iters, total, labels = outs
+        centers = np.asarray(v)
+        iters_np = np.asarray(iters)
+        labels_np = np.asarray(labels)
+        res = [SegmentationResult(q.request_id, labels_np[i], centers[i],
+                                  int(iters_np[i]), False,
+                                  method="spatial")
+               for i, q in enumerate(chunk)]
+        return res, centers, iters_np, int(total), np.asarray(delta)
+
+    return RouteProgram(gather, launch, scatter)
+
+
 # -- superpixel route -------------------------------------------------------
 
 def _ingest_superpixel(eng, img, rid) -> _PendingSuperpixel:
@@ -646,7 +705,9 @@ register_route(RouteSpec(
     bucket_key=lambda eng, p: ("spatial",) + p.pixels.shape,
     build_problem=_build_spatial, materialize=_materialize_spatial,
     materialize_batch=_materialize_spatial_batch,
-    stats_prefix="spatial"))
+    stats_prefix="spatial",
+    program_key=_spatial_program_key,
+    make_program=_make_spatial_program))
 register_route(RouteSpec(
     name="superpixel", ingest=_ingest_superpixel,
     bucket_key=lambda eng, p: ("superpixel",) + p.features.shape,

@@ -13,6 +13,7 @@ import jax  # noqa: E402
 
 from repro.core import fcm as F  # noqa: E402
 from repro.core import batched as B  # noqa: E402
+from repro.core import solver as SV  # noqa: E402
 from repro.core import distributed as D  # noqa: E402
 from repro.data import phantom  # noqa: E402
 
@@ -27,7 +28,8 @@ def main():
     img, _ = phantom.phantom_slice(256, 256, seed=11)
     x = img.ravel().astype(np.float32)
 
-    single = F.fit_fused(x, F.FCMConfig(max_iters=300))
+    single = SV.solve(SV.pixel_problem(x), backend="reference",
+                      max_iters=300)
     sharded = D.fit_sharded(x, mesh, F.FCMConfig(max_iters=300))
     np.testing.assert_allclose(np.sort(np.asarray(single.centers)),
                                np.sort(np.asarray(sharded.centers)),
@@ -42,7 +44,8 @@ def main():
     # Odd N exercising the padding path.
     x_odd = x[:50021]
     s2 = D.fit_sharded(x_odd, mesh, F.FCMConfig(max_iters=300))
-    f2 = F.fit_fused(x_odd, F.FCMConfig(max_iters=300))
+    f2 = SV.solve(SV.pixel_problem(x_odd), backend="reference",
+                  max_iters=300)
     np.testing.assert_allclose(np.sort(np.asarray(s2.centers)),
                                np.sort(np.asarray(f2.centers)), atol=0.75)
     assert s2.labels.shape[0] == 50021
@@ -54,7 +57,10 @@ def main():
                                   slice_pos=0.3 + 0.04 * z, seed=z)[0]
             for z in range(10)]
     hists = B.histograms_of(imgs)
-    local = B.fit_batched(hists, F.FCMConfig(max_iters=300))
+    import warnings  # the adapter pair under test warns by design
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        local = B.fit_batched(hists, F.FCMConfig(max_iters=300))
     shard = B.fit_batched_sharded(hists, mesh, F.FCMConfig(max_iters=300))
     np.testing.assert_allclose(np.asarray(shard.centers),
                                np.asarray(local.centers), atol=1e-4)

@@ -11,6 +11,13 @@ from repro.core import histogram as H
 from repro.data import phantom
 
 
+def _legacy(fn, *args, **kwargs):
+    """Call a deprecated fit_* adapter, asserting (and swallowing) its
+    DeprecationWarning: these tests exercise the adapters on purpose."""
+    with pytest.warns(DeprecationWarning):
+        return fn(*args, **kwargs)
+
+
 @pytest.fixture(scope="module")
 def mixed_batch():
     """Heterogeneous sizes + noise levels so convergence speeds differ."""
@@ -25,10 +32,10 @@ CFG = F.FCMConfig(max_iters=300)
 
 
 def test_batched_matches_per_image_fit_histogram(mixed_batch):
-    res = B.fit_batched(mixed_batch, CFG)
+    res = _legacy(B.fit_batched, mixed_batch, CFG)
     assert res.centers.shape == (len(mixed_batch), CFG.n_clusters)
     for i, img in enumerate(mixed_batch):
-        single = H.fit_histogram(img.ravel().astype(np.float32), CFG)
+        single = _legacy(H.fit_histogram, img.ravel().astype(np.float32), CFG)
         np.testing.assert_allclose(np.asarray(res.centers[i]),
                                    np.asarray(single.centers), atol=1e-4)
         assert res.n_iters[i] == single.n_iters
@@ -37,7 +44,7 @@ def test_batched_matches_per_image_fit_histogram(mixed_batch):
 
 
 def test_batched_lanes_converge_independently(mixed_batch):
-    res = B.fit_batched(mixed_batch, CFG)
+    res = _legacy(B.fit_batched, mixed_batch, CFG)
     # The whole point of per-lane masking: a mixed batch must show mixed
     # iteration counts, and the loop runs exactly max(lane iters) times.
     assert len(set(res.n_iters.tolist())) > 1, res.n_iters
@@ -47,8 +54,8 @@ def test_batched_lanes_converge_independently(mixed_batch):
 
 def test_batched_accepts_prebuilt_histograms(mixed_batch):
     hists = B.histograms_of(mixed_batch)
-    res_h = B.fit_batched(hists, CFG)
-    res_i = B.fit_batched(mixed_batch, CFG)
+    res_h = _legacy(B.fit_batched, hists, CFG)
+    res_i = _legacy(B.fit_batched, mixed_batch, CFG)
     np.testing.assert_allclose(np.asarray(res_h.centers),
                                np.asarray(res_i.centers), atol=0)
     assert res_h.labels is None          # no pixels to defuzzify
@@ -57,8 +64,8 @@ def test_batched_accepts_prebuilt_histograms(mixed_batch):
 
 def test_batched_single_lane_degenerates_to_single_image(mixed_batch):
     img = mixed_batch[0]
-    res = B.fit_batched([img], CFG)
-    single = H.fit_histogram(img.ravel().astype(np.float32), CFG)
+    res = _legacy(B.fit_batched, [img], CFG)
+    single = _legacy(H.fit_histogram, img.ravel().astype(np.float32), CFG)
     np.testing.assert_allclose(np.asarray(res.centers[0]),
                                np.asarray(single.centers), atol=1e-4)
     assert res.n_iters[0] == single.n_iters
@@ -71,7 +78,7 @@ def test_batched_pixels_same_shape_batch():
                                         seed=10 + z)
         xs.append(img)
         gts.append(gt)
-    res = B.fit_batched_pixels(np.stack(xs), CFG)
+    res = _legacy(B.fit_batched_pixels, np.stack(xs), CFG)
     assert res.centers.shape == (4, CFG.n_clusters)
     for i in range(4):
         pred = phantom.match_labels_to_classes(
@@ -81,7 +88,7 @@ def test_batched_pixels_same_shape_batch():
 
 
 def test_batched_max_iters_zero_is_safe(mixed_batch):
-    res = B.fit_batched(mixed_batch[:2], F.FCMConfig(max_iters=0))
+    res = _legacy(B.fit_batched, mixed_batch[:2], F.FCMConfig(max_iters=0))
     assert res.total_iters == 0
     assert (res.n_iters == 0).all()
     assert res.centers.shape == (2, 4)

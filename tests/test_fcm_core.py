@@ -12,6 +12,14 @@ from repro.core import sequential as S
 from repro.data import phantom
 
 
+def _legacy(fn, *args, **kwargs):
+    """Call a deprecated fit_* adapter, asserting (and swallowing) its
+    DeprecationWarning so the -W error::DeprecationWarning lane stays
+    green. These tests deliberately exercise the adapters."""
+    with pytest.warns(DeprecationWarning):
+        return fn(*args, **kwargs)
+
+
 @pytest.fixture(scope="module")
 def slice_image():
     img, labels = phantom.phantom_slice(96, 96, slice_pos=0.5, seed=3)
@@ -62,7 +70,7 @@ def test_objective_monotone_decreasing(slice_image):
 
 def test_baseline_converges_and_segments(slice_image):
     x, gt = slice_image
-    res = F.fit_baseline(x, F.FCMConfig(max_iters=100))
+    res = _legacy(F.fit_baseline, x, F.FCMConfig(max_iters=100))
     assert res.n_iters < 100
     assert res.final_delta < 5e-3
     # 4 clusters found, mapped by intensity rank -> decent DSC per class
@@ -75,7 +83,7 @@ def test_baseline_max_iters_zero_returns_centers(slice_image):
     """Regression: centers used to come back None when the loop body
     never ran; now they derive from the initial membership."""
     x, _ = slice_image
-    res = F.fit_baseline(x[:2048], F.FCMConfig(max_iters=0))
+    res = _legacy(F.fit_baseline, x[:2048], F.FCMConfig(max_iters=0))
     assert res.centers is not None
     assert res.centers.shape == (4,)
     assert np.isfinite(np.asarray(res.centers)).all()
@@ -84,8 +92,8 @@ def test_baseline_max_iters_zero_returns_centers(slice_image):
 
 def test_fused_matches_baseline(slice_image):
     x, _ = slice_image
-    base = F.fit_baseline(x, F.FCMConfig(max_iters=150))
-    fused = F.fit_fused(x, F.FCMConfig(max_iters=300))
+    base = _legacy(F.fit_baseline, x, F.FCMConfig(max_iters=150))
+    fused = _legacy(F.fit_fused, x, F.FCMConfig(max_iters=300))
     np.testing.assert_allclose(_sorted_centers(base.centers),
                                _sorted_centers(fused.centers), atol=1.0)
     pred_b = phantom.match_labels_to_classes(np.asarray(base.labels), base.centers)
@@ -96,8 +104,8 @@ def test_fused_matches_baseline(slice_image):
 
 def test_histogram_matches_fused(slice_image):
     x, _ = slice_image
-    fused = F.fit_fused(x, F.FCMConfig(max_iters=300))
-    hist = H.fit_histogram(x, F.FCMConfig(max_iters=300))
+    fused = _legacy(F.fit_fused, x, F.FCMConfig(max_iters=300))
+    hist = _legacy(H.fit_histogram, x, F.FCMConfig(max_iters=300))
     np.testing.assert_allclose(_sorted_centers(fused.centers),
                                _sorted_centers(hist.centers), atol=0.5)
     agreement = (np.asarray(fused.labels) == np.asarray(hist.labels)).mean()
@@ -136,7 +144,7 @@ def test_sequential_vs_jax_baseline(slice_image):
     u0 = rng.uniform(1e-3, 1.0, size=(4, x.size))
     u0 /= u0.sum(axis=0, keepdims=True)
     v_np, lab_np, it_np = S.fcm_sequential_numpy(x, c=4, max_iters=200, u0=u0)
-    res = F.fit_baseline(x, F.FCMConfig(max_iters=200), u0=u0)
+    res = _legacy(F.fit_baseline, x, F.FCMConfig(max_iters=200), u0=u0)
     np.testing.assert_allclose(np.sort(v_np), _sorted_centers(res.centers),
                                atol=0.5)
     assert (lab_np == np.asarray(res.labels)).mean() > 0.999
@@ -146,8 +154,8 @@ def test_sequential_vs_jax_baseline(slice_image):
 def test_pallas_baseline_matches_jnp_baseline(slice_image):
     x, _ = slice_image
     x = x[:8192]
-    a = F.fit_baseline(x, F.FCMConfig(max_iters=40), use_pallas=False)
-    b = F.fit_baseline(x, F.FCMConfig(max_iters=40), use_pallas=True)
+    a = _legacy(F.fit_baseline, x, F.FCMConfig(max_iters=40), use_pallas=False)
+    b = _legacy(F.fit_baseline, x, F.FCMConfig(max_iters=40), use_pallas=True)
     assert a.n_iters == b.n_iters
     np.testing.assert_allclose(np.asarray(a.centers), np.asarray(b.centers),
                                rtol=1e-4, atol=1e-3)
@@ -161,7 +169,7 @@ def test_feature_dim_generalization():
     b = rng.normal((3, 3), 0.2, size=(100, 2))
     x = jnp.asarray(np.concatenate([a, b]), jnp.float32)
     v0 = jnp.asarray([[0.5, 0.5], [2.5, 2.5]], jnp.float32)
-    res = F.fit_fused(x, F.FCMConfig(n_clusters=2, max_iters=50), v0=v0)
+    res = _legacy(F.fit_fused, x, F.FCMConfig(n_clusters=2, max_iters=50), v0=v0)
     labels = np.asarray(res.labels)
     assert (labels[:100] == labels[0]).all()
     assert (labels[100:] == labels[100]).all()

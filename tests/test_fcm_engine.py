@@ -3,12 +3,12 @@ against the single-image histogram fit, and the device-resident route
 programs (single-dispatch serving, program-cache lifecycle)."""
 import dataclasses
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import fcm as F
-from repro.core import histogram as H
-from repro.core import spatial as S
+from repro.core import solver as SV
 from repro.data import phantom
 from repro.serving.fcm_engine import FCMServeEngine
 
@@ -30,10 +30,12 @@ def test_served_labels_match_single_image_fit(volume):
     assert [r.request_id for r in results] == list(range(12))
     for img, r in zip(volume, results):
         assert r.labels.shape == img.shape
-        single = H.fit_histogram(img.ravel().astype(np.float32), CFG)
+        x = img.ravel().astype(np.float32)
+        single = SV.solve(SV.histogram_problem(x, CFG), backend="reference")
         np.testing.assert_allclose(r.centers, np.asarray(single.centers),
                                    atol=1e-4)
-        assert (r.labels == np.asarray(single.labels).reshape(img.shape)).all()
+        lab = F.labels_from_centers(jnp.asarray(x), single.centers)
+        assert (r.labels == np.asarray(lab).reshape(img.shape)).all()
         assert r.n_iters == single.n_iters
 
 
@@ -170,7 +172,8 @@ def test_spatial_results_match_direct_fit_spatial():
     img, _ = phantom.noisy_phantom_slice(40, 56, noise=12.0, impulse=0.05,
                                          seed=3)
     served = eng.segment([img], method="spatial")[0]
-    direct = S.fit_spatial(img.astype(np.float32), eng.spatial_cfg)
+    direct = SV.solve(SV.spatial_problem(img.astype(np.float32),
+                                         eng.spatial_cfg), eng.spatial_cfg)
     np.testing.assert_allclose(served.centers, np.asarray(direct.centers),
                                atol=1e-5)
     assert (served.labels == np.asarray(direct.labels)).all()
@@ -212,8 +215,6 @@ def test_superpixel_route_serves_color_and_bypasses_cache():
 def test_superpixel_bucket_matches_single_fits():
     """A flushed superpixel batch (with pad lanes) gives each request the
     centers a solo fit of its compressed payload would."""
-    from repro.core import vector_fcm as VF
-
     eng = FCMServeEngine(CFG, batch_sizes=(4,))
     imgs = [phantom.phantom_slice_rgb(64, 64, noise=3.0 + 2 * i, seed=i)[0]
             for i in range(3)]
@@ -223,7 +224,9 @@ def test_superpixel_bucket_matches_single_fits():
     s = eng.stats()
     assert s["superpixel_batches"] == 1 and s["superpixel_padded_lanes"] == 1
     for rid in ids:
-        solo = VF.fit_vector_fcm(pend[rid].features, pend[rid].weights, CFG)
+        solo = SV.solve(SV.vector_problem(pend[rid].features,
+                                          pend[rid].weights, CFG),
+                        backend="reference")
         np.testing.assert_allclose(by_id[rid].centers,
                                    np.asarray(solo.centers), atol=1e-3)
         assert by_id[rid].n_iters == solo.n_iters
@@ -246,7 +249,8 @@ def test_pixel_route_matches_fit_fused():
     eng = FCMServeEngine(CFG)
     img, _ = phantom.phantom_slice(48, 56, seed=2)
     res = eng.segment([img], method="pixel")[0]
-    direct = F.fit_fused(img.ravel().astype(np.float32), CFG)
+    direct = SV.solve(SV.pixel_problem(img.ravel().astype(np.float32),
+                                       CFG), backend="reference")
     assert res.method == "pixel"
     np.testing.assert_allclose(res.centers, np.asarray(direct.centers),
                                atol=1e-5)
@@ -436,11 +440,46 @@ def test_fused_program_mixed_sizes_one_dispatch():
     results = eng.segment(imgs)
     assert eng.stats()["batches"] == 1
     for img, r in zip(imgs, results):
-        single = H.fit_histogram(img.ravel().astype(np.float32), CFG)
+        x = img.ravel().astype(np.float32)
+        single = SV.solve(SV.histogram_problem(x, CFG), backend="reference")
         np.testing.assert_allclose(r.centers, np.asarray(single.centers),
                                    atol=1e-4)
-        assert (r.labels == np.asarray(single.labels).reshape(img.shape)
-                ).all()
+        lab = F.labels_from_centers(jnp.asarray(x), single.centers)
+        assert (r.labels == np.asarray(lab).reshape(img.shape)).all()
+
+
+def test_fused_spatial_program_matches_staged_route_path():
+    """The spatial route now compiles a fused stencil program (whole
+    batched convergence in one launch); it must serve exactly what the
+    staged build_problem -> solve_batched -> materialize path serves."""
+    from repro.serving import fcm_engine as E
+
+    imgs = [phantom.phantom_slice(40, 48, noise=2.0 + i, seed=i)[0]
+            for i in range(3)]
+    fused = FCMServeEngine(CFG, batch_sizes=(4,), cache_size=0,
+                           trace_ring=8)
+    res_fused = fused.segment(imgs, method="spatial")
+    assert fused.stats()["compiled_programs"] == 1
+    buckets = [c for t in fused.tracer.traces() if t["name"] == "flush"
+               for c in t["children"] if c["name"] == "bucket"
+               and c["attrs"]["route"] == "spatial"]
+    assert buckets and buckets[-1]["attrs"]["fused"] is True
+    assert [c["name"] for c in buckets[-1]["children"]] == [
+        "gather", "launch", "scatter"]
+
+    base = E.ROUTES["spatial"]
+    E.register_route(dataclasses.replace(base, program_key=None,
+                                         make_program=None))
+    try:
+        staged = FCMServeEngine(CFG, batch_sizes=(4,), cache_size=0)
+        res_staged = staged.segment(imgs, method="spatial")
+        assert staged.stats()["compiled_programs"] == 0
+    finally:
+        E.register_route(base)
+    for f, s in zip(res_fused, res_staged):
+        np.testing.assert_allclose(f.centers, s.centers, atol=1e-5)
+        assert f.n_iters == s.n_iters
+        assert (f.labels == s.labels).all()
 
 
 def test_program_cache_reused_across_flushes_and_engines():

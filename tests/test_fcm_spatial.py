@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import fcm as F
+from repro.core import solver as SV
 from repro.core import spatial as S
 from repro.data import phantom
 from repro.kernels import ops
@@ -91,8 +92,9 @@ def test_border_pixels_average_over_true_neighbors_only():
 def test_alpha_zero_reproduces_fit_fused(shape):
     rng = np.random.default_rng(5)
     img = rng.integers(0, 256, shape).astype(np.float32)
-    res_sp = S.fit_spatial(img, S.SpatialFCMConfig(alpha=0.0))
-    res_fu = F.fit_fused(img.ravel(), F.FCMConfig())
+    cfg = S.SpatialFCMConfig(alpha=0.0)
+    res_sp = SV.solve(SV.spatial_problem(img, cfg), cfg)
+    res_fu = SV.solve(SV.pixel_problem(img.ravel()), backend="reference")
     np.testing.assert_allclose(np.asarray(res_sp.centers),
                                np.asarray(res_fu.centers), atol=1e-5)
     assert res_sp.n_iters == res_fu.n_iters
@@ -104,9 +106,10 @@ def test_alpha_zero_reproduces_fit_fused(shape):
 def test_alpha_zero_pallas_path_reproduces_fit_fused():
     img, _ = phantom.phantom_slice(64, 96, noise=5.0, seed=6)
     img = img.astype(np.float32)
-    res_sp = S.fit_spatial(img, S.SpatialFCMConfig(alpha=0.0),
-                           use_pallas=True, interpret=True)
-    res_fu = F.fit_fused(img.ravel(), F.FCMConfig())
+    cfg = S.SpatialFCMConfig(alpha=0.0)
+    res_sp = SV.solve(SV.spatial_problem(img, cfg), cfg,
+                      backend="pallas", interpret=True)
+    res_fu = SV.solve(SV.pixel_problem(img.ravel()), backend="reference")
     np.testing.assert_allclose(np.asarray(res_sp.centers),
                                np.asarray(res_fu.centers), atol=1e-3)
 
@@ -118,9 +121,9 @@ def test_fit_spatial_pallas_matches_reference(shape, neighbors):
     rng = np.random.default_rng(7)
     img = rng.integers(0, 256, shape).astype(np.float32)
     cfg = S.SpatialFCMConfig(alpha=1.0, neighbors=neighbors, max_iters=40)
-    ref = S.fit_spatial(img, cfg)
-    pal = S.fit_spatial(img, cfg, use_pallas=True, block_rows=8,
-                        interpret=True)
+    ref = SV.solve(SV.spatial_problem(img, cfg), cfg)
+    pal = SV.solve(SV.spatial_problem(img, cfg), cfg, backend="pallas",
+                   block_rows=8, interpret=True)
     np.testing.assert_allclose(np.asarray(pal.centers),
                                np.asarray(ref.centers), atol=5e-3)
     agree = np.mean(np.asarray(pal.labels) == np.asarray(ref.labels))
@@ -132,11 +135,11 @@ def test_fit_spatial_pallas_matches_reference(shape, neighbors):
 def test_bad_neighborhoods_rejected():
     img = np.zeros((8, 8), np.float32)
     with pytest.raises(ValueError):
-        S.fit_spatial(img, S.SpatialFCMConfig(neighbors=5))
+        SV.solve(SV.spatial_problem(img, S.SpatialFCMConfig(neighbors=5)))
     with pytest.raises(ValueError):
         S.neighbor_offsets(3, 4)
     with pytest.raises(ValueError):
-        S.fit_spatial(np.zeros(64, np.float32))  # rank-1: no pixel grid
+        SV.solve(SV.spatial_problem(np.zeros(64, np.float32)))  # rank-1
     with pytest.raises(ValueError):              # kernel path agrees with
         ops.spatial_step(np.zeros((2, 4, 4), np.float32), np.zeros(2),
                          neighbors=8, interpret=True)  # ... the reference
@@ -161,11 +164,11 @@ def test_spatial_beats_plain_fcm_on_salt_and_pepper():
     img, gt = phantom.noisy_phantom_slice(128, 128, noise=sigma,
                                           impulse=impulse, seed=0)
     x = img.ravel().astype(np.float32)
-    rp = F.fit_fused(x, F.FCMConfig())
+    rp = SV.solve(SV.pixel_problem(x), backend="reference")
     plain = phantom.match_labels_to_classes(
         np.asarray(rp.labels).reshape(img.shape), rp.centers)
-    rs = S.fit_spatial(img.astype(np.float32),
-                       S.SpatialFCMConfig(alpha=1.0, neighbors=8))
+    scfg = S.SpatialFCMConfig(alpha=1.0, neighbors=8)
+    rs = SV.solve(SV.spatial_problem(img.astype(np.float32), scfg), scfg)
     spatial = phantom.match_labels_to_classes(np.asarray(rs.labels),
                                               rs.centers)
     dsc_p = phantom.dice_per_class(plain, gt)

@@ -55,6 +55,39 @@ def test_histogram_quantiles_clamped_to_observed_range():
     assert s["min"] == 0.25 and s["max"] == 8.0 and s["count"] == 3
 
 
+def test_overflow_p99_tracks_numpy_not_last_edge():
+    """Regression: p99 used to clamp at edges[-1] once samples spilled
+    into the overflow bucket (easy with ITER_EDGES when max_iters
+    exceeds the unit-spaced range). The overflow bucket's upper bound
+    is the tracked vmax, so the interpolated quantile must stay within
+    the overflow bucket's width of the exact numpy percentile — far
+    beyond the last edge, not pinned to it."""
+    last = obs.ITER_EDGES[-1]                # 512
+    rng = np.random.default_rng(2)
+    samples = rng.integers(last + 100, last + 500, size=4000)
+    h = obs.Histogram(obs.ITER_EDGES)
+    for v in samples:
+        h.record(int(v))
+    got, over = h.quantile_info(0.99)
+    assert over is True
+    assert got > last                        # not clamped at the edge
+    exact = float(np.percentile(samples, 99))
+    # one-bucket error bound: everything landed in [edges[-1], vmax]
+    assert abs(got - exact) <= samples.max() - last
+    s = h.snapshot()
+    assert s["p99"] == got and s["p99_overflow"] is True
+
+
+def test_quantiles_inside_edges_are_not_overflow_flagged():
+    h = obs.Histogram(obs.ITER_EDGES)
+    for v in (3, 5, 7, 9, 520):              # one overflow sample
+        h.record(v)
+    s = h.snapshot()
+    assert s["p50_overflow"] is False
+    got, over = h.quantile_info(1.0)         # the max IS the overflow
+    assert over is True and 512 < got <= 520
+
+
 def test_empty_histogram_snapshot_is_none_safe():
     s = obs.Histogram(obs.LATENCY_EDGES).snapshot()
     assert s["count"] == 0

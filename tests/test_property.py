@@ -9,6 +9,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import fcm as F
 from repro.core import histogram as H
+from repro.core import solver as SV
 from repro.core import spatial as S
 from repro.training import grad_compress as gc
 
@@ -34,7 +35,8 @@ def test_membership_always_a_partition(c, n, m, seed):
 def test_centers_stay_in_data_hull(c, n, seed):
     rng = np.random.default_rng(seed)
     x = jnp.asarray(rng.uniform(10, 200, n), jnp.float32)
-    res = F.fit_fused(x, F.FCMConfig(n_clusters=c, max_iters=50))
+    res = SV.solve(SV.pixel_problem(x, c=c), backend="reference",
+                   max_iters=50)
     v = np.asarray(res.centers)
     assert (v >= float(jnp.min(x)) - 1e-3).all()
     assert (v <= float(jnp.max(x)) + 1e-3).all()
@@ -94,9 +96,9 @@ def test_fit_spatial_flip_equivariant(h, w, neighbors, axis, seed):
     img = rng.integers(0, 256, (h, w)).astype(np.float32)
     cfg = S.SpatialFCMConfig(alpha=1.5, neighbors=neighbors,
                              eps=1e-12, max_iters=5)
-    a = S.fit_spatial(img, cfg, keep_membership=True)
-    b = S.fit_spatial(np.flip(img, axis=axis).copy(), cfg,
-                      keep_membership=True)
+    a = SV.solve(SV.spatial_problem(img, cfg), cfg, keep_membership=True)
+    b = SV.solve(SV.spatial_problem(np.flip(img, axis=axis).copy(), cfg),
+                 cfg, keep_membership=True)
     np.testing.assert_allclose(np.asarray(a.centers), np.asarray(b.centers),
                                rtol=1e-4, atol=1e-3)
     np.testing.assert_allclose(np.asarray(a.membership),

@@ -17,6 +17,7 @@ import pytest
 from repro.core import batched as B
 from repro.core import solver as SV
 from repro.data import phantom
+from repro.kernels import fcm_resident as KR
 from repro.kernels import ops as kops
 
 ATOL = 1e-5
@@ -159,9 +160,14 @@ def test_resident_auto_dispatch_on_tpu_when_fits():
     assert kops.select_step("flat", platform="tpu", n_feat=3,
                             n_rows=200, c=4, batched=True
                             ).name == "resident"
-    # ... and falls through (pallas / reference) when it does not.
+    # ... hands rows beyond the small-kernel bound to the HBM-streamed
+    # resident variant ...
     assert kops.select_step("flat", platform="tpu", n_feat=1,
-                            n_rows=100000, c=4).name == "pallas"
+                            n_rows=100000, c=4).name == "resident_streamed"
+    # ... and falls through (pallas / reference) when neither fits.
+    assert kops.select_step("flat", platform="tpu", n_feat=1,
+                            n_rows=KR.STREAM_MAX_ROWS + 1, c=4
+                            ).name == "pallas"
     assert kops.select_step("flat", platform="tpu", n_feat=1,
                             n_rows=256, c=16).name == "pallas"
     # unknown row count (legacy callers) can never claim residency
@@ -173,7 +179,9 @@ def test_resident_auto_dispatch_on_tpu_when_fits():
 
 
 def test_resident_rejects_oversized_problems():
-    x = np.arange(5000, dtype=np.float32)
+    # beyond even the HBM-streamed row bound
+    x = np.zeros(KR.STREAM_MAX_ROWS + 128, dtype=np.float32)
+    x[:64] = np.arange(64)
     with pytest.raises(ValueError, match="VMEM-resident"):
         SV.solve(SV.pixel_problem(x), backend="resident")
     rng = np.random.default_rng(0)
@@ -182,7 +190,18 @@ def test_resident_rejects_oversized_problems():
         SV.solve(SV.vector_problem(feats), backend="resident")
 
 
-def test_resident_rejects_stencil_problems():
-    img = np.zeros((16, 16), np.float32)
-    with pytest.raises(ValueError, match="no 'stencil' step"):
-        SV.solve(SV.spatial_problem(img), backend="resident")
+def test_resident_stencil_dispatch_and_parity():
+    """backend="resident" on a stencil problem selects the resident
+    FCM_S kernel on TPU, and (interpret mode) matches the jnp stencil
+    reference center-for-center."""
+    impl = kops.select_step("stencil", prefer="resident", platform="tpu",
+                            n_rows=32 * 32, c=4)
+    assert impl.name == "resident"
+    img, _ = phantom.phantom_slice(31, 33, seed=9)
+    ref = SV.solve(SV.spatial_problem(img), backend="reference")
+    res = SV.solve(SV.spatial_problem(img), backend="resident",
+                   interpret=True)
+    np.testing.assert_allclose(np.asarray(res.centers),
+                               np.asarray(ref.centers),
+                               rtol=1e-5, atol=1e-5)
+    assert res.n_iters == ref.n_iters

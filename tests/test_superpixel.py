@@ -8,7 +8,7 @@ import pytest
 
 from repro.core import fcm as F
 from repro.core import histogram as H
-from repro.core import vector_fcm as VF
+from repro.core import solver as SV
 from repro.data import phantom
 from repro.superpixel import pipeline as SX
 from repro.superpixel import slic as SL
@@ -71,14 +71,14 @@ def test_slic_converges_on_constant_image():
 # ---------------------------------------------------------------------------
 
 def test_vector_fcm_d1_reproduces_histogram_fit():
-    """(256, 1) bin values + counts as weights == fit_histogram, center
-    for center, iteration for iteration."""
+    """(256, 1) bin values + counts as weights == the histogram solve,
+    center for center, iteration for iteration."""
     img, _ = phantom.phantom_slice(96, 96, seed=3)
     x = img.ravel().astype(np.float32)
     hist = H.intensity_histogram(jnp.asarray(x))
     vals = jnp.arange(256, dtype=jnp.float32)[:, None]
-    rv = VF.fit_vector_fcm(vals, hist, CFG)
-    rh = H.fit_histogram(x, CFG)
+    rv = SV.solve(SV.vector_problem(vals, hist, CFG))
+    rh = SV.solve(SV.histogram_problem(x, CFG))
     np.testing.assert_allclose(np.asarray(rv.centers).ravel(),
                                np.asarray(rh.centers), atol=1e-5)
     assert rv.n_iters == rh.n_iters
@@ -87,7 +87,8 @@ def test_vector_fcm_d1_reproduces_histogram_fit():
 def test_vector_fcm_membership_partition_and_labels():
     rng = np.random.default_rng(0)
     feats = rng.uniform(0, 255, (128, 3)).astype(np.float32)
-    res = VF.fit_vector_fcm(feats, cfg=CFG, keep_membership=True)
+    res = SV.solve(SV.vector_problem(feats, cfg=CFG),
+                   keep_membership=True)
     u = np.asarray(res.membership)
     np.testing.assert_allclose(u.sum(axis=0), 1.0, atol=1e-5)
     np.testing.assert_array_equal(
@@ -101,11 +102,11 @@ def test_vector_fcm_zero_weight_rows_are_inert():
     rng = np.random.default_rng(1)
     feats = rng.uniform(20, 200, (64, 2)).astype(np.float32)
     w = rng.uniform(1, 10, (64,)).astype(np.float32)
-    r0 = VF.fit_vector_fcm(feats, w, CFG)
+    r0 = SV.solve(SV.vector_problem(feats, w, CFG))
     junk = np.array([[1e4, -1e4], [5e3, 5e3]], np.float32)
     feats2 = np.concatenate([feats, junk])
     w2 = np.concatenate([w, np.zeros((2,), np.float32)])
-    r1 = VF.fit_vector_fcm(feats2, w2, CFG)
+    r1 = SV.solve(SV.vector_problem(feats2, w2, CFG))
     # atol covers float non-associativity of the row sums, nothing more
     np.testing.assert_allclose(np.asarray(r0.centers),
                                np.asarray(r1.centers), atol=1e-3)
@@ -119,10 +120,10 @@ def test_vector_batched_lanes_match_single_fits():
     ws = np.stack([r.uniform(1, 40, (48,)).astype(np.float32)
                    for r in rngs])
     ws[2, :8] = 0.0                          # a lane with empty rows
-    rb = VF.fit_vector_batched(feats, ws, CFG)
+    rb = SV.solve_batched(SV.batch_problems(feats, ws, cfg=CFG), CFG)
     assert rb.centers.shape == (4, CFG.n_clusters, 3)
     for i in range(4):
-        rs = VF.fit_vector_fcm(feats[i], ws[i], CFG)
+        rs = SV.solve(SV.vector_problem(feats[i], ws[i], CFG))
         np.testing.assert_allclose(np.asarray(rb.centers[i]),
                                    np.asarray(rs.centers), atol=1e-3)
         assert int(rb.n_iters[i]) == rs.n_iters
@@ -162,7 +163,7 @@ def test_pipeline_dsc_parity_with_pixel_space(flavor):
     seg, comp = SX.fit_superpixel(imgf, cfg)
     x = imgf.reshape(-1, imgf.shape[-1]) if imgf.ndim == 3 \
         else imgf.ravel()
-    rp = F.fit_fused(x, CFG)
+    rp = SV.solve(SV.pixel_problem(x, CFG))
     d_sp = phantom.dice_per_class(
         phantom.match_labels_to_means(seg.labels, seg.centers, means), gt)
     d_px = phantom.dice_per_class(
