@@ -1,23 +1,33 @@
-"""Schema validation for the consolidated BENCH JSON.
+"""Schema validation for every benchmark JSON artifact.
 
-``validate(bench)`` raises ``ValueError`` listing every problem found:
-missing top-level sections, a roofline section that does not cover
-every (kind, impl) cell registered in ``kernels/ops.py``, or serving
-latency/convergence blocks without the percentile fields the
-observability layer promises. CI runs it against the ``--tiny`` output
-so a PR cannot silently drop a section or a registry cell from the
-perf record.
+``validate(bench)`` raises ``ValueError`` listing every problem found
+in a consolidated BENCH record: missing top-level sections, a roofline
+section that does not cover every (kind, impl) cell registered in
+``kernels/ops.py``, serving latency/convergence blocks without the
+percentile fields the observability layer promises, or a sweep section
+whose grid silently dropped a registry cell or serving route. The
+standalone reports get the same treatment: ``validate_cell`` for one
+sweep-cell record, ``validate_spatial_report`` /
+``validate_superpixel_report`` for the two paper-table scripts (they
+call these before writing their JSON). CI runs the CLI against the
+``--tiny`` outputs so a PR cannot silently drop a section, a registry
+cell, or a route from the perf record.
 
-Run:  PYTHONPATH=src python -m benchmarks.bench_schema benchmarks/out/BENCH_pr7.json
+The CLI dispatches on filename: ``BENCH_pr*.json`` -> :func:`validate`,
+``spatial_fcm.json`` / ``superpixel_fcm.json`` -> their report
+validators, files under ``out/sweep/`` -> :func:`validate_cell`.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_schema benchmarks/out/BENCH_pr8.json
 """
 from __future__ import annotations
 
 import json
+import os
 import sys
-from typing import List
+from typing import Any, Dict, List
 
 TOP_KEYS = ("pr", "backend", "tiny", "batched_throughput", "spatial_fcm",
-            "superpixel_fcm", "roofline")
+            "superpixel_fcm", "roofline", "sweep")
 
 CELL_KEYS = ("kind", "impl", "backend", "shape", "flops", "bytes",
              "wall_s", "achieved_flops_per_s", "achieved_bytes_per_s",
@@ -64,14 +74,225 @@ def _check_latency(block, where: str, problems: List[str]) -> None:
             problems.append(f"{where}: latency missing {k!r}")
 
 
-def validate(bench: dict) -> None:
-    """Raise ValueError naming every schema violation (None when OK)."""
+def _check_convergence(block, where: str, problems: List[str]) -> None:
+    if not isinstance(block, dict):
+        problems.append(f"{where}: convergence block missing")
+        return
+    for k in ("lanes", "mean_iters", "p50_iters", "p99_iters",
+              "last_final_delta"):
+        if k not in block:
+            problems.append(f"{where}: convergence missing {k!r}")
+
+
+# ---------------------------------------------------------------------------
+# Sweep cells + section
+# ---------------------------------------------------------------------------
+
+#: Per-family required keys of an ok cell record, beyond the common
+#: (cell_id, family, axes, status) envelope.
+SWEEP_CELL_KEYS = {
+    "solver": ("metrics", "latency", "convergence"),
+    "serving": ("metrics", "latency", "convergence"),
+    "kernel": ("kernel",),
+}
+
+SOLVER_METRIC_KEYS = ("wall_s", "fit_s", "compress_s", "per_image_s",
+                      "n_iters")
+
+
+def validate_cell(cell: dict) -> None:
+    """Raise ValueError naming every problem in one sweep-cell record."""
     problems: List[str] = []
-    for k in TOP_KEYS:
+    check_cell(cell, problems)
+    if problems:
+        raise ValueError("sweep cell schema violations:\n  "
+                         + "\n  ".join(problems))
+
+
+def check_cell(cell: dict, problems: List[str]) -> None:
+    cid = cell.get("cell_id", "<no cell_id>")
+    for k in ("cell_id", "family", "axes", "status"):
+        if k not in cell:
+            problems.append(f"cell {cid}: missing {k!r}")
+    family = cell.get("family")
+    if family not in SWEEP_CELL_KEYS:
+        problems.append(f"cell {cid}: unknown family {family!r}")
+        return
+    status = cell.get("status")
+    if status == "skipped":
+        if not cell.get("skip_reason"):
+            problems.append(f"cell {cid}: skipped without a skip_reason")
+        return
+    if status == "error":
+        if "error" not in cell:
+            problems.append(f"cell {cid}: errored without an error field")
+        return
+    if status != "ok":
+        problems.append(f"cell {cid}: unknown status {status!r}")
+        return
+    for k in SWEEP_CELL_KEYS[family]:
+        if k not in cell or cell[k] is None:
+            problems.append(f"cell {cid}: missing {k!r}")
+    if family in ("solver", "serving"):
+        _check_latency(cell.get("latency"), f"cell {cid}", problems)
+        _check_convergence(cell.get("convergence"), f"cell {cid}",
+                           problems)
+        metrics = cell.get("metrics") or {}
+        for k in ("wall_s", "per_image_s"):
+            if k not in metrics:
+                problems.append(f"cell {cid}: metrics missing {k!r}")
+        if family == "solver":
+            for k in SOLVER_METRIC_KEYS:
+                if k not in metrics:
+                    problems.append(f"cell {cid}: metrics missing {k!r}")
+            if cell["axes"].get("batch") == 1:
+                acc = cell.get("accuracy")
+                if not isinstance(acc, dict) or "mean_dsc" not in acc:
+                    problems.append(f"cell {cid}: batch=1 solver cell "
+                                    "missing accuracy.mean_dsc")
+    elif family == "kernel":
+        kcell = cell.get("kernel") or {}
+        if "error" not in kcell:
+            for k in CELL_KEYS:
+                if k not in kcell:
+                    problems.append(f"cell {cid}: kernel row missing "
+                                    f"{k!r}")
+
+
+def _check_sweep(section, problems: List[str]) -> None:
+    """Coverage + per-cell checks for the consolidated sweep section:
+    every registered (kind, impl) dispatch cell appears in the kernel
+    family, every serving route in the serving family, and every
+    skipped grid cell carries its reason."""
+    from repro.kernels import ops as kops
+    from repro.serving import fcm_engine as FE
+
+    if not isinstance(section, dict):
+        problems.append("sweep: section missing")
+        return
+    cells = section.get("cells", [])
+    for k in ("name", "tiny", "backend", "coverage", "cells", "skipped"):
+        if k not in section:
+            problems.append(f"sweep: missing {k!r}")
+    for cell in cells:
+        check_cell(cell, problems)
+    for sk in section.get("skipped", []):
+        if not sk.get("skip_reason"):
+            problems.append(f"sweep: skipped cell "
+                            f"{sk.get('cell_id', '<no cell_id>')} "
+                            "without a skip_reason")
+
+    kernel_ok = {(c["axes"]["kind"], c["axes"]["impl"]) for c in cells
+                 if c.get("family") == "kernel"
+                 and c.get("status") == "ok"}
+    required = {(i.kind, i.name) for i in kops.step_impls()}
+    required.update(REQUIRED_CELLS)
+    for kind, name in sorted(required - kernel_ok):
+        problems.append(f"sweep: no ok kernel cell for registered "
+                        f"{kind}/{name}")
+
+    routes_ok = {c["axes"]["route"] for c in cells
+                 if c.get("family") == "serving"
+                 and c.get("status") == "ok"}
+    for route in sorted(set(FE.METHODS) - routes_ok):
+        problems.append(f"sweep: no ok serving cell for route {route!r}")
+
+    variants_ok = {c["axes"]["variant"] for c in cells
+                   if c.get("family") == "solver"
+                   and c.get("status") == "ok"}
+    for v in sorted({"pixel", "histogram", "spatial", "vector"}
+                    - variants_ok):
+        problems.append(f"sweep: no ok solver cell for variant {v!r}")
+
+
+def check_sweep_section(section: dict) -> None:
+    """Raise ValueError naming every sweep-section schema violation."""
+    problems: List[str] = []
+    _check_sweep(section, problems)
+    if problems:
+        raise ValueError("sweep schema violations:\n  "
+                         + "\n  ".join(problems))
+
+
+# ---------------------------------------------------------------------------
+# Standalone report schemas (spatial_fcm.json / superpixel_fcm.json)
+# ---------------------------------------------------------------------------
+
+def validate_spatial_report(report: dict) -> None:
+    """Schema of ``benchmarks/out/spatial_fcm.json``: per-noise-level
+    plain/spatial fits, each with per-class DSC + wall seconds."""
+    from repro.data import phantom
+    problems: List[str] = []
+    for k in ("backend", "size", "seed", "alpha", "neighbors", "levels"):
+        if k not in report:
+            problems.append(f"spatial_fcm: missing {k!r}")
+    levels = report.get("levels") or []
+    if not levels:
+        problems.append("spatial_fcm: no noise levels")
+    for i, level in enumerate(levels):
+        for k in ("sigma", "impulse", "fits"):
+            if k not in level:
+                problems.append(f"spatial_fcm.levels[{i}]: missing {k!r}")
+        fits = level.get("fits", {})
+        for fit in ("plain", "spatial_ref"):
+            if fit not in fits:
+                problems.append(f"spatial_fcm.levels[{i}]: missing "
+                                f"fit {fit!r}")
+                continue
+            rec = fits[fit]
+            for k in ("dsc", "n_iters", "seconds"):
+                if k not in rec:
+                    problems.append(f"spatial_fcm.levels[{i}].{fit}: "
+                                    f"missing {k!r}")
+            for cls in phantom.CLASS_NAMES:
+                if cls not in rec.get("dsc", {}):
+                    problems.append(f"spatial_fcm.levels[{i}].{fit}: "
+                                    f"dsc missing class {cls!r}")
+    if problems:
+        raise ValueError("spatial_fcm schema violations:\n  "
+                         + "\n  ".join(problems))
+
+
+def validate_superpixel_report(report: dict) -> None:
+    """Schema of ``benchmarks/out/superpixel_fcm.json``: the
+    pixels-vs-superpixels headline record."""
+    from repro.data import phantom
+    problems: List[str] = []
+    for k in ("backend", "size", "n_pixels", "n_superpixels",
+              "compression_ratio", "pixel_fit_s", "compress_s",
+              "superpixel_fit_s", "speedup_fit", "speedup_total",
+              "dsc_pixel", "dsc_superpixel", "dsc_parity_max_delta"):
+        if k not in report:
+            problems.append(f"superpixel_fcm: missing {k!r}")
+    for side in ("dsc_pixel", "dsc_superpixel"):
+        for cls in phantom.CLASS_NAMES:
+            if cls not in report.get(side, {}):
+                problems.append(f"superpixel_fcm.{side}: missing class "
+                                f"{cls!r}")
+    if problems:
+        raise ValueError("superpixel_fcm schema violations:\n  "
+                         + "\n  ".join(problems))
+
+
+# ---------------------------------------------------------------------------
+# Consolidated BENCH record + CLI
+# ---------------------------------------------------------------------------
+
+def validate(bench: dict) -> None:
+    """Raise ValueError naming every schema violation (None when OK).
+
+    ``sweep`` is required from pr >= 8 (older committed ledger entries
+    predate the sweep harness and stay valid as-written)."""
+    problems: List[str] = []
+    required = TOP_KEYS if bench.get("pr", 0) >= 8 else tuple(
+        k for k in TOP_KEYS if k != "sweep")
+    for k in required:
         if k not in bench:
             problems.append(f"missing top-level key {k!r}")
     if "roofline" in bench:
         _check_roofline(bench["roofline"], problems)
+    if "sweep" in bench:
+        _check_sweep(bench["sweep"], problems)
     bt = bench.get("batched_throughput", {})
     hist = bt.get("histogram", {}) if isinstance(bt, dict) else {}
     _check_latency(hist.get("latency"), "batched_throughput.histogram",
@@ -87,12 +308,35 @@ def validate(bench: dict) -> None:
                          + "\n  ".join(problems))
 
 
-def main(argv=None):
-    path = (argv or sys.argv[1:])[0]
+def validate_path(path: str) -> str:
+    """Validate one JSON artifact, dispatching on its filename.
+    Returns a short description of which schema was applied."""
     with open(path) as f:
-        bench = json.load(f)
-    validate(bench)
-    print(f"{path}: schema OK")
+        payload = json.load(f)
+    name = os.path.basename(path)
+    if name == "spatial_fcm.json":
+        validate_spatial_report(payload)
+        return "spatial_fcm report"
+    if name == "superpixel_fcm.json":
+        validate_superpixel_report(payload)
+        return "superpixel_fcm report"
+    if os.path.basename(os.path.dirname(path)) == "sweep":
+        validate_cell(payload)
+        return "sweep cell"
+    if "cells" in payload and "coverage" in payload:
+        check_sweep_section(payload)
+        return "sweep section"
+    validate(payload)
+    return "BENCH record"
+
+
+def main(argv=None):
+    paths = list(argv or sys.argv[1:])
+    if not paths:
+        raise SystemExit("usage: bench_schema.py ARTIFACT.json [...]")
+    for path in paths:
+        kind = validate_path(path)
+        print(f"{path}: schema OK ({kind})")
 
 
 if __name__ == "__main__":

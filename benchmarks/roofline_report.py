@@ -299,10 +299,13 @@ def markdown_table(rows, mesh="16x16"):
     return "\n".join(out)
 
 
-def run(smoke: bool = False):
+def run(smoke: bool = False, report: dict = None):
     """The benchmarks/run.py section: kernel cells always, plus the
-    dry-run summary when its JSONL artifact exists."""
-    report = write_kernel_report(smoke=smoke)
+    dry-run summary when its JSONL artifact exists. Pass a prebuilt
+    ``report`` (the sweep harness measures the same cells) to reuse its
+    measurements instead of probing every kernel twice."""
+    if report is None:
+        report = write_kernel_report(smoke=smoke)
     rows = load()
     if rows:
         single = [r for r in rows if r["mesh"] == "16x16"]

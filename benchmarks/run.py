@@ -1,19 +1,24 @@
 """Benchmark harness: one module per paper table/figure. Prints
 ``name,us_per_call,derived`` CSV lines and writes the consolidated
-``benchmarks/out/BENCH_pr7.json`` aggregating the batched / spatial /
+``benchmarks/out/BENCH_pr8.json`` aggregating the batched / spatial /
 superpixel serving numbers (engine-overhead + tracing-overhead gates,
-per-route latency percentiles, convergence telemetry) and the
-roofline-vs-achieved kernel report, validates the result against
-``bench_schema.py``, and perf-gates the B=64 engine overhead against
-the committed ``BENCH_pr6.json`` baseline — so the perf trajectory is
-machine-readable AND regression-guarded across PRs.
+per-route latency percentiles, convergence telemetry), the declarative
+variant-zoo sweep, and the roofline-vs-achieved kernel report,
+validates the result against ``bench_schema.py``, renders the
+accuracy-vs-speed frontier and perf-trajectory figures, and
+regression-gates EVERY ledger metric through
+``repro.analysis.trajectory.diff`` against the newest committed
+``BENCH_pr*.json`` — so the perf trajectory is machine-readable AND
+regression-guarded per-metric across PRs (not just one hardcoded B=64
+engine-seconds check).
 
   table1_variants    — paper Table 1 analogue (variant ladder)
   fig7_dsc           — paper Fig. 7 DSC parity (parallel == sequential)
   table3_speedup     — paper Table 3 exec times + Fig. 8 speedup curve
                        (sequential vs device, one solve() entry point)
-  roofline_report    — roofline-vs-achieved per registered kernel cell
-                       (always runs: BENCH needs full cell coverage)
+  sweep              — declarative variant x backend x size x batch x
+                       seed grid + serving routes + kernel roofline
+                       cells (always runs: BENCH needs full coverage)
   batched_throughput — beyond-paper: images/sec vs batch size for the
                        histogram AND batched-spatial serving paths
   spatial_fcm        — FCM_S noise-robustness + wall clock
@@ -27,51 +32,67 @@ import argparse
 import json
 import os
 
-#: Allowed growth of the B=64 histogram engine wall time over the
-#: committed BENCH_pr6 baseline. The gate rides on the engine's OWN
-#: seconds, not the overhead-vs-solve_batched ratio: the raw solve's
-#: run-to-run variance would otherwise fail the serving path for
-#: getting a faster denominator. The slack absorbs scheduler noise on
-#: a ~10 ms sample.
-PERF_GATE_RATIO = 1.5
-BASELINE = os.path.join(os.path.dirname(__file__), "out", "BENCH_pr6.json")
+#: This PR's ledger slot: the consolidated record lands in
+#: ``BENCH_pr{CURRENT_PR}.json`` and the regression baseline
+#: auto-resolves to the newest committed ``BENCH_pr*.json`` with an
+#: older pr number (no more hand-bumping a hardcoded baseline path).
+CURRENT_PR = 8
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+FIG_DIR = os.path.join(OUT_DIR, "figures")
 
 
-def perf_gate(bench: dict, baseline_path: str = BASELINE) -> None:
-    """Fail on regressions vs the committed baseline's B=64 engine
-    seconds; print the stage-seconds comparison so a failure names its
-    stage. Only comparable (full-vs-full) runs gate — a --tiny run
-    against the full-size baseline reports but cannot fail."""
-    if not os.path.exists(baseline_path):
+def perf_gate(bench: dict, baseline_path: str = None) -> None:
+    """Per-metric regression gate through the trajectory ledger:
+    ``trajectory.diff`` compares every ledger metric (engine seconds,
+    overhead ratios, spatial/superpixel speedups, DSC parity, tracing
+    overhead, iteration counts) against the newest committed baseline
+    under its per-metric policy. Relative gates apply to comparable
+    (full-vs-full) runs; absolute ceilings/floors — engine overhead
+    <= 5x, tracing overhead <= 1.25x, spatial batched speedup >= 5x,
+    DSC parity <= 0.05 — and missing-metric checks gate every run,
+    including --tiny CI."""
+    from repro.analysis import trajectory
+
+    if baseline_path is None:
+        baseline_path = trajectory.resolve_baseline(OUT_DIR,
+                                                    before=CURRENT_PR)
+    if baseline_path is None or not os.path.exists(baseline_path):
         print("# perf-gate: no committed baseline, skipping")
         return
-    with open(baseline_path) as f:
-        base = json.load(f)
+    result = trajectory.diff(trajectory.load_bench(baseline_path), bench)
+    print(f"# perf-gate baseline: {os.path.basename(baseline_path)}")
+    for line in result.report().splitlines():
+        print(f"# {line}")
+    if not result.ok:
+        raise SystemExit(
+            "FAIL perf-gate: " + "; ".join(
+                f"{v.metric}: {v.detail}" for v in result.failures))
+    print("# perf-gate OK (trajectory.diff: "
+          f"{len(result.verdicts)} metrics checked)")
+
+
+def render_figures(bench: dict, fig_dir: str = FIG_DIR) -> list:
+    """The two analysis figures: the perf-trajectory small multiples
+    over every committed BENCH record (plus this run) and this run's
+    accuracy-vs-speed frontier from the sweep's solver cells."""
+    from repro.analysis import trajectory
+
+    os.makedirs(fig_dir, exist_ok=True)
+    paths = []
     try:
-        bh = base["batched_throughput"]["histogram"]
-        nh = bench["batched_throughput"]["histogram"]
-        base_s = bh["64"]["engine_s"]
-        now_s = nh[64]["engine_s"]
-        base_st, now_st = bh["stage_seconds"], nh["stage_seconds"]
-    except KeyError as e:
-        print(f"# perf-gate: baseline incomparable ({e!r}), skipping")
-        return
-    for stage in ("ingest", "solve", "materialize"):
-        b, n = base_st.get(stage, 0.0), now_st.get(stage, 0.0)
-        print(f"# perf-gate stage {stage}: {n * 1e3:.2f} ms "
-              f"(baseline {b * 1e3:.2f} ms)")
-    ceiling = base_s * PERF_GATE_RATIO
-    verdict = (f"B=64 engine {now_s * 1e3:.2f} ms (baseline "
-               f"{base_s * 1e3:.2f} ms, ceiling {ceiling * 1e3:.2f} ms "
-               f"= {PERF_GATE_RATIO}x)")
-    if bench.get("tiny") and not base.get("tiny"):
-        print(f"# perf-gate (informational, tiny vs full baseline): "
-              f"{verdict}")
-        return
-    if now_s > ceiling:
-        raise SystemExit(f"FAIL perf-gate: {verdict}; the stage lines "
-                         "above name the regression")
-    print(f"# perf-gate OK: {verdict}")
+        ledger = [(pr, b) for pr, b in trajectory.load_ledger(OUT_DIR)
+                  if pr != bench.get("pr")]
+        ledger.append((bench.get("pr"), bench))
+        paths.append(trajectory.render_trajectory(
+            ledger, os.path.join(fig_dir, "perf_trajectory.png")))
+        paths.append(trajectory.render_frontier(
+            bench, os.path.join(fig_dir, "frontier.png")))
+        for p in paths:
+            print(f"wrote {p}")
+    except Exception as e:       # figures are artifacts, not gates
+        print(f"# figure rendering failed (non-fatal): {e!r}")
+    return paths
 
 
 def main(argv=None):
@@ -79,14 +100,14 @@ def main(argv=None):
     ap.add_argument("--tiny", action="store_true",
                     help="CI smoke: small images, single timing reps")
     ap.add_argument("--skip-paper-tables", action="store_true",
-                    help="run only the serving sections that feed "
-                         "BENCH_pr7.json")
+                    help="run only the serving/sweep sections that feed "
+                         "BENCH_pr8.json")
     args = ap.parse_args(argv)
 
     import jax
 
     from . import (batched_throughput, bench_schema, fig7_dsc,
-                   roofline_report, spatial_fcm, superpixel_fcm,
+                   roofline_report, spatial_fcm, superpixel_fcm, sweep,
                    table1_variants, table3_speedup)
 
     print("benchmark,us_per_call,derived")
@@ -95,9 +116,13 @@ def main(argv=None):
         fig7_dsc.run()
         table3_speedup.run()
 
-    # The kernel roofline cells always run (even --skip-paper-tables):
-    # the BENCH schema requires an entry per registered kernel cell.
-    roofline = roofline_report.run(smoke=args.tiny)
+    # The variant-zoo sweep always runs (even --skip-paper-tables): the
+    # BENCH schema requires coverage of every registered kernel cell,
+    # serving route, and solver variant. Its embedded roofline report
+    # doubles as the bench["roofline"] section (one measurement).
+    sweep_section = sweep.run_sweep(tiny=args.tiny)
+    roofline = sweep_section.pop("roofline")
+    roofline_report.run(smoke=args.tiny, report=roofline)
 
     throughput = batched_throughput.run(tiny=args.tiny)
     spatial_argv = [] if jax.default_backend() == "tpu" else ["--no-pallas"]
@@ -107,7 +132,7 @@ def main(argv=None):
     superpixel = superpixel_fcm.main(["--tiny"] if args.tiny else [])
 
     bench = {
-        "pr": 7,
+        "pr": CURRENT_PR,
         "backend": jax.default_backend(),
         "tiny": args.tiny,
         # serving-path throughput (batched histogram + batched spatial),
@@ -120,16 +145,18 @@ def main(argv=None):
         "superpixel_fcm": superpixel,
         # roofline-vs-achieved, one cell per registered kernel impl
         "roofline": roofline,
+        # declarative variant-zoo grid (solver/serving/kernel families)
+        "sweep": sweep_section,
     }
     bench_schema.validate(bench)
     print("# BENCH schema OK")
     perf_gate(bench)
-    out_dir = os.path.join(os.path.dirname(__file__), "out")
-    os.makedirs(out_dir, exist_ok=True)
-    out_path = os.path.join(out_dir, "BENCH_pr7.json")
+    os.makedirs(OUT_DIR, exist_ok=True)
+    out_path = os.path.join(OUT_DIR, f"BENCH_pr{CURRENT_PR}.json")
     with open(out_path, "w") as f:
         json.dump(bench, f, indent=1)
     print(f"wrote {out_path}")
+    render_figures(bench)
     return bench
 
 

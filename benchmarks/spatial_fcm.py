@@ -26,6 +26,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
+from benchmarks import bench_schema
 from benchmarks.common import time_fn
 from repro.configs.fcm_brainweb import make_config
 from repro.core import solver as SV
@@ -92,12 +93,13 @@ def main(argv=None):
             f"CSF={v['dsc']['CSF']:.3f} ({v['seconds'] * 1e3:.0f} ms)"
             for k, v in level["fits"].items()))
 
+    bench_schema.validate_spatial_report(report)
     out_dir = os.path.join(os.path.dirname(__file__), "out")
     os.makedirs(out_dir, exist_ok=True)
     out_path = os.path.join(out_dir, "spatial_fcm.json")
     with open(out_path, "w") as f:
         json.dump(report, f, indent=1)
-    print(f"wrote {out_path}")
+    print(f"wrote {out_path} (schema OK)")
 
     worst = report["levels"][-1]["fits"]
     for cls in ("CSF", "GM", "WM"):

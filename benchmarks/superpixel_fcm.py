@@ -28,6 +28,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
+from benchmarks import bench_schema
 from benchmarks.common import time_fn
 from repro.configs.fcm_brainweb import make_config
 from repro.core import solver as SV
@@ -107,6 +108,7 @@ def main(argv=None):
         "dsc_parity_max_delta": round(parity, 4),
     }
 
+    bench_schema.validate_superpixel_report(report)
     out_dir = os.path.join(os.path.dirname(__file__), "out")
     os.makedirs(out_dir, exist_ok=True)
     out_path = os.path.join(out_dir, "superpixel_fcm.json")

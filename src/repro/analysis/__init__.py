@@ -1,1 +1,1 @@
-from . import hw, roofline  # noqa: F401
+from . import hw, roofline, trajectory  # noqa: F401

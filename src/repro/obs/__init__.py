@@ -24,5 +24,5 @@ Nothing here imports from ``repro.core``/``repro.serving``/
 """
 from .metrics import (ITER_EDGES, LATENCY_EDGES, Counter, Gauge,  # noqa: F401
                       Histogram, MetricsRegistry, default_registry,
-                      json_safe)
+                      json_safe, scoped_registry)
 from .tracing import Span, Tracer  # noqa: F401

@@ -17,13 +17,15 @@ dashboard's schema survives a stats reset).
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import math
 from bisect import bisect_right
 from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
-           "default_registry", "json_safe", "LATENCY_EDGES", "ITER_EDGES"]
+           "default_registry", "scoped_registry", "json_safe",
+           "LATENCY_EDGES", "ITER_EDGES"]
 
 
 #: Default latency bucket edges (seconds): eighth-decade log steps from
@@ -261,10 +263,42 @@ class MetricsRegistry:
         return json.dumps(self.snapshot(), **json_kw)
 
 
-_DEFAULT = MetricsRegistry()
+#: Registry stack: the bottom entry is the process-wide default; a
+#: :func:`scoped_registry` context pushes a fresh registry on top so
+#: telemetry recorded inside the scope is captured in isolation.
+_REGISTRY_STACK: List[MetricsRegistry] = [MetricsRegistry()]
 
 
 def default_registry() -> MetricsRegistry:
-    """The process-wide registry (solver convergence telemetry lands
-    here; the serving engine keeps its own per-instance registry)."""
-    return _DEFAULT
+    """The currently-active registry: the process-wide one (solver
+    convergence telemetry lands here; the serving engine keeps its own
+    per-instance registry), or — inside a :func:`scoped_registry`
+    block — the innermost scoped registry."""
+    return _REGISTRY_STACK[-1]
+
+
+@contextlib.contextmanager
+def scoped_registry(registry: Optional[MetricsRegistry] = None):
+    """Route :func:`default_registry` telemetry to a private registry
+    for the duration of the block — the cell-scoped capture the sweep
+    harness wraps around each grid cell, so one cell's convergence
+    telemetry never bleeds into another's record::
+
+        with obs.scoped_registry() as reg:
+            solver.solve(problem)          # telemetry -> reg
+        cell["obs"] = reg.snapshot()
+
+    Scopes nest (innermost wins) and the process-wide default registry
+    is untouched throughout.
+    """
+    reg = MetricsRegistry() if registry is None else registry
+    _REGISTRY_STACK.append(reg)
+    try:
+        yield reg
+    finally:
+        # Remove *this* scope even if an inner scope leaked; never pop
+        # the process-wide default at the bottom of the stack.
+        for i in range(len(_REGISTRY_STACK) - 1, 0, -1):
+            if _REGISTRY_STACK[i] is reg:
+                del _REGISTRY_STACK[i]
+                break

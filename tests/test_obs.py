@@ -319,3 +319,61 @@ def test_batched_telemetry_matches_per_lane_iters_on_ragged_batch():
                     impl="reference").value == 1
     g = reg.peek("solver.last_final_delta", kind="flat")
     assert g.value == pytest.approx(float(np.max(res.final_delta)))
+
+
+# ---------------------------------------------------------------------------
+# Scoped registries (the sweep harness's per-cell capture)
+# ---------------------------------------------------------------------------
+
+def test_scoped_registry_captures_without_touching_default():
+    base = obs.default_registry()
+    base.reset()
+    with obs.scoped_registry() as reg:
+        assert obs.default_registry() is reg
+        assert reg is not base
+        obs.default_registry().counter("inner").inc(3)
+    assert obs.default_registry() is base
+    assert reg.peek("inner").value == 3
+    assert base.peek("inner") is None
+
+
+def test_scoped_registry_nests_innermost_wins():
+    with obs.scoped_registry() as outer:
+        outer_active = obs.default_registry()
+        with obs.scoped_registry() as inner:
+            obs.default_registry().counter("n").inc()
+        assert obs.default_registry() is outer_active is outer
+        assert inner.peek("n").value == 1
+        assert outer.peek("n") is None
+
+
+def test_scoped_registry_accepts_caller_registry():
+    mine = obs.MetricsRegistry()
+    with obs.scoped_registry(mine) as reg:
+        assert reg is mine
+        obs.default_registry().gauge("g").set(2.5)
+    assert mine.peek("g").value == 2.5
+
+
+def test_scoped_registry_pops_on_exception():
+    base = obs.default_registry()
+    with pytest.raises(RuntimeError):
+        with obs.scoped_registry():
+            raise RuntimeError("boom")
+    assert obs.default_registry() is base
+
+
+def test_scoped_registry_captures_solver_telemetry():
+    base = obs.default_registry()
+    base.reset()
+    img = phantom.phantom_slice(32, 32, noise=3.0, seed=0)[0]
+    prob = SV.histogram_problem(img.ravel().astype(np.float32), CFG)
+    with obs.scoped_registry() as reg:
+        res = SV.solve(prob, CFG)
+    h = reg.peek("solver.iters", kind="flat")
+    assert h is not None and h.count == 1
+    assert h.vmax == float(res.n_iters)
+    # nothing leaked into the process-wide registry (reset() keeps the
+    # key registered from earlier tests, so check the count, not None)
+    leaked = base.peek("solver.iters", kind="flat")
+    assert leaked is None or leaked.count == 0

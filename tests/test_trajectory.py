@@ -1,0 +1,229 @@
+"""Trajectory ledger: known-trajectory reproduction over the committed
+BENCH records, per-metric diff policies (improve / regress / missing /
+tiny-vs-full / absolute bounds), and baseline auto-resolution."""
+import copy
+import json
+import os
+
+import pytest
+
+from repro.analysis import trajectory
+
+OUT_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "benchmarks", "out")
+
+needs_ledger = pytest.mark.skipif(
+    not trajectory.ledger_paths(OUT_DIR),
+    reason="no committed BENCH_pr*.json ledger")
+
+
+# ---------------------------------------------------------------------------
+# The committed ledger reproduces the known trajectory
+# ---------------------------------------------------------------------------
+
+@needs_ledger
+def test_series_reproduces_known_engine_overhead_trajectory():
+    """The repo's headline perf story — engine overhead 26x at PR 4
+    down to ~2.9x at PR 5 — must fall out of the normalized series,
+    including the PR 4 record that predates the explicit overhead key
+    (the extractor derives it from engine_s / batched_s)."""
+    ss = trajectory.series(trajectory.load_ledger(OUT_DIR))
+    pts = dict(ss["engine_overhead_b64"])
+    assert pts[4] == pytest.approx(26.0, rel=0.05)
+    assert pts[5] == pytest.approx(2.9, rel=0.05)
+    assert all(v < 6.0 for pr, v in pts.items()
+               if pr >= 5 and v is not None)
+
+
+@needs_ledger
+def test_series_reproduces_known_spatial_speedup_trajectory():
+    ss = trajectory.series(trajectory.load_ledger(OUT_DIR))
+    pts = dict(ss["spatial_batched_speedup"])
+    assert pts[5] == pytest.approx(6.9, rel=0.05)
+    assert pts[7] == pytest.approx(9.7, rel=0.05)
+    assert all(v >= 5.0 for v in pts.values() if v is not None)
+
+
+@needs_ledger
+def test_series_keeps_gaps_for_pre_metric_records():
+    """tracing_overhead_ratio only exists from PR 6 on; older records
+    contribute None instead of being dropped from the series."""
+    ss = trajectory.series(trajectory.load_ledger(OUT_DIR))
+    pts = dict(ss["tracing_overhead_ratio"])
+    if 4 in pts:
+        assert pts[4] is None
+    assert any(v is not None for pr, v in pts.items() if pr >= 6)
+
+
+@needs_ledger
+def test_diff_of_adjacent_committed_records_passes():
+    ledger = trajectory.load_ledger(OUT_DIR)
+    if len(ledger) < 2:
+        pytest.skip("ledger has a single record")
+    (_, base), (_, cur) = ledger[-2], ledger[-1]
+    result = trajectory.diff(base, cur)
+    assert result.ok, result.report()
+    assert len(result.verdicts) == len(trajectory.METRICS)
+
+
+# ---------------------------------------------------------------------------
+# diff policies on synthetic records
+# ---------------------------------------------------------------------------
+
+def _bench(pr=7, tiny=False, engine_s=0.006, batched_s=0.0015,
+           tracing=0.95, parity=0.0, spatial_speedup=9.0):
+    return {
+        "pr": pr, "tiny": tiny,
+        "batched_throughput": {
+            "histogram": {
+                "64": {"engine_s": engine_s, "batched_s": batched_s,
+                       "engine_overhead_vs_batched":
+                           engine_s / batched_s,
+                       "speedup_batched_vs_seq": 200.0},
+                "tracing_overhead_ratio": tracing,
+                "convergence": {"mean_iters": 3.7},
+            },
+            "spatial": {"engine_s": 0.0012, "batched_s": 0.0008,
+                        "engine_overhead_vs_batched": 1.5,
+                        "speedup_batched_vs_one_at_a_time":
+                            spatial_speedup},
+        },
+        "spatial_fcm": {"levels": [
+            {"fits": {"plain": {"dsc": {"WM": 0.1}},
+                      "spatial_ref": {"dsc": {"WM": 0.93}}}}]},
+        "superpixel_fcm": {"speedup_fit": 30.0,
+                           "dsc_parity_max_delta": parity},
+    }
+
+
+def test_diff_identical_records_is_ok():
+    result = trajectory.diff(_bench(), _bench(pr=8))
+    assert result.ok
+    assert not any(v.status in ("regressed", "missing_current")
+                   for v in result.verdicts)
+
+
+def test_diff_fails_synthetic_time_regression():
+    result = trajectory.diff(_bench(), _bench(pr=8, engine_s=0.06))
+    assert not result.ok
+    failed = {v.metric for v in result.failures}
+    assert "engine_s_b64" in failed
+    assert "engine_overhead_b64" in failed
+
+
+def test_diff_reports_improvements():
+    result = trajectory.diff(_bench(), _bench(pr=8, engine_s=0.003))
+    assert result.ok
+    improved = {v.metric for v in result.verdicts
+                if v.status == "improved"}
+    assert "engine_s_b64" in improved
+
+
+def test_diff_fails_on_dropped_metric():
+    cur = _bench(pr=8)
+    del cur["superpixel_fcm"]
+    result = trajectory.diff(_bench(), cur)
+    assert not result.ok
+    by_metric = {v.metric: v for v in result.verdicts}
+    assert by_metric["superpixel_speedup_fit"].status == "missing_current"
+    assert by_metric["superpixel_speedup_fit"].fatal
+
+
+def test_on_missing_warn_policy_demotes_dropped_metric():
+    cur = _bench(pr=8)
+    del cur["superpixel_fcm"]
+    result = trajectory.diff(_bench(), cur,
+                             trajectory.Policy(on_missing="warn"))
+    assert result.ok
+    assert any(v.status == "missing_current" and not v.fatal
+               for v in result.verdicts)
+
+
+def test_tiny_run_skips_relative_time_gates_but_keeps_bounds():
+    """A --tiny CI record vs a full baseline: wall-clock regressions
+    are not_comparable (cannot fail), but the absolute tracing-overhead
+    ceiling still gates."""
+    # 100x "slower" on both sides of the ratio, so the absolute
+    # overhead ceiling is untouched and only wall-clock worsens
+    cur = _bench(pr=8, tiny=True, engine_s=0.6, batched_s=0.15)
+    result = trajectory.diff(_bench(), cur)
+    by_metric = {v.metric: v for v in result.verdicts}
+    assert by_metric["engine_s_b64"].status == "not_comparable"
+    assert result.ok
+
+    breached = _bench(pr=8, tiny=True, tracing=2.0)  # ceiling 1.25
+    result = trajectory.diff(_bench(), breached)
+    assert not result.ok
+    assert any(v.metric == "tracing_overhead_ratio"
+               and v.status == "bound_breach" for v in result.failures)
+
+
+def test_quality_metrics_gate_even_on_tiny_runs():
+    cur = _bench(pr=8, tiny=True, parity=0.06)       # ceiling is 0.05
+    result = trajectory.diff(_bench(), cur)
+    assert any(v.metric == "superpixel_dsc_parity" and v.fatal
+               and v.status == "bound_breach" for v in result.verdicts)
+    assert trajectory.diff(_bench(), _bench(pr=8, parity=0.04)).ok
+
+
+def test_absolute_floor_breach_fails():
+    result = trajectory.diff(_bench(), _bench(pr=8, spatial_speedup=3.0))
+    assert any(v.metric == "spatial_batched_speedup"
+               and v.status == "bound_breach" and v.fatal
+               for v in result.verdicts)
+
+
+def test_slack_scale_loosens_relative_gates():
+    # 2x slower wall clock at the same overhead ratio
+    base = _bench()
+    cur = _bench(pr=8, engine_s=0.012, batched_s=0.003)
+    assert not trajectory.diff(base, cur).ok
+    loose = trajectory.Policy(slack_scale=10.0)
+    assert trajectory.diff(base, cur, loose).ok
+
+
+def test_new_metric_in_current_is_not_fatal():
+    base = _bench()
+    del base["superpixel_fcm"]
+    result = trajectory.diff(base, _bench(pr=8))
+    by_metric = {v.metric: v for v in result.verdicts}
+    assert by_metric["superpixel_speedup_fit"].status == "new_metric"
+    assert result.ok
+
+
+# ---------------------------------------------------------------------------
+# Baseline resolution
+# ---------------------------------------------------------------------------
+
+def _write(tmp_path, pr):
+    p = tmp_path / f"BENCH_pr{pr}.json"
+    p.write_text(json.dumps({"pr": pr}))
+    return str(p)
+
+
+def test_resolve_baseline_picks_newest_before_current(tmp_path):
+    _write(tmp_path, 3)
+    p5 = _write(tmp_path, 5)
+    p9 = _write(tmp_path, 9)
+    assert trajectory.resolve_baseline(str(tmp_path), before=9) == p5
+    assert trajectory.resolve_baseline(str(tmp_path)) == p9
+
+
+def test_resolve_baseline_empty_ledger_is_none(tmp_path):
+    assert trajectory.resolve_baseline(str(tmp_path), before=8) is None
+
+
+@needs_ledger
+def test_resolve_baseline_on_committed_ledger():
+    path = trajectory.resolve_baseline(OUT_DIR, before=10 ** 6)
+    assert path is not None and os.path.exists(path)
+
+
+def test_derived_overhead_matches_explicit_key():
+    """Schema evolution: a record without the explicit overhead key
+    yields the same value via engine_s / batched_s."""
+    old = _bench()
+    del old["batched_throughput"]["histogram"]["64"][
+        "engine_overhead_vs_batched"]
+    assert (trajectory._engine_overhead(old)
+            == pytest.approx(trajectory._engine_overhead(_bench())))
