@@ -27,7 +27,7 @@ import sys
 from typing import Any, Dict, List
 
 TOP_KEYS = ("pr", "backend", "tiny", "batched_throughput", "spatial_fcm",
-            "superpixel_fcm", "roofline", "sweep")
+            "superpixel_fcm", "roofline", "sweep", "load_gen")
 
 CELL_KEYS = ("kind", "impl", "backend", "shape", "flops", "bytes",
              "wall_s", "achieved_flops_per_s", "achieved_bytes_per_s",
@@ -94,7 +94,13 @@ SWEEP_CELL_KEYS = {
     "solver": ("metrics", "latency", "convergence"),
     "serving": ("metrics", "latency", "convergence"),
     "kernel": ("kernel",),
+    "distributed": ("metrics", "parity"),
 }
+
+#: Distributed (shard_map, 8 fake host devices) solver modes the sweep
+#: must measure: batch-axis sharding on a ragged histogram batch, and
+#: pixel-axis sharding of one image (flat + histogram-compressed).
+REQUIRED_DIST_MODES = ("batch_hist", "pixel_flat", "pixel_hist")
 
 SOLVER_METRIC_KEYS = ("wall_s", "fit_s", "compress_s", "per_image_s",
                       "n_iters")
@@ -157,6 +163,17 @@ def check_cell(cell: dict, problems: List[str]) -> None:
                 if k not in kcell:
                     problems.append(f"cell {cid}: kernel row missing "
                                     f"{k!r}")
+    elif family == "distributed":
+        metrics = cell.get("metrics") or {}
+        for k in ("wall_s", "per_image_s"):
+            if k not in metrics:
+                problems.append(f"cell {cid}: metrics missing {k!r}")
+        parity = cell.get("parity")
+        if not isinstance(parity, dict) or "ok" not in parity:
+            problems.append(f"cell {cid}: parity block missing 'ok'")
+        elif not parity["ok"]:
+            problems.append(f"cell {cid}: distributed parity failed: "
+                            f"{parity}")
 
 
 def _check_sweep(section, problems: List[str]) -> None:
@@ -204,6 +221,13 @@ def _check_sweep(section, problems: List[str]) -> None:
                     - variants_ok):
         problems.append(f"sweep: no ok solver cell for variant {v!r}")
 
+    dist_ok = {c["axes"]["mode"] for c in cells
+               if c.get("family") == "distributed"
+               and c.get("status") == "ok"}
+    for mode in sorted(set(REQUIRED_DIST_MODES) - dist_ok):
+        problems.append(f"sweep: no ok distributed cell for mode "
+                        f"{mode!r}")
+
 
 def check_sweep_section(section: dict) -> None:
     """Raise ValueError naming every sweep-section schema violation."""
@@ -211,6 +235,70 @@ def check_sweep_section(section: dict) -> None:
     _check_sweep(section, problems)
     if problems:
         raise ValueError("sweep schema violations:\n  "
+                         + "\n  ".join(problems))
+
+
+# ---------------------------------------------------------------------------
+# Load-generator section (open-loop Poisson arrivals vs the async engine)
+# ---------------------------------------------------------------------------
+
+#: Per-rate record of one open-loop arrival sweep point.
+RATE_KEYS = ("offered_qps", "achieved_qps", "completed", "p50_s",
+             "p99_s", "queue_depth", "batch_occupancy")
+
+SYNC_BASELINE_KEYS = ("qps", "p50_s", "p99_s", "n_requests")
+
+
+def _check_load_gen(section, problems: List[str]) -> None:
+    """The load_gen section must carry the sync baseline, every swept
+    arrival rate with full latency/occupancy telemetry, the sustained
+    point the gate judged, and the gate verdict itself."""
+    if not isinstance(section, dict):
+        problems.append("load_gen: section missing")
+        return
+    for k in ("tiny", "backend", "devices", "route", "sync_baseline",
+              "rates", "sustained", "qps_ratio_vs_sync", "gate"):
+        if k not in section:
+            problems.append(f"load_gen: missing {k!r}")
+    sb = section.get("sync_baseline")
+    if not isinstance(sb, dict):
+        problems.append("load_gen: sync_baseline block missing")
+    else:
+        for k in SYNC_BASELINE_KEYS:
+            if k not in sb:
+                problems.append(f"load_gen: sync_baseline missing {k!r}")
+    rates = section.get("rates")
+    if not isinstance(rates, list) or not rates:
+        problems.append("load_gen: rates sweep empty")
+        rates = []
+    for i, rate in enumerate(rates):
+        for k in RATE_KEYS:
+            if k not in rate:
+                problems.append(f"load_gen.rates[{i}]: missing {k!r}")
+    sustained = section.get("sustained")
+    if not isinstance(sustained, dict):
+        problems.append("load_gen: sustained block missing")
+    else:
+        for k in RATE_KEYS:
+            if k not in sustained:
+                problems.append(f"load_gen.sustained: missing {k!r}")
+    gate = section.get("gate")
+    if not isinstance(gate, dict):
+        problems.append("load_gen: gate block missing")
+    else:
+        for k in ("enforced", "min_ratio", "ok"):
+            if k not in gate:
+                problems.append(f"load_gen.gate: missing {k!r}")
+        if gate.get("enforced") and not gate.get("ok"):
+            problems.append(f"load_gen: gate failed: {gate}")
+
+
+def check_load_gen_section(section: dict) -> None:
+    """Raise ValueError naming every load_gen-section schema violation."""
+    problems: List[str] = []
+    _check_load_gen(section, problems)
+    if problems:
+        raise ValueError("load_gen schema violations:\n  "
                          + "\n  ".join(problems))
 
 
@@ -281,18 +369,25 @@ def validate_superpixel_report(report: dict) -> None:
 def validate(bench: dict) -> None:
     """Raise ValueError naming every schema violation (None when OK).
 
-    ``sweep`` is required from pr >= 8 (older committed ledger entries
-    predate the sweep harness and stay valid as-written)."""
+    ``sweep`` is required from pr >= 8 and ``load_gen`` from pr >= 9
+    (older committed ledger entries predate those harnesses and stay
+    valid as-written)."""
     problems: List[str] = []
-    required = TOP_KEYS if bench.get("pr", 0) >= 8 else tuple(
-        k for k in TOP_KEYS if k != "sweep")
-    for k in required:
-        if k not in bench:
+    pr = bench.get("pr", 0)
+    optional = set()
+    if pr < 8:
+        optional.add("sweep")
+    if pr < 9:
+        optional.add("load_gen")
+    for k in TOP_KEYS:
+        if k not in optional and k not in bench:
             problems.append(f"missing top-level key {k!r}")
     if "roofline" in bench:
         _check_roofline(bench["roofline"], problems)
     if "sweep" in bench:
         _check_sweep(bench["sweep"], problems)
+    if "load_gen" in bench:
+        _check_load_gen(bench["load_gen"], problems)
     bt = bench.get("batched_throughput", {})
     hist = bt.get("histogram", {}) if isinstance(bt, dict) else {}
     _check_latency(hist.get("latency"), "batched_throughput.histogram",
@@ -320,6 +415,9 @@ def validate_path(path: str) -> str:
     if name == "superpixel_fcm.json":
         validate_superpixel_report(payload)
         return "superpixel_fcm report"
+    if name.startswith("load_gen") and name.endswith(".json"):
+        check_load_gen_section(payload)
+        return "load_gen section"
     if os.path.basename(os.path.dirname(path)) == "sweep":
         validate_cell(payload)
         return "sweep cell"

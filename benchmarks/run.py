@@ -1,13 +1,15 @@
 """Benchmark harness: one module per paper table/figure. Prints
 ``name,us_per_call,derived`` CSV lines and writes the consolidated
-``benchmarks/out/BENCH_pr8.json`` aggregating the batched / spatial /
+``benchmarks/out/BENCH_pr9.json`` aggregating the batched / spatial /
 superpixel serving numbers (engine-overhead + tracing-overhead gates,
 per-route latency percentiles, convergence telemetry), the declarative
-variant-zoo sweep, and the roofline-vs-achieved kernel report,
-validates the result against ``bench_schema.py``, renders the
-accuracy-vs-speed frontier and perf-trajectory figures, and
-regression-gates EVERY ledger metric through
-``repro.analysis.trajectory.diff`` against the newest committed
+variant-zoo sweep (now including the 8-fake-device distributed solver
+cells), the roofline-vs-achieved kernel report, and the async serving
+load-generator section (open-loop Poisson QPS/p99 sweep + the
+continuous-batching 3x gate), validates the result against
+``bench_schema.py``, renders the accuracy-vs-speed frontier and
+perf-trajectory figures, and regression-gates EVERY ledger metric
+through ``repro.analysis.trajectory.diff`` against the newest committed
 ``BENCH_pr*.json`` — so the perf trajectory is machine-readable AND
 regression-guarded per-metric across PRs (not just one hardcoded B=64
 engine-seconds check).
@@ -21,6 +23,8 @@ engine-seconds check).
                        cells (always runs: BENCH needs full coverage)
   batched_throughput — beyond-paper: images/sec vs batch size for the
                        histogram AND batched-spatial serving paths
+  load_gen           — beyond-paper: open-loop Poisson load on the
+                       async admission front door vs the sync baseline
   spatial_fcm        — FCM_S noise-robustness + wall clock
   superpixel_fcm     — pixels-vs-superpixels compression ladder
 
@@ -36,7 +40,7 @@ import os
 #: ``BENCH_pr{CURRENT_PR}.json`` and the regression baseline
 #: auto-resolves to the newest committed ``BENCH_pr*.json`` with an
 #: older pr number (no more hand-bumping a hardcoded baseline path).
-CURRENT_PR = 8
+CURRENT_PR = 9
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
 FIG_DIR = os.path.join(OUT_DIR, "figures")
@@ -101,12 +105,12 @@ def main(argv=None):
                     help="CI smoke: small images, single timing reps")
     ap.add_argument("--skip-paper-tables", action="store_true",
                     help="run only the serving/sweep sections that feed "
-                         "BENCH_pr8.json")
+                         "the BENCH record")
     args = ap.parse_args(argv)
 
     import jax
 
-    from . import (batched_throughput, bench_schema, fig7_dsc,
+    from . import (batched_throughput, bench_schema, fig7_dsc, load_gen,
                    roofline_report, spatial_fcm, superpixel_fcm, sweep,
                    table1_variants, table3_speedup)
 
@@ -130,6 +134,7 @@ def main(argv=None):
         spatial_argv += ["--size", "48"]
     spatial = spatial_fcm.main(spatial_argv)
     superpixel = superpixel_fcm.main(["--tiny"] if args.tiny else [])
+    load = load_gen.run_load_gen(tiny=args.tiny)
 
     bench = {
         "pr": CURRENT_PR,
@@ -145,8 +150,12 @@ def main(argv=None):
         "superpixel_fcm": superpixel,
         # roofline-vs-achieved, one cell per registered kernel impl
         "roofline": roofline,
-        # declarative variant-zoo grid (solver/serving/kernel families)
+        # declarative variant-zoo grid (solver/serving/kernel/
+        # distributed families)
         "sweep": sweep_section,
+        # async serving under open-loop Poisson load: sustained QPS,
+        # p50/p99, queue depth, batch occupancy + the 3x gate
+        "load_gen": load,
     }
     bench_schema.validate(bench)
     print("# BENCH schema OK")

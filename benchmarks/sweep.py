@@ -14,7 +14,7 @@ roofline achieved-vs-bound probe for every registered (kind, impl)
 dispatch cell. Skipped cells are recorded WITH their reason: the grid
 accounts for every declared combination, nothing is silently dropped.
 
-Three families:
+Four families:
 
 * ``solver``  — variant x backend x size x batch x seed through the one
   solver entry point; batch=1 cells also score per-class DSC against
@@ -27,6 +27,10 @@ Three families:
 * ``kernel``  — one roofline achieved-vs-bound cell per (kind, impl) in
   the ``kernels/ops.py`` dispatch registry (reuses the
   ``roofline_report`` probes; coverage asserted by ``bench_schema``).
+* ``distributed`` — shard_map solver cells under 8 fake host devices
+  (subprocess, see ``_dist_cells.py``): batch-axis sharding on a ragged
+  histogram batch plus pixel-axis sharding of one image, each with a
+  parity block vs its single-device twin.
 
 Each cell record is validated against ``bench_schema.validate_cell``
 before it is emitted — one JSON record per cell under
@@ -384,6 +388,49 @@ def _run_serving_cell(cell: Dict[str, Any], tiny: bool) -> Dict[str, Any]:
             "convergence": s["convergence"][route]}
 
 
+def _distributed_cells(tiny: bool) -> List[Dict[str, Any]]:
+    """The multi-device family: shard_map solver cells measured in a
+    subprocess under ``--xla_force_host_platform_device_count=8`` (the
+    flag must precede jax init, so the parent process cannot host
+    them). Each mode carries a parity block against its single-device
+    twin; a dead subprocess becomes one error cell per required mode so
+    the schema's coverage check fails loudly."""
+    import subprocess
+    import sys as _sys
+
+    try:
+        from . import bench_schema
+    except ImportError:
+        import bench_schema
+
+    script = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "_dist_cells.py")
+    cmd = [_sys.executable, script] + (["--tiny"] if tiny else [])
+    try:
+        out = subprocess.run(cmd, capture_output=True, text=True,
+                             timeout=1800, check=True)
+        payload = json.loads(out.stdout.strip().splitlines()[-1])
+    except Exception as e:
+        return [{"cell_id": cell_id("distributed",
+                                    {"mode": mode, "devices": 8}),
+                 "family": "distributed",
+                 "axes": {"mode": mode, "devices": 8},
+                 "status": "error", "error": repr(e)}
+                for mode in bench_schema.REQUIRED_DIST_MODES]
+    cells = []
+    for row in payload["cells"]:
+        axes = {"mode": row["mode"], "devices": payload["devices"]}
+        cells.append({
+            "cell_id": cell_id("distributed", axes),
+            "family": "distributed", "axes": axes, "status": "ok",
+            "metrics": {"wall_s": row["wall_s"],
+                        "per_image_s": row["per_image_s"],
+                        "batch": row["batch"]},
+            "parity": row["parity"],
+        })
+    return cells
+
+
 def _kernel_cells(tiny: bool) -> Tuple[List[Dict[str, Any]], dict]:
     """The registry-coverage family: every (kind, impl) dispatch cell as
     a roofline achieved-vs-bound probe (also writes
@@ -445,6 +492,10 @@ def run_sweep(tiny: bool = False, write_cells: bool = True,
 
     kcells, roofline = _kernel_cells(tiny)
     cells.extend(kcells)
+    dcells = _distributed_cells(tiny)
+    cells.extend(dcells)
+    for rec in dcells:
+        _emit_cell(rec)
 
     section = {
         "name": "fcm-variant-zoo",
@@ -460,6 +511,8 @@ def run_sweep(tiny: bool = False, write_cells: bool = True,
             "kernel_cells": sorted(f"{c['axes']['kind']}/{c['axes']['impl']}"
                                    for c in cells
                                    if c["family"] == "kernel"),
+            "distributed_modes": sorted({c["axes"]["mode"] for c in cells
+                                         if c["family"] == "distributed"}),
         },
         "cells": obs.json_safe(cells),
         "skipped": skipped,

@@ -138,6 +138,22 @@ def _mean_iters(bench):
     return float(v) if v is not None else None
 
 
+def _load_sustained(bench):
+    v = (bench.get("load_gen", {}).get("sustained") or {}
+         ).get("achieved_qps")
+    return float(v) if v is not None else None
+
+
+def _load_p99(bench):
+    v = (bench.get("load_gen", {}).get("sustained") or {}).get("p99_s")
+    return float(v) if v is not None else None
+
+
+def _load_ratio(bench):
+    v = bench.get("load_gen", {}).get("qps_ratio_vs_sync")
+    return float(v) if v is not None else None
+
+
 @dataclasses.dataclass(frozen=True)
 class Metric:
     """One named series over the BENCH ledger.
@@ -200,6 +216,17 @@ METRICS: Tuple[Metric, ...] = (
            rel_slack=0.3, ceiling=1.25),
     Metric("mean_iters_b64", _mean_iters, "lower", kind="quality",
            rel_slack=0.5),
+    # Serving load-gen (PR 9): sustained throughput under the explicit
+    # p99 budget, that point's p99, and the headline continuous-batching
+    # claim. The ratio's floor mirrors the tiny gate in
+    # benchmarks/load_gen.py (2.0 — the full-size artifact carries the
+    # 3x claim through load_gen's own in-process gate), so even a tiny
+    # CI record fails here if batching stops paying for itself.
+    Metric("load_sustained_qps", _load_sustained, "higher", kind="time",
+           rel_slack=0.5),
+    Metric("load_p99_s", _load_p99, "lower", kind="time", rel_slack=1.0),
+    Metric("load_qps_ratio_vs_sync", _load_ratio, "higher", kind="ratio",
+           rel_slack=0.6, floor=2.0),
 )
 
 _BY_NAME = {m.name: m for m in METRICS}

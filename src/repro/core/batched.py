@@ -140,13 +140,18 @@ def build_sharded_batched_fit(mesh: Mesh,
     c, m = cfg.n_clusters, cfg.m
     mi = cfg.max_iters if max_iters is None else max_iters
 
-    def local_fit(hists):
-        v, delta, iters, _ = SV._flat_batched_loop(
-            hist_rows(hists)[..., None], hists, c, m, cfg.eps, mi)
+    def local_fit(hists, active):
+        # Padding lanes (active=False) start frozen in the masked loop:
+        # they keep v0, report 0 iterations and 0.0 residual, and — the
+        # point — cannot extend the shared trip count past the real
+        # lanes' own convergence, so a ragged batch's per-lane counts
+        # match an unpadded solve_batched exactly.
+        v, delta, iters, _ = SV._flat_batched_loop_masked(
+            hist_rows(hists)[..., None], hists, active, c, m, cfg.eps, mi)
         return v[..., 0], delta, iters
 
     fn = shard_map(local_fit, mesh=mesh,
-                   in_specs=(P(axes, None),),
+                   in_specs=(P(axes, None), P(axes)),
                    out_specs=(P(axes, None), bspec, bspec))
     return jax.jit(fn)
 
@@ -157,13 +162,17 @@ def fit_batched_sharded(hists, mesh: Mesh,
     hists = jnp.asarray(hists, jnp.float32)
     b = hists.shape[0]
     n_pad = (-b) % mesh.size
+    active = jnp.ones((b,), bool)
     if n_pad:
-        # Pad lanes with a uniform histogram; they converge and are dropped.
+        # Pad lanes carry a uniform histogram payload but are masked
+        # inactive, so they never iterate and are dropped on return.
         pad = jnp.ones((n_pad, hists.shape[1]), jnp.float32)
         hists = jnp.concatenate([hists, pad])
+        active = jnp.concatenate([active, jnp.zeros((n_pad,), bool)])
     sharding = NamedSharding(mesh, P(mesh_axes(mesh), None))
     hists = jax.device_put(hists, sharding)
-    v, delta, iters = build_sharded_batched_fit(mesh, cfg)(hists)
+    active = jax.device_put(active, NamedSharding(mesh, P(mesh_axes(mesh))))
+    v, delta, iters = build_sharded_batched_fit(mesh, cfg)(hists, active)
     return BatchedFCMResult(centers=v[:b], n_iters=np.asarray(iters)[:b],
                             final_delta=np.asarray(delta)[:b],
                             total_iters=int(np.max(np.asarray(iters)[:b]))

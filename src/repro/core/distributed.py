@@ -53,8 +53,15 @@ def mesh_axes(mesh: Mesh) -> Tuple[str, ...]:
 
 
 def pad_to_devices(x, n_devices: int):
-    """Pad (N,)->(N', ) with N' % n_devices == 0; returns (x_pad, w_pad)."""
-    import numpy as np
+    """Pad (N,)->(N', ) with N' % n_devices == 0; returns (x_pad, w_pad).
+
+    This masks padded *pixels* of one image: zero weights drop them from
+    every weighted partial sum, so they cannot shift centers or the
+    convergence test. Padded batch *lanes* (whole fake images added to
+    round a ragged batch up to the mesh size) are masked differently —
+    via the ``active`` mask of ``solver.masked_while_centers``, which
+    freezes them at iteration 0 so they can't perturb per-lane or total
+    iteration counts (see ``batched.fit_batched_sharded``)."""
     n = x.shape[0]
     n_pad = (-n) % n_devices
     xp = jnp.concatenate([jnp.asarray(x, jnp.float32),

@@ -341,12 +341,20 @@ def while_centers(step, v0, tol, max_iters):
     return jax.lax.while_loop(cond, body, state)
 
 
-def masked_while_centers(step, v0, tol, max_iters):
+def masked_while_centers(step, v0, tol, max_iters, active=None):
     """Per-lane-masked batched fixed point: run ``v' = step(v)``
     (``(B, cd) -> (B, cd)``) until every lane's ``max|v' - v| < tol[b]``
     or ``max_iters``, inside ONE while_loop. Converged lanes freeze
     (centers verbatim, iteration counters stop), so each lane's
     trajectory is identical to a solo :func:`while_centers` run.
+
+    ``active`` is an optional ``(B,)`` bool mask naming the *real*
+    lanes: inactive lanes (batch padding up to a bucket or mesh size)
+    start frozen — they keep ``v0`` verbatim, report 0 iterations and a
+    0.0 residual, and can neither stretch the loop's trip count nor
+    perturb any convergence statistic. ``None`` means every lane is
+    real (the pre-existing behavior, bitwise).
+
     Returns ``(v, delta (B,), iters (B,), total_it)``."""
     b = v0.shape[0]
 
@@ -364,10 +372,16 @@ def masked_while_centers(step, v0, tol, max_iters):
         done = jnp.logical_or(done, d < tol)
         return v_new, delta, iters, done, it + 1
 
+    if active is None:
+        done0 = jnp.zeros((b,), bool)
+        delta0 = jnp.full((b,), jnp.inf, jnp.float32)
+    else:
+        done0 = jnp.logical_not(jnp.asarray(active, bool))
+        delta0 = jnp.where(done0, 0.0, jnp.inf).astype(jnp.float32)
     state = (v0,
-             jnp.full((b,), jnp.inf, jnp.float32),
+             delta0,
              jnp.zeros((b,), jnp.int32),
-             jnp.zeros((b,), bool),
+             done0,
              jnp.asarray(0, jnp.int32))
     v, delta, iters, done, it = jax.lax.while_loop(cond, body, state)
     return v, delta, iters, it
@@ -501,7 +515,8 @@ def _stencil_loop_resident(xpad, vpad, v0, m, alpha, neighbors, tol,
 
 
 def flat_batched_solve(feats, w, c, m, eps, max_iters,
-                       impl: str = "reference", interpret: bool = False):
+                       impl: str = "reference", interpret: bool = False,
+                       active=None):
     """Traceable batched flat solve: feats (B, K, D), w (B, K) ->
     (v (B, c, D), delta (B,), iters (B,), total). The core both jitted
     loop drivers wrap, exported un-jitted so larger device programs
@@ -512,7 +527,9 @@ def flat_batched_solve(feats, w, c, m, eps, max_iters,
     lane's complete convergence loop inside one whole-solve kernel
     (VMEM-held vs HBM-streamed rows; each lane stops at its own
     convergence point, so trajectories match solo solves either
-    way)."""
+    way). ``active`` is the optional (B,) real-lane mask of
+    :func:`masked_while_centers` — padding lanes freeze at iteration 0
+    (reference impl only; the whole-solve kernels have no lane mask)."""
     from repro.kernels import ops as kops
     from repro.kernels import fcm_resident as KR
     b, _, d = feats.shape
@@ -521,6 +538,10 @@ def flat_batched_solve(feats, w, c, m, eps, max_iters,
     tol = _tol_from_range(jnp.max(hi - lo, axis=1), eps)
 
     if impl in ("resident", "resident_streamed"):
+        if active is not None:
+            raise ValueError("active lane masks are supported by the "
+                             "reference impl only (the whole-solve "
+                             "kernels run every lane)")
         rows_multiple = (KR.STREAM_CHUNK_ROWS
                          if impl == "resident_streamed" else 1)
         x4, w3 = kops.tile_rows_batched(feats, w,
@@ -536,7 +557,7 @@ def flat_batched_solve(feats, w, c, m, eps, max_iters,
         return vstep(feats, w, vflat.reshape(b, c, d), m).reshape(b, c * d)
 
     v, delta, iters, it = masked_while_centers(
-        flat_step, v0.reshape(b, c * d), tol, max_iters)
+        flat_step, v0.reshape(b, c * d), tol, max_iters, active=active)
     return v.reshape(b, c, d), delta, iters, it
 
 
@@ -544,6 +565,16 @@ def flat_batched_solve(feats, w, c, m, eps, max_iters,
 def _flat_batched_loop(feats, w, c, m, eps, max_iters):
     """feats (B, K, D), w (B, K) -> (v (B, c, D), delta, iters, total)."""
     return flat_batched_solve(feats, w, c, m, eps, max_iters)
+
+
+@partial(jax.jit, static_argnames=("c", "m", "max_iters"))
+def _flat_batched_loop_masked(feats, w, active, c, m, eps, max_iters):
+    """Ragged-batch twin of :func:`_flat_batched_loop`: ``active`` (B,)
+    bool freezes padding lanes at iteration 0 so they can't perturb the
+    shared-loop trip count (the real lanes' iters/delta/total match an
+    unpadded solve exactly)."""
+    return flat_batched_solve(feats, w, c, m, eps, max_iters,
+                              active=active)
 
 
 @partial(jax.jit, static_argnames=("c", "m", "max_iters", "interpret"))

@@ -1,5 +1,11 @@
-"""Serving launcher: loads (or random-inits) params for an arch, then
-runs batched generation through the ServeEngine.
+"""LM serving: the static-batch token engine + its CLI launcher.
+
+:class:`ServeEngine` (prefill + step-synchronous decode over the jitted
+``lm.decode_step``) lives here with its launcher — it serves the LM side
+of the repo and shares nothing with the image-segmentation serving stack
+(``repro.serving.fcm_engine``), which owns the route registry, async
+admission, and mesh dispatch. ``repro.serving.ServeEngine`` remains as a
+deprecated re-export.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
       --reduced --batch 4 --prompt-len 16 --new-tokens 32
@@ -8,14 +14,62 @@ from __future__ import annotations
 
 import argparse
 import sys
+from typing import Dict, Optional
 
 import numpy as np
 import jax
+import jax.numpy as jnp
 
 from repro import configs
+from repro.configs.base import ModelConfig
 from repro.models import lm
-from repro.serving import ServeEngine
 from repro.training import checkpoint as ckpt
+
+
+class ServeEngine:
+    """Static-batch engine: one prefill for the whole batch, then
+    step-synchronous decode. ``max_len`` bounds the KV cache."""
+
+    def __init__(self, cfg: ModelConfig, params, max_len: int,
+                 batch_size: int):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.batch_size = batch_size
+        self._prefill = jax.jit(
+            lambda p, t, c, kw: lm.prefill(p, t, c, cfg, **kw))
+        self._step = jax.jit(
+            lambda p, t, c, pos: lm.decode_step(p, t, c, pos, cfg))
+
+    def generate(self, prompts: np.ndarray, n_new: int,
+                 temperature: float = 0.0, seed: int = 0,
+                 extra_inputs: Optional[Dict] = None) -> np.ndarray:
+        """prompts (B, P) int32 -> (B, P + n_new) int32."""
+        b, plen = prompts.shape
+        assert b == self.batch_size
+        assert plen + n_new <= self.max_len
+        cache = lm.init_cache(self.cfg, b, self.max_len)
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts),
+                                      cache, extra_inputs or {})
+        key = jax.random.PRNGKey(seed)
+        out = [jnp.asarray(prompts)]
+        tok = self._sample(logits, temperature, key)
+        out.append(tok)
+        for i in range(1, n_new):
+            pos = plen + i - 1
+            logits, cache = self._step(self.params, tok, cache, pos)
+            key, sub = jax.random.split(key)
+            tok = self._sample(logits, temperature, sub)
+            out.append(tok)
+        return np.asarray(jnp.concatenate(out, axis=1))
+
+    @staticmethod
+    def _sample(logits, temperature, key):
+        last = logits[:, -1]
+        if temperature <= 0.0:
+            return jnp.argmax(last, axis=-1).astype(jnp.int32)[:, None]
+        return jax.random.categorical(
+            key, last / temperature, axis=-1).astype(jnp.int32)[:, None]
 
 
 def main(argv=None):

@@ -22,7 +22,7 @@ primitives:
 Nothing here imports from ``repro.core``/``repro.serving``/
 ``repro.kernels``, so any layer can depend on it without cycles.
 """
-from .metrics import (ITER_EDGES, LATENCY_EDGES, Counter, Gauge,  # noqa: F401
-                      Histogram, MetricsRegistry, default_registry,
-                      json_safe, scoped_registry)
+from .metrics import (ITER_EDGES, LATENCY_EDGES, UNIT_EDGES,  # noqa: F401
+                      Counter, Gauge, Histogram, MetricsRegistry,
+                      default_registry, json_safe, scoped_registry)
 from .tracing import Span, Tracer  # noqa: F401

@@ -20,12 +20,13 @@ from __future__ import annotations
 import contextlib
 import json
 import math
+import threading
 from bisect import bisect_right
 from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
 __all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
            "default_registry", "scoped_registry", "json_safe",
-           "LATENCY_EDGES", "ITER_EDGES"]
+           "LATENCY_EDGES", "ITER_EDGES", "UNIT_EDGES"]
 
 
 #: Default latency bucket edges (seconds): eighth-decade log steps from
@@ -38,6 +39,18 @@ LATENCY_EDGES: Tuple[float, ...] = tuple(
 #: toward the solver's max_iters ceilings.
 ITER_EDGES: Tuple[float, ...] = tuple(range(1, 65)) + (
     80, 96, 128, 160, 192, 256, 320, 384, 448, 512)
+
+#: Unit-interval bucket edges (fractions: batch occupancy, hit rates) —
+#: 1/32 steps so quantiles resolve to ~3% of full scale.
+UNIT_EDGES: Tuple[float, ...] = tuple(i / 32.0 for i in range(0, 33))
+
+#: One process-wide mutation lock shared by every Counter/Gauge/
+#: Histogram. Metric writes are a handful of int ops, so a single
+#: uncontended lock costs ~100ns and makes the async serving engine's
+#: cross-thread recording (flusher thread vs. callers) race-free:
+#: ``value += n`` and the histogram's multi-field update are
+#: read-modify-write sequences the GIL alone does not make atomic.
+_MUT = threading.Lock()
 
 
 def json_safe(obj):
@@ -73,7 +86,8 @@ class Counter:
         self.value = 0
 
     def inc(self, n=1):
-        self.value += n
+        with _MUT:
+            self.value += n
 
     def snapshot(self):
         return json_safe(self.value)
@@ -119,13 +133,14 @@ class Histogram:
 
     def record(self, v) -> None:
         v = float(v)
-        self.counts[bisect_right(self.edges, v)] += 1
-        self.count += 1
-        self.total += v
-        if v < self.vmin:
-            self.vmin = v
-        if v > self.vmax:
-            self.vmax = v
+        with _MUT:
+            self.counts[bisect_right(self.edges, v)] += 1
+            self.count += 1
+            self.total += v
+            if v < self.vmin:
+                self.vmin = v
+            if v > self.vmax:
+                self.vmax = v
 
     def _bucket_bounds(self, i: int) -> Tuple[float, float]:
         lo = self.edges[i - 1] if i > 0 else min(self.vmin, self.edges[0])
@@ -207,11 +222,12 @@ class MetricsRegistry:
 
     def _get(self, cls, name: str, labels: Dict[str, str], **kw):
         key = _key(name, labels)
-        m = self._metrics.get(key)
-        if m is None:
-            m = cls(**kw)
-            self._metrics[key] = m
-        elif not isinstance(m, cls):
+        with _MUT:       # get-or-create must not race across threads
+            m = self._metrics.get(key)
+            if m is None:
+                m = cls(**kw)
+                self._metrics[key] = m
+        if not isinstance(m, cls):
             raise TypeError(f"metric {_render(key)!r} already registered "
                             f"as {type(m).__name__}, not {cls.__name__}")
         return m

@@ -1,3 +1,28 @@
-from . import engine, fcm_engine  # noqa: F401
-from .engine import ServeEngine  # noqa: F401
+"""Segmentation serving: the route-registry engine + async admission.
+
+``FCMServeEngine`` is the batching front door (sync ``submit``/``flush``
+and async ``submit_async`` -> :class:`SegmentationFuture`); the LM
+``ServeEngine`` moved to :mod:`repro.launch.serve` and is re-exported
+here lazily (with a DeprecationWarning via ``repro.serving.engine``)
+for old call sites.
+"""
+from . import fcm_engine  # noqa: F401
+from .admission import (DeadlineExceeded, EngineShutdown,  # noqa: F401
+                        SegmentationFuture)
 from .fcm_engine import FCMServeEngine, SegmentationResult  # noqa: F401
+
+
+def __getattr__(name):
+    # Lazy deprecated re-exports: importing repro.serving must not warn
+    # (or pull the LM stack in) unless the legacy names are touched.
+    if name == "ServeEngine":
+        import warnings
+        warnings.warn(
+            "repro.serving.ServeEngine is deprecated: import it from "
+            "repro.launch.serve", DeprecationWarning, stacklevel=2)
+        from repro.launch.serve import ServeEngine
+        return ServeEngine
+    if name == "engine":
+        from . import engine
+        return engine
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

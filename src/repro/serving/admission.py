@@ -1,0 +1,114 @@
+"""Async admission for the serving engine: futures, deadlines, shutdown.
+
+The synchronous front door (``submit`` then ``flush``) couples every
+caller to the engine's batching cadence: a caller that wants one result
+either flushes a batch of one (paying the whole dispatch for a single
+lane) or waits for somebody else to flush. The admission layer decouples
+them — ``FCMServeEngine.submit_async`` parks the request on the same
+per-route queues and hands back a :class:`SegmentationFuture`; a
+background flusher thread forms batches by the engine's policy (flush
+when a bucket group reaches its target shape, or when the oldest queued
+request has waited ``max_wait_ms``) and resolves futures as results
+materialize. Continuous batching is where the throughput comes from:
+concurrent callers share one RouteProgram dispatch instead of serializing
+one-lane flushes.
+
+This module is deliberately engine-agnostic plumbing: the future, the
+two admission errors, and nothing else. The queueing policy lives on the
+engine (it owns the queues, buckets and programs).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Optional
+
+__all__ = ["SegmentationFuture", "DeadlineExceeded", "EngineShutdown"]
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's deadline passed before its result materialized."""
+
+
+class EngineShutdown(RuntimeError):
+    """The engine was shut down with this request still pending (or a
+    submit arrived after shutdown)."""
+
+
+class SegmentationFuture:
+    """One async segmentation request's pending result.
+
+    Resolved exactly once — by the flusher thread, a synchronous
+    ``flush``/``drain``, or engine shutdown — with either a
+    :class:`~repro.serving.fcm_engine.SegmentationResult` or an
+    exception. ``result(timeout)`` blocks; ``done()`` polls. Timestamps
+    (``submit_t``/``resolve_t``, ``time.perf_counter`` seconds) ride
+    along so load generators can compute submit->result latency without
+    wrapping the API.
+    """
+
+    __slots__ = ("request_id", "method", "deadline", "submit_t",
+                 "resolve_t", "_event", "_result", "_error")
+
+    def __init__(self, request_id: int, method: str,
+                 deadline: Optional[float] = None):
+        self.request_id = request_id
+        self.method = method
+        #: absolute deadline on the perf_counter clock, or None
+        self.deadline = deadline
+        self.submit_t = time.perf_counter()
+        self.resolve_t: Optional[float] = None
+        self._event = threading.Event()
+        self._result: Any = None
+        self._error: Optional[BaseException] = None
+
+    # -- resolution (engine side) ------------------------------------------
+
+    def set_result(self, result: Any) -> None:
+        if self._event.is_set():
+            raise RuntimeError(
+                f"future for request {self.request_id} resolved twice")
+        self._result = result
+        self.resolve_t = time.perf_counter()
+        self._event.set()
+
+    def set_exception(self, err: BaseException) -> None:
+        if self._event.is_set():
+            raise RuntimeError(
+                f"future for request {self.request_id} resolved twice")
+        self._error = err
+        self.resolve_t = time.perf_counter()
+        self._event.set()
+
+    # -- readout (caller side) ---------------------------------------------
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def exception(self) -> Optional[BaseException]:
+        """The resolving exception, or None; does not block."""
+        return self._error
+
+    def result(self, timeout: Optional[float] = None) -> Any:
+        """Block until resolved (or ``timeout`` seconds), then return the
+        result or raise the resolving exception. Raises ``TimeoutError``
+        if still unresolved at the timeout."""
+        if not self._event.wait(timeout):
+            raise TimeoutError(
+                f"request {self.request_id} unresolved after {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        """submit->resolve wall seconds, or None while pending."""
+        if self.resolve_t is None:
+            return None
+        return self.resolve_t - self.submit_t
+
+    def __repr__(self) -> str:
+        state = ("error" if self._error is not None
+                 else "done" if self._event.is_set() else "pending")
+        return (f"SegmentationFuture(id={self.request_id}, "
+                f"method={self.method!r}, {state})")

@@ -1,60 +1,15 @@
-"""Batched serving engine: prefill + greedy/temperature decode loop over
-the jitted ``lm.decode_step`` (the serve_step the dry-run lowers).
+"""DEPRECATED shim — the LM :class:`ServeEngine` moved to
+:mod:`repro.launch.serve` (its launcher's home), leaving this package to
+the segmentation serving stack (:mod:`repro.serving.fcm_engine` +
+:mod:`repro.serving.admission`). Import from ``repro.launch.serve``.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Dict, Optional
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.launch.serve import ServeEngine  # noqa: F401
 
-from repro.configs.base import ModelConfig
-from repro.models import lm
-
-
-class ServeEngine:
-    """Static-batch engine: one prefill for the whole batch, then
-    step-synchronous decode. ``max_len`` bounds the KV cache."""
-
-    def __init__(self, cfg: ModelConfig, params, max_len: int,
-                 batch_size: int):
-        self.cfg = cfg
-        self.params = params
-        self.max_len = max_len
-        self.batch_size = batch_size
-        self._prefill = jax.jit(
-            lambda p, t, c, kw: lm.prefill(p, t, c, cfg, **kw))
-        self._step = jax.jit(
-            lambda p, t, c, pos: lm.decode_step(p, t, c, pos, cfg))
-
-    def generate(self, prompts: np.ndarray, n_new: int,
-                 temperature: float = 0.0, seed: int = 0,
-                 extra_inputs: Optional[Dict] = None) -> np.ndarray:
-        """prompts (B, P) int32 -> (B, P + n_new) int32."""
-        b, plen = prompts.shape
-        assert b == self.batch_size
-        assert plen + n_new <= self.max_len
-        cache = lm.init_cache(self.cfg, b, self.max_len)
-        logits, cache = self._prefill(self.params, jnp.asarray(prompts),
-                                      cache, extra_inputs or {})
-        key = jax.random.PRNGKey(seed)
-        out = [jnp.asarray(prompts)]
-        tok = self._sample(logits, temperature, key)
-        out.append(tok)
-        for i in range(1, n_new):
-            pos = plen + i - 1
-            logits, cache = self._step(self.params, tok, cache, pos)
-            key, sub = jax.random.split(key)
-            tok = self._sample(logits, temperature, sub)
-            out.append(tok)
-        return np.asarray(jnp.concatenate(out, axis=1))
-
-    @staticmethod
-    def _sample(logits, temperature, key):
-        last = logits[:, -1]
-        if temperature <= 0.0:
-            return jnp.argmax(last, axis=-1).astype(jnp.int32)[:, None]
-        return jax.random.categorical(
-            key, last / temperature, axis=-1).astype(jnp.int32)[:, None]
+warnings.warn(
+    "repro.serving.engine is deprecated: ServeEngine moved to "
+    "repro.launch.serve (this shim re-exports it and will be removed)",
+    DeprecationWarning, stacklevel=2)

@@ -54,6 +54,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
 import time
 from typing import (Any, Callable, Dict, Hashable, List, Optional,
                     Sequence, Tuple)
@@ -61,14 +62,18 @@ from typing import (Any, Callable, Dict, Hashable, List, Optional,
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as _P
 
 from repro import obs
+from repro.core import distributed as DD
 from repro.core import fcm as F
 from repro.core import solver as SV
 from repro.core import spatial as SP
 from repro.core.batched import hist_rows
 from repro.kernels import ops as kops
 from repro.superpixel import pipeline as SX
+
+from .admission import DeadlineExceeded, EngineShutdown, SegmentationFuture
 
 
 @dataclasses.dataclass
@@ -241,6 +246,61 @@ def _cached_launch(key: Hashable, build: Callable[[], Callable]) -> Callable:
     return fn
 
 
+# ---------------------------------------------------------------------------
+# Mesh dispatch: batch-axis-sharded launch programs
+# ---------------------------------------------------------------------------
+
+def _mesh_signature(mesh) -> Hashable:
+    """A hashable identity for the mesh a launch was compiled against
+    (device set + topology), so the module-level launch cache can never
+    hand a program compiled for one mesh to an engine on another."""
+    if mesh is None:
+        return ("nomesh",)
+    return ("mesh", tuple(mesh.axis_names), mesh.devices.shape,
+            tuple(d.id for d in mesh.devices.flat))
+
+
+def _shard_launch(mesh, launch_fn: Callable, n_in: int) -> Callable:
+    """Wrap a RouteProgram launch body so its batch (leading) axis is
+    sharded over every mesh axis. Lanes are independent images, so the
+    body runs collective-free; only the scalar ``total`` (the shared
+    trip count of each shard's masked loop) needs a pmax so every
+    device reports the global batch's value. The wrapped function keeps
+    the launch contract — ``(v, delta, iters, total, labels/lut)`` —
+    and, on a one-device mesh, the identical math of the unsharded
+    path (sharding a batch over one device is a no-op partition).
+    """
+    axes = DD.mesh_axes(mesh)
+    bspec = _P(axes)
+
+    def body(*inputs):
+        v, delta, iters, total, tail = launch_fn(*inputs)
+        return v, delta, iters, jax.lax.pmax(total, axes), tail
+
+    return DD.shard_map(body, mesh=mesh,
+                        in_specs=(bspec,) * n_in,
+                        out_specs=(bspec, bspec, bspec, _P(), bspec))
+
+
+def _jit_launch(eng: "FCMServeEngine", bucket: int, cache_key: Hashable,
+                launch_fn: Callable, n_in: int,
+                donate: Tuple[int, ...] = ()) -> Callable:
+    """Compile (or fetch) the launch for this engine's mesh: sharded
+    over the batch axis when the engine has a multi-device mesh that
+    divides the bucket, the plain single-device jit otherwise. The mesh
+    signature joins the cache key so single-device and per-mesh
+    programs never collide."""
+    mesh = eng._mesh_for_bucket(bucket)
+    full_key = cache_key + (_mesh_signature(mesh),)
+    if mesh is None:
+        return _cached_launch(
+            full_key, lambda: jax.jit(launch_fn, donate_argnums=donate))
+    # No donation under shard_map: donated sharded buffers trip XLA
+    # aliasing restrictions on some backends for zero win on this path.
+    return _cached_launch(
+        full_key, lambda: jax.jit(_shard_launch(mesh, launch_fn, n_in)))
+
+
 ROUTES: "collections.OrderedDict[str, RouteSpec]" = collections.OrderedDict()
 
 #: Route generations: bumped on every (re-)registration so engine-held
@@ -333,9 +393,12 @@ def _make_histogram_program(eng, key, bucket) -> RouteProgram:
     impl = kops.select_step("flat", platform=platform, n_feat=1,
                             batched=True, n_rows=nb, c=c).name
     vals = jnp.arange(nb, dtype=jnp.float32)
-    feats = jnp.broadcast_to(vals[None, :, None], (bucket, nb, 1))
 
     def _solve_lut(hists):
+        # feats derive from the *input* batch shape (not the bucket), so
+        # the same body runs whole-bucket on one device or per-shard
+        # under the mesh-sharded launch wrapper.
+        feats = jnp.broadcast_to(vals[None, :, None], hists.shape + (1,))
         v, delta, iters, total = SV.flat_batched_solve(
             feats, hists, c, m, eps, max_iters, impl=impl)
         v2 = v[..., 0]
@@ -366,14 +429,14 @@ def _make_histogram_program(eng, key, bucket) -> RouteProgram:
                 v2, delta, iters, total, lut = _solve_lut(hists)
                 return v2, delta, iters, total, \
                     jnp.take_along_axis(lut, px, axis=1)
-            launch = _cached_launch(
-                cache_key, lambda: jax.jit(launch_fn, donate_argnums=(0,)))
+            launch = _jit_launch(eng, bucket, cache_key, launch_fn, 1,
+                                 donate=(0,))
         else:
             def launch_fn(px, hists):
                 v2, delta, iters, total, lut = _solve_lut(hists)
                 return v2, delta, iters, total, \
                     jnp.take_along_axis(lut, px, axis=1)
-            launch = _cached_launch(cache_key, lambda: jax.jit(launch_fn))
+            launch = _jit_launch(eng, bucket, cache_key, launch_fn, 2)
 
         def gather(eng_, chunk, bucket_):
             # uint8 traffic stages uint8 (16 KB memcpy per lane); mixed
@@ -404,8 +467,8 @@ def _make_histogram_program(eng, key, bucket) -> RouteProgram:
 
     # Mixed payload sizes: one solve dispatch on the stacked histograms,
     # per-request labels via the (cheap) host LUT gather.
-    launch = _cached_launch(cache_key,
-                            lambda: jax.jit(lambda hists: _solve_lut(hists)))
+    launch = _jit_launch(eng, bucket, cache_key,
+                         lambda hists: _solve_lut(hists), 1)
 
     def gather(eng_, chunk, bucket_):
         return (_gather_hists(eng_, chunk),)
@@ -498,11 +561,11 @@ def _make_pixel_program(eng, key, bucket) -> RouteProgram:
         labels = jax.vmap(F.labels_from_centers)(feats, v)
         return v, delta, iters, total, labels
 
-    launch = _cached_launch(
+    launch = _jit_launch(
+        eng, bucket,
         ("pixel", platform, bucket, key, c, m, eps, max_iters, impl,
          labels_impl),
-        lambda: jax.jit(launch_fn,
-                        donate_argnums=(0,) if platform == "tpu" else ()))
+        launch_fn, 1, donate=(0,) if platform == "tpu" else ())
 
     def gather(eng_, chunk, bucket_):
         xs = np.empty((bucket_, n) if scalar else (bucket_, n, d),
@@ -614,10 +677,11 @@ def _make_spatial_program(eng, key, bucket) -> "RouteProgram":
         labels = jnp.argmax(u, axis=1).astype(jnp.int32)
         return v, delta, iters, total, labels
 
-    launch = _cached_launch(
+    launch = _jit_launch(
+        eng, bucket,
         ("spatial", platform, bucket, key, c, m, alpha, neighbors, eps,
          max_iters, impl),
-        lambda: jax.jit(launch_fn))
+        launch_fn, 1)
 
     def gather(eng_, chunk, bucket_):
         imgs = np.empty((bucket_,) + shape, np.float32)
@@ -726,6 +790,25 @@ class FCMServeEngine:
     ``flush`` drains every route's queue through bucketed
     ``solve_batched`` calls. ``segment`` is the submit-all-then-flush
     convenience wrapper.
+
+    **Async admission** (the continuous-batching front door):
+    ``submit_async`` queues through the same per-route queues but hands
+    back a :class:`~repro.serving.admission.SegmentationFuture`; a lazy
+    background flusher thread forms batches — flushing when a bucket
+    group reaches the target shape (``batch_sizes[-1]``) or when the
+    oldest waiting async request exceeds ``max_wait_ms`` — and resolves
+    futures as results materialize. ``drain()`` flushes synchronously
+    (deterministic tests), ``shutdown()`` stops the flusher and either
+    drains or fails the in-flight futures. The synchronous API is a
+    degenerate case (no futures, caller-driven flush) and is untouched
+    by the async machinery until the first ``submit_async``.
+
+    **Mesh dispatch**: with a multi-device ``mesh``, every RouteProgram
+    launch whose bucket divides by ``mesh.size`` is compiled with its
+    batch axis sharded over the mesh (``core/distributed.shard_map``);
+    program caches key on the mesh generation so ``set_mesh`` can never
+    serve a stale single-device (or other-mesh) executable. A one-device
+    mesh (or ``mesh=None``) runs the exact single-device path.
     """
 
     def __init__(self, cfg: F.FCMConfig = F.FCMConfig(),
@@ -736,7 +819,9 @@ class FCMServeEngine:
                  spatial_cfg: Optional[SP.SpatialFCMConfig] = None,
                  superpixel_cfg: Optional[SX.SuperpixelFCMConfig] = None,
                  tracing: bool = True,
-                 trace_ring: int = 64):
+                 trace_ring: int = 64,
+                 mesh=None,
+                 max_wait_ms: float = 10.0):
         if not batch_sizes or any(b <= 0 for b in batch_sizes):
             raise ValueError(f"bad batch_sizes {batch_sizes!r}")
         self.cfg = cfg
@@ -775,20 +860,85 @@ class FCMServeEngine:
         #: the request's result materializes, feeding the per-route
         #: submit->result latency histogram.
         self._submit_t: Dict[int, Tuple[float, str]] = {}
+        # -- async admission state ----------------------------------------
+        #: guards queues / futures / id allocation / shutdown flag; the
+        #: condition wakes the flusher on submits and shutdown. RLock so
+        #: submit_async can hold it across the whole enqueue+register
+        #: critical section.
+        self._lock = threading.RLock()
+        self._cond = threading.Condition(self._lock)
+        #: serializes flush *bodies* (flusher thread vs. drain/flush
+        #: callers): queue swaps stay atomic under ``_lock``, the solve
+        #: work runs outside it so submits never block on a device batch.
+        self._flush_lock = threading.Lock()
+        #: request id -> unresolved future (async requests only).
+        self._futures: Dict[int, SegmentationFuture] = {}
+        self.max_wait_ms = float(max_wait_ms)
+        self._closed = False
+        self._flusher: Optional[threading.Thread] = None
+        # -- mesh dispatch state ------------------------------------------
+        #: bumped by set_mesh; part of every program-cache key, so stale
+        #: mesh programs are purged exactly like stale route generations.
+        self._mesh_gen = 0
+        self.mesh = None
+        if mesh is not None:
+            self.set_mesh(mesh)
         # Pre-register the schema for the routes known at construction
         # (zero-valued stats appear before any traffic; routes registered
         # later join lazily through the get-or-create registry).
         self.metrics.counter("requests")
         self.metrics.counter("cache_hits")
+        self.metrics.gauge("queue.depth")
         for route in ROUTES.values():
             self._route_counter("requests", route.name)
             self._route_counter("cache_hits", route.name)
-            for k in ("batches", "images", "padded", "iters"):
+            for k in ("batches", "images", "padded", "iters",
+                      "deadline_expired"):
                 self._route_counter(k, route.name)
             for stage in ("ingest", "solve", "materialize", "compress"):
                 self._stage_seconds(route.name, stage)
             self._latency_hist(route.name)
             self._iters_hist(route.name)
+            self._occupancy_hist(route.name)
+            self.metrics.gauge("queue.depth", route=route.name)
+        # Hot-path handles: submit runs per request, so the registry
+        # lookups (each a lock + labelled-key probe) are hoisted out of
+        # the admission path; depth gauges update incrementally and
+        # _set_queue_gauges re-bases the total on queue swaps.
+        self._qtotal = 0
+        self._depth_gauge = self.metrics.gauge("queue.depth")
+        self._depth_gauges = {
+            name: self.metrics.gauge("queue.depth", route=name)
+            for name in ROUTES}
+        self._req_counter = self.metrics.counter("requests")
+        self._req_counters = {
+            name: self._route_counter("requests", name) for name in ROUTES}
+        #: per-route count of queued async requests (guarded by _lock);
+        #: lets submit_async wake the flusher only when the wake can
+        #: change its schedule (first async request -> a new window
+        #: deadline, or a full target shape -> flush due now).
+        self._async_n: Dict[str, int] = {}
+
+    # -- mesh ---------------------------------------------------------------
+
+    def set_mesh(self, mesh) -> None:
+        """Attach (or replace, or with ``None`` detach) the device mesh
+        RouteProgram launches shard over. Bumps the mesh generation so
+        every program compiled against the previous mesh is evicted on
+        next use — a mesh swap can never serve a stale executable."""
+        with self._lock:
+            self.mesh = mesh
+            self._mesh_gen += 1
+
+    def _mesh_for_bucket(self, bucket: int):
+        """The mesh a ``bucket``-lane launch shards over, or None for
+        the single-device path (no mesh, a one-device mesh, or a bucket
+        the mesh does not divide — ragged shards would need per-device
+        padding for no win at these batch sizes)."""
+        mesh = self.mesh
+        if mesh is None or mesh.size <= 1 or bucket % mesh.size != 0:
+            return None
+        return mesh
 
     # -- metric accessors --------------------------------------------------
 
@@ -810,28 +960,54 @@ class FCMServeEngine:
                                       edges=obs.ITER_EDGES,
                                       route=route_name)
 
+    def _occupancy_hist(self, route_name: str) -> obs.Histogram:
+        """Per-route batch occupancy: real lanes / bucket size, one
+        sample per launched bucket (1.0 = no padding waste)."""
+        return self.metrics.histogram("route.batch_occupancy",
+                                      edges=obs.UNIT_EDGES,
+                                      route=route_name)
+
+    def _depth_gauge_for(self, method: str) -> obs.Gauge:
+        g = self._depth_gauges.get(method)
+        if g is None:
+            g = self._depth_gauges.setdefault(
+                method, self.metrics.gauge("queue.depth", route=method))
+        return g
+
+    def _set_queue_gauges(self) -> None:
+        """Re-base the per-route + global queue-depth gauges from the
+        actual queues (caller holds ``_lock``; used on queue swaps —
+        per-submit updates are incremental in ``_enqueue``)."""
+        total = 0
+        for name, q in self._queues.items():
+            self._depth_gauge_for(name).set(len(q))
+            total += len(q)
+        self._qtotal = total
+        self._depth_gauge.set(total)
+
     def _finish(self, route: RouteSpec, results: Dict[int, Any],
                 r: SegmentationResult) -> None:
-        """Record one materialized result + its submit->result latency."""
+        """Record one materialized result + its submit->result latency,
+        and resolve the request's future if it was submitted async."""
         results[r.request_id] = r
         sub = self._submit_t.pop(r.request_id, None)
         if sub is not None:
             self._latency_hist(route.name).record(
                 time.perf_counter() - sub[0])
+        fut = self._futures.pop(r.request_id, None)
+        if fut is not None and not fut.done():
+            fut.set_result(r)
 
     # -- ingest ------------------------------------------------------------
 
-    def submit(self, img: np.ndarray, method: str = "histogram") -> int:
-        """Queue one image on a registered route; returns its request id.
-        Cache hits are still materialized at flush time (the defuzzify
-        LUT needs the pixels). See ``METHODS`` / the README routing
-        table for the built-in routes."""
+    def _ingest(self, method: str, img: np.ndarray):
+        """Validate + reduce one payload through its route (outside the
+        admission lock: superpixel ingest runs SLIC)."""
         route = ROUTES.get(method)
         if route is None:
             raise ValueError(f"unknown method {method!r}; registered "
                              f"routes: {METHODS}")
         img = np.asarray(img)
-        t_submit = time.perf_counter()
         # Ingest validates eagerly: a request failing inside flush()
         # would discard the whole drained batch's results. A raise here
         # consumes neither a request id nor a counter (the span records
@@ -839,13 +1015,92 @@ class FCMServeEngine:
         with self.tracer.span("ingest", ring=False, route=method) as sp:
             pending = route.ingest(self, img, self._next_id)
         self._stage_seconds(method, "ingest").inc(sp.wall_s)
+        return pending
+
+    def _enqueue(self, method: str, pending, t_submit: float) -> int:
+        """Allocate the request id and queue the payload (caller holds
+        ``_lock``)."""
+        if self._closed:
+            raise EngineShutdown("engine is shut down; no new submits")
         rid = self._next_id
         self._next_id += 1
-        self.metrics.counter("requests").inc()
-        self._route_counter("requests", method).inc()
+        # The id passed to ingest was advisory (allocation races with
+        # other submitters); the queued payload carries the real one.
+        pending.request_id = rid
+        self._req_counter.inc()
+        rc = self._req_counters.get(method)
+        if rc is None:
+            rc = self._req_counters.setdefault(
+                method, self._route_counter("requests", method))
+        rc.inc()
         self._submit_t[rid] = (t_submit, method)
-        self._queues[method].append(pending)
+        q = self._queues.setdefault(method, [])
+        q.append(pending)
+        self._depth_gauge_for(method).set(len(q))
+        self._qtotal += 1
+        self._depth_gauge.set(self._qtotal)
         return rid
+
+    def submit(self, img: np.ndarray, method: str = "histogram") -> int:
+        """Queue one image on a registered route; returns its request id.
+        Cache hits are still materialized at flush time (the defuzzify
+        LUT needs the pixels). See ``METHODS`` / the README routing
+        table for the built-in routes."""
+        t_submit = time.perf_counter()
+        pending = self._ingest(method, img)
+        with self._lock:
+            return self._enqueue(method, pending, t_submit)
+
+    def submit_async(self, img: np.ndarray, method: str = "histogram",
+                     deadline: Optional[float] = None) -> SegmentationFuture:
+        """Queue one image and return a future for its result.
+
+        ``deadline`` is relative seconds from now: a request still
+        queued when its deadline passes resolves with
+        :class:`~repro.serving.admission.DeadlineExceeded` instead of
+        running (a non-positive deadline fails at submit, consuming no
+        request id or queue slot). Batches form in the background —
+        when a bucket group reaches the target shape
+        (``batch_sizes[-1]``) or the oldest waiting async request
+        exceeds ``max_wait_ms`` — or deterministically via ``drain()``.
+        Raises :class:`~repro.serving.admission.EngineShutdown` after
+        ``shutdown()``.
+        """
+        t_submit = time.perf_counter()
+        if method not in ROUTES:
+            raise ValueError(f"unknown method {method!r}; registered "
+                             f"routes: {METHODS}")
+        if self._closed:
+            raise EngineShutdown("engine is shut down; no new submits")
+        if deadline is not None and deadline <= 0:
+            fut = SegmentationFuture(-1, method, deadline=t_submit)
+            fut.submit_t = t_submit
+            self._route_counter("deadline_expired", method).inc()
+            fut.set_exception(DeadlineExceeded(
+                f"deadline {deadline}s already expired at submit"))
+            return fut
+        pending = self._ingest(method, img)
+        with self._lock:
+            rid = self._enqueue(method, pending, t_submit)
+            fut = SegmentationFuture(
+                rid, method,
+                deadline=None if deadline is None else t_submit + deadline)
+            fut.submit_t = t_submit
+            self._futures[rid] = fut
+            self._ensure_flusher()
+            # Wake the flusher only when this submit can change its
+            # schedule: the route's first queued async request starts a
+            # max_wait window; every target-shape-multiple of queued
+            # requests may complete a full bucket group (mixed-shape
+            # groups that straddle the multiple still flush at the
+            # window — the wake is an early trigger, not the backstop).
+            n_async = self._async_n.get(method, 0) + 1
+            self._async_n[method] = n_async
+            if (n_async == 1
+                    or len(self._queues[method]) % self.batch_sizes[-1]
+                    == 0):
+                self._cond.notify_all()
+        return fut
 
     @staticmethod
     def _normalize(hist: np.ndarray) -> np.ndarray:
@@ -853,51 +1108,224 @@ class FCMServeEngine:
 
     # -- drain -------------------------------------------------------------
 
-    def flush(self) -> List[SegmentationResult]:
+    def flush(self, raise_errors: bool = True) -> List[SegmentationResult]:
         """Run every queued request; returns results in submit order.
         Route-agnostic: cache/dedup for cacheable routes, then group by
         bucket key and run one batched solve per bucket. Each flush
         leaves one root trace (per-bucket child spans inside) in
-        ``tracer``'s ring."""
+        ``tracer``'s ring.
+
+        Thread-safe: the queue swap is atomic under the admission lock
+        and flush bodies are serialized, so the background flusher and
+        explicit flush/drain callers can never process one request
+        twice. A route whose batch raises fails that route's
+        unresolved futures with the error; with ``raise_errors`` (the
+        synchronous default) the first error then propagates, while the
+        background flusher passes ``False`` so one poisoned route never
+        kills the thread serving the others."""
         results: Dict[int, SegmentationResult] = {}
-        with self.tracer.span("flush", queued=self.queue_depth):
-            for route in ROUTES.values():
-                pend = self._queues[route.name]
-                self._queues[route.name] = []
-                if not pend:
-                    continue
-                dups: List[Any] = []
-                fitted: Dict[bytes, np.ndarray] = {}
-                if route.cacheable:
-                    pend, dups = self._answer_from_cache(route, pend,
-                                                         results)
-                groups: "collections.OrderedDict[Hashable, List[Any]]" = \
-                    collections.OrderedDict()
-                for p in pend:
-                    groups.setdefault(route.bucket_key(self, p),
-                                      []).append(p)
-                for group in groups.values():
-                    i = 0
-                    while i < len(group):
-                        chunk = group[i:i + self.batch_sizes[-1]]
-                        i += len(chunk)
-                        self._run_bucket(route, chunk,
-                                         self._bucket_for(len(chunk)),
-                                         results, fitted)
-                # duplicates ride on their representative's centers (kept
-                # locally: the LRU may be disabled, or evict mid-flush)
-                for p in dups:
-                    self.metrics.counter("cache_hits").inc()
-                    self._route_counter("cache_hits", route.name).inc()
-                    self._finish(route, results, route.materialize(
-                        self, p, fitted[p.key], 0, True))
+        first_err: Optional[BaseException] = None
+        with self._flush_lock:
+            with self._lock:
+                drained = {name: self._queues[name] for name in self._queues}
+                for name in drained:
+                    self._queues[name] = []
+                self._async_n = {}
+                self._set_queue_gauges()
+            n_queued = sum(len(v) for v in drained.values())
+            with self.tracer.span("flush", queued=n_queued):
+                for route in ROUTES.values():
+                    pend = self._admit_order(route,
+                                             drained.get(route.name) or [])
+                    if not pend:
+                        continue
+                    try:
+                        self._flush_route(route, pend, results)
+                    except BaseException as e:  # noqa: BLE001
+                        for p in pend:
+                            if p.request_id in results:
+                                continue
+                            self._submit_t.pop(p.request_id, None)
+                            fut = self._futures.pop(p.request_id, None)
+                            if fut is not None and not fut.done():
+                                fut.set_exception(e)
+                        if first_err is None:
+                            first_err = e
+        if first_err is not None and raise_errors:
+            raise first_err
         return [results[rid] for rid in sorted(results)]
+
+    def _admit_order(self, route: RouteSpec, pend: List[Any]) -> List[Any]:
+        """Deadline admission on a drained route queue: expire overdue
+        async requests (their futures fail with ``DeadlineExceeded``
+        without spending a solver lane) and order survivors
+        most-urgent-first, so tight-deadline requests land in the
+        earliest chunk of their bucket group. Sync requests carry no
+        deadline and keep their submit order."""
+        now = time.perf_counter()
+        keep: List[Any] = []
+        for p in pend:
+            fut = self._futures.get(p.request_id)
+            if (fut is not None and fut.deadline is not None
+                    and now > fut.deadline):
+                self._futures.pop(p.request_id, None)
+                self._submit_t.pop(p.request_id, None)
+                self._route_counter("deadline_expired", route.name).inc()
+                if not fut.done():
+                    fut.set_exception(DeadlineExceeded(
+                        f"request {p.request_id} missed its deadline "
+                        f"while queued"))
+                continue
+            keep.append(p)
+
+        def urgency(p):
+            fut = self._futures.get(p.request_id)
+            d = (fut.deadline
+                 if fut is not None and fut.deadline is not None
+                 else float("inf"))
+            return (d, p.request_id)
+
+        keep.sort(key=urgency)
+        return keep
+
+    def _flush_route(self, route: RouteSpec, pend: List[Any],
+                     results: Dict[int, SegmentationResult]) -> None:
+        """One route's share of a flush: cache/dedup, bucket, solve."""
+        dups: List[Any] = []
+        fitted: Dict[bytes, np.ndarray] = {}
+        if route.cacheable:
+            pend, dups = self._answer_from_cache(route, pend, results)
+        groups: "collections.OrderedDict[Hashable, List[Any]]" = \
+            collections.OrderedDict()
+        for p in pend:
+            groups.setdefault(route.bucket_key(self, p), []).append(p)
+        for group in groups.values():
+            i = 0
+            while i < len(group):
+                chunk = group[i:i + self.batch_sizes[-1]]
+                i += len(chunk)
+                self._run_bucket(route, chunk,
+                                 self._bucket_for(len(chunk)),
+                                 results, fitted)
+        # duplicates ride on their representative's centers (kept
+        # locally: the LRU may be disabled, or evict mid-flush)
+        for p in dups:
+            self.metrics.counter("cache_hits").inc()
+            self._route_counter("cache_hits", route.name).inc()
+            self._finish(route, results, route.materialize(
+                self, p, fitted[p.key], 0, True))
+
+    def drain(self) -> List[SegmentationResult]:
+        """Deterministically flush everything queued, resolving every
+        pending future; returns the materialized results. A zero-request
+        drain is a cheap no-op returning ``[]``. If the background
+        flusher is mid-flush, ``drain`` waits for that batch (flush
+        bodies serialize), so every request submitted before the call
+        is resolved when it returns."""
+        return self.flush()
 
     def segment(self, imgs: Sequence[np.ndarray],
                 method: str = "histogram") -> List[SegmentationResult]:
         ids = [self.submit(im, method=method) for im in imgs]
         by_id = {r.request_id: r for r in self.flush()}
         return [by_id[i] for i in ids]
+
+    # -- background flusher ------------------------------------------------
+
+    def _ensure_flusher(self) -> None:
+        """Start the batch-formation thread lazily (caller holds
+        ``_lock``): engines serving only the synchronous API never pay
+        for — or behave differently because of — a background thread."""
+        if self._flusher is None or not self._flusher.is_alive():
+            self._flusher = threading.Thread(
+                target=self._flusher_loop, name="fcm-serve-flusher",
+                daemon=True)
+            self._flusher.start()
+
+    def _flush_due(self) -> Optional[float]:
+        """Batch-formation policy (caller holds ``_lock``): seconds
+        until the next flush is due — ``0.0`` for *due now* (some bucket
+        group reached the target shape, or the oldest waiting async
+        request exceeded ``max_wait_ms``), ``None`` for *nothing async
+        waiting* (sleep until a submit wakes us)."""
+        now = time.perf_counter()
+        oldest: Optional[float] = None
+        target = self.batch_sizes[-1]
+        for name, q in self._queues.items():
+            route = ROUTES.get(name)
+            if route is None or not q:
+                continue
+            group_sizes: Dict[Hashable, int] = {}
+            async_here = False
+            for p in q:
+                k = route.bucket_key(self, p)
+                group_sizes[k] = group_sizes.get(k, 0) + 1
+                if p.request_id in self._futures:
+                    async_here = True
+                    t = self._submit_t.get(p.request_id)
+                    if t is not None and (oldest is None or t[0] < oldest):
+                        oldest = t[0]
+            # Target-shape trigger: only once async traffic is involved
+            # (pure sync queues belong to their caller's flush).
+            if async_here and any(n >= target
+                                  for n in group_sizes.values()):
+                return 0.0
+        if oldest is None:
+            return None
+        return max(0.0, oldest + self.max_wait_ms / 1000.0 - now)
+
+    def _flusher_loop(self) -> None:
+        while True:
+            with self._lock:
+                while True:
+                    if self._closed:
+                        return
+                    wait = self._flush_due()
+                    if wait is not None and wait <= 0.0:
+                        break
+                    self._cond.wait(timeout=wait)
+            # Outside the lock: the flush body serializes on _flush_lock
+            # and swaps queues atomically; errors have already been
+            # routed into the affected futures (raise_errors=False), so
+            # nothing can kill the thread mid-service.
+            self.flush(raise_errors=False)
+
+    def shutdown(self, drain: bool = True) -> None:
+        """Stop the background flusher and close admission. With
+        ``drain`` (default), everything still queued is flushed and
+        every future resolves with its result; with ``drain=False``,
+        queued requests are dropped and their futures fail with
+        :class:`~repro.serving.admission.EngineShutdown`. Subsequent
+        submits raise ``EngineShutdown``; ``shutdown`` is idempotent."""
+        with self._lock:
+            already = self._closed
+            self._closed = True
+            self._cond.notify_all()
+            flusher = self._flusher
+        if flusher is not None and flusher.is_alive():
+            flusher.join()
+        if already:
+            return
+        if drain:
+            self.flush(raise_errors=False)
+            return
+        with self._lock:
+            dropped: List[Any] = []
+            for name in self._queues:
+                dropped.extend(self._queues[name])
+                self._queues[name] = []
+            self._async_n = {}
+            self._set_queue_gauges()
+        err = EngineShutdown("engine shut down with the request queued")
+        for p in dropped:
+            self._submit_t.pop(p.request_id, None)
+            fut = self._futures.pop(p.request_id, None)
+            if fut is not None and not fut.done():
+                fut.set_exception(err)
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
 
     def _answer_from_cache(self, route: RouteSpec, pend: List[Any],
                            results: Dict[int, SegmentationResult]):
@@ -940,8 +1368,9 @@ class FCMServeEngine:
                      chunk: List[Any], bucket: int) -> Optional[RouteProgram]:
         """The compiled single-dispatch program this chunk can ride, or
         None (route has no programs / chunk shape has none). Programs
-        are cached per (route generation, bucket, shape key); stale
-        generations from a re-registered route are purged here."""
+        are cached per (route generation, mesh generation, bucket,
+        shape key); stale generations — a re-registered route OR a
+        swapped mesh — are purged here."""
         if route.make_program is None or route.program_key is None:
             return None
         key = route.program_key(self, chunk)
@@ -949,10 +1378,11 @@ class FCMServeEngine:
             return None
         gen = _ROUTE_GEN[route.name]
         stale = [k for k in self._programs
-                 if k[0] == route.name and k[1] != gen]
+                 if (k[0] == route.name and k[1] != gen)
+                 or k[2] != self._mesh_gen]
         for k in stale:
             del self._programs[k]
-        full_key = (route.name, gen, bucket, key)
+        full_key = (route.name, gen, self._mesh_gen, bucket, key)
         prog = self._programs.get(full_key)
         if prog is None:
             prog = route.make_program(self, key, bucket)
@@ -1015,6 +1445,7 @@ class FCMServeEngine:
         self._route_counter("images", route.name).inc(len(chunk))
         self._route_counter("padded", route.name).inc(bucket - len(chunk))
         self._route_counter("iters", route.name).inc(int(total_iters))
+        self._occupancy_hist(route.name).record(len(chunk) / bucket)
         # Convergence telemetry: one sample per *real* lane (padding
         # lanes converge artificially fast and would skew the mix).
         if n_iters is not None:
@@ -1157,6 +1588,20 @@ class FCMServeEngine:
                 "p99_iters": h.quantile(0.99),
                 "last_final_delta": g.snapshot() if g else None,
             }
+        # Admission telemetry: live queue depths, per-launch batch
+        # occupancy (real lanes / bucket), deadline misses, and the
+        # count of futures still awaiting results.
+        s["queue_depth_by_route"] = {
+            r.name: len(self._queues.get(r.name, ()))
+            for r in ROUTES.values()}
+        s["batch_occupancy"] = {
+            r.name: self._occupancy_hist(r.name).snapshot()
+            for r in ROUTES.values()}
+        s["deadline_expired"] = {
+            r.name: self._route_counter("deadline_expired",
+                                        r.name).snapshot()
+            for r in ROUTES.values()}
+        s["pending_futures"] = len(self._futures)
         return obs.json_safe(s)
 
     def reset_stats(self) -> None:

@@ -1,0 +1,78 @@
+"""Subprocess entry for mesh-serving tests: an FCMServeEngine with its
+RouteProgram launches sharded over 8 fake host devices must serve
+results identical to the single-device engine — through both the sync
+and async front doors — and set_mesh must never serve a stale program.
+Prints MESH_SERVE_OK on success."""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+sys.path.insert(0, _SRC)
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+from repro.core import fcm as F  # noqa: E402
+from repro.data import phantom  # noqa: E402
+from repro.serving.fcm_engine import FCMServeEngine  # noqa: E402
+
+
+def _check_same(a, b):
+    assert (a.labels == b.labels).all()
+    np.testing.assert_array_equal(a.centers, b.centers)
+    assert a.n_iters == b.n_iters
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+    kwargs = {}
+    if hasattr(jax.sharding, "AxisType"):
+        kwargs["axis_types"] = (jax.sharding.AxisType.Auto,)
+    mesh = jax.make_mesh((8,), ("data",), **kwargs)
+    cfg = F.FCMConfig(max_iters=300)
+    # bucket 8 divides the mesh; bucket 1 exercises the single-device
+    # fallback inside a meshed engine (mesh does not divide the bucket).
+    imgs = [phantom.phantom_slice(32, 32, noise=4.0 + (i % 3),
+                                  seed=500 + i)[0] for i in range(11)]
+
+    single = FCMServeEngine(cfg, batch_sizes=(1, 8), cache_size=0)
+    meshed = FCMServeEngine(cfg, batch_sizes=(1, 8), cache_size=0,
+                            mesh=mesh, max_wait_ms=10_000.0)
+
+    # Sync parity: same buckets, mesh-sharded vs single-device launch.
+    ref = single.segment(imgs)
+    got = meshed.segment(imgs)
+    for a, b in zip(got, ref):
+        _check_same(a, b)
+
+    # Async parity through the mesh: futures resolve with the same
+    # results the single-device sync path produced.
+    futs = [meshed.submit_async(im) for im in imgs]
+    meshed.drain()
+    for f, b in zip(futs, ref):
+        _check_same(f.result(timeout=30), b)
+
+    # set_mesh(None) detaches: programs recompile (new generation) and
+    # keep serving identical results.
+    meshed.set_mesh(None)
+    for a, b in zip(meshed.segment(imgs), ref):
+        _check_same(a, b)
+
+    # A one-device mesh is the degenerate single-device path.
+    one = jax.make_mesh((1,), ("data",),
+                        **({"axis_types": (jax.sharding.AxisType.Auto,)}
+                           if hasattr(jax.sharding, "AxisType") else {}))
+    meshed.set_mesh(one)
+    for a, b in zip(meshed.segment(imgs), ref):
+        _check_same(a, b)
+
+    single.shutdown()
+    meshed.shutdown()
+    print("MESH_SERVE_OK")
+
+
+if __name__ == "__main__":
+    main()

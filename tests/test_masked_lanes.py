@@ -1,0 +1,112 @@
+"""Active-lane masking in the batched solver: padding lanes freeze at
+iteration 0 and can never perturb real lanes' trajectories — the
+semantics ``core/distributed`` and ``core/batched`` rely on to keep
+mesh-padded ragged batches bitwise-faithful to their unpadded solves."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import batched as B
+from repro.core import fcm as F
+from repro.core import solver as SV
+from repro.data import phantom
+
+CFG = F.FCMConfig(max_iters=300)
+
+
+def _ragged_hists(n=3, size=40):
+    imgs = [phantom.phantom_slice(size + 8 * z, size, noise=4.0,
+                                  slice_pos=0.3 + 0.1 * z, seed=z)[0]
+            for z in range(n)]
+    return B.histograms_of(imgs)
+
+
+def test_masked_while_inactive_lanes_frozen():
+    v0 = jnp.asarray([[0.0, 1.0], [5.0, 9.0]], jnp.float32)
+    step = lambda v: v * 0.5 + 1.0            # contraction, nontrivial
+    tol = jnp.asarray([1e-6, 1e-6], jnp.float32)
+    active = jnp.asarray([True, False])
+    v, delta, iters, total = SV.masked_while_centers(
+        step, v0, tol, 50, active=active)
+    # Inactive lane: v0 verbatim, 0 iterations, 0.0 residual.
+    np.testing.assert_array_equal(np.asarray(v)[1], np.asarray(v0)[1])
+    assert int(np.asarray(iters)[1]) == 0
+    assert float(np.asarray(delta)[1]) == 0.0
+    # Active lane: identical to the unmasked solo run.
+    v_solo, d_solo, it_solo, _ = SV.masked_while_centers(
+        step, v0[:1], tol[:1], 50)
+    np.testing.assert_array_equal(np.asarray(v)[0], np.asarray(v_solo)[0])
+    assert int(np.asarray(iters)[0]) == int(np.asarray(it_solo)[0])
+    assert int(total) == int(np.asarray(iters)[0])
+
+
+def test_masked_none_is_bitwise_preexisting_behavior():
+    hists = _ragged_hists()
+    feats = jnp.broadcast_to(
+        jnp.arange(256, dtype=jnp.float32)[None, :, None],
+        hists.shape + (1,))
+    a = SV.flat_batched_solve(feats, hists, 4, 2.0, 1e-4, 300)
+    b = SV.flat_batched_solve(feats, hists, 4, 2.0, 1e-4, 300,
+                              active=jnp.ones((hists.shape[0],), bool))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_flat_batched_padding_lanes_cannot_perturb_real_lanes():
+    hists = _ragged_hists()
+    nb = hists.shape[1]
+    # Pad with an adversarial payload (all mass in one bin): with the
+    # mask it must not change real lanes, iterate, or stretch `total`.
+    spike = np.zeros((1, nb), np.float32)
+    spike[0, 0] = 1e6
+    padded = jnp.concatenate([hists, jnp.asarray(spike)])
+    active = jnp.asarray([True] * hists.shape[0] + [False])
+
+    def solve(h, act=None):
+        feats = jnp.broadcast_to(
+            jnp.arange(nb, dtype=jnp.float32)[None, :, None],
+            h.shape + (1,))
+        return SV.flat_batched_solve(feats, h, 4, 2.0, 1e-4, 300,
+                                     active=act)
+
+    v_ref, d_ref, it_ref, tot_ref = solve(hists)
+    v, d, it, tot = solve(padded, active)
+    np.testing.assert_array_equal(np.asarray(v)[:-1], np.asarray(v_ref))
+    np.testing.assert_array_equal(np.asarray(it)[:-1], np.asarray(it_ref))
+    assert int(np.asarray(it)[-1]) == 0
+    assert int(tot) == int(tot_ref)
+
+
+def test_solve_batched_parity_on_mesh_padded_ragged_batch():
+    # The exact contract fit_batched_sharded depends on: solving the
+    # padded batch with the mask == solving the unpadded batch, per
+    # lane, including iteration counts.
+    hists = _ragged_hists(5)
+    ref = SV.solve_batched(
+        SV.batch_problems(B.hist_rows(hists), hists, cfg=CFG),
+        backend="reference")
+    pad = jnp.ones((3, hists.shape[1]), jnp.float32)   # 5 -> 8 lanes
+    padded = jnp.concatenate([hists, pad])
+    active = jnp.asarray([True] * 5 + [False] * 3)
+    feats = jnp.broadcast_to(
+        jnp.arange(256, dtype=jnp.float32)[None, :, None],
+        padded.shape + (1,))
+    v, delta, iters, _ = SV.flat_batched_solve(
+        feats, padded, CFG.n_clusters, CFG.m, CFG.eps, CFG.max_iters,
+        active=active)
+    np.testing.assert_allclose(np.asarray(v)[:5, :, 0],
+                               np.asarray(ref.centers), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(iters)[:5],
+                                  np.asarray(ref.n_iters))
+
+
+def test_resident_impls_reject_active_mask():
+    hists = _ragged_hists(2)
+    feats = jnp.broadcast_to(
+        jnp.arange(256, dtype=jnp.float32)[None, :, None],
+        hists.shape + (1,))
+    active = jnp.ones((2,), bool)
+    for impl in ("resident", "resident_streamed"):
+        with pytest.raises(ValueError, match="reference impl only"):
+            SV.flat_batched_solve(feats, hists, 4, 2.0, 1e-4, 300,
+                                  impl=impl, active=active)

@@ -222,3 +222,92 @@ def test_check_sweep_section_counts_error_cells_as_missing_coverage():
                "coverage": {}, "cells": cells, "skipped": []}
     with pytest.raises(ValueError, match="no ok kernel cell"):
         bench_schema.check_sweep_section(section)
+
+
+# ---------------------------------------------------------------------------
+# Distributed family + load_gen section (PR 9)
+# ---------------------------------------------------------------------------
+
+def _dist_cell(mode="batch_hist", ok=True):
+    return {"cell_id": f"distributed/devices=8,mode={mode}",
+            "family": "distributed",
+            "axes": {"mode": mode, "devices": 8}, "status": "ok",
+            "metrics": {"wall_s": 0.1, "per_image_s": 0.01, "batch": 6},
+            "parity": {"ok": ok, "max_center_delta": 0.0}}
+
+
+def test_distributed_cell_roundtrips_schema():
+    bench_schema.validate_cell(json.loads(json.dumps(_dist_cell())))
+
+
+def test_distributed_cell_failed_parity_is_a_schema_violation():
+    with pytest.raises(ValueError, match="parity failed"):
+        bench_schema.validate_cell(_dist_cell(ok=False))
+
+
+def test_check_sweep_section_requires_distributed_modes():
+    section = {"name": "t", "tiny": True, "backend": "cpu",
+               "coverage": {}, "cells": [], "skipped": []}
+    with pytest.raises(ValueError) as exc:
+        bench_schema.check_sweep_section(section)
+    msg = str(exc.value)
+    for mode in bench_schema.REQUIRED_DIST_MODES:
+        assert f"no ok distributed cell for mode '{mode}'" in msg
+
+
+def _load_gen_section(**over):
+    rate = {k: 1.0 for k in bench_schema.RATE_KEYS}
+    section = {
+        "tiny": True, "backend": "cpu", "devices": 1,
+        "route": "histogram",
+        "sync_baseline": {k: 1.0 for k in bench_schema.SYNC_BASELINE_KEYS},
+        "rates": [dict(rate)], "sustained": dict(rate),
+        "qps_ratio_vs_sync": 3.5,
+        "gate": {"enforced": True, "min_ratio": 3.0, "ok": True},
+    }
+    section.update(over)
+    return section
+
+
+def test_check_load_gen_section_roundtrips():
+    bench_schema.check_load_gen_section(
+        json.loads(json.dumps(_load_gen_section())))
+
+
+def test_check_load_gen_section_flags_enforced_failed_gate():
+    bad = _load_gen_section(
+        gate={"enforced": True, "min_ratio": 3.0, "ok": False})
+    with pytest.raises(ValueError, match="gate failed"):
+        bench_schema.check_load_gen_section(bad)
+    # Unenforced failure is recorded, not fatal.
+    bench_schema.check_load_gen_section(_load_gen_section(
+        gate={"enforced": False, "min_ratio": 3.0, "ok": False}))
+
+
+def test_check_load_gen_section_names_missing_rate_keys():
+    sec = _load_gen_section()
+    del sec["rates"][0]["p99_s"]
+    del sec["sustained"]["queue_depth"]
+    with pytest.raises(ValueError) as exc:
+        bench_schema.check_load_gen_section(sec)
+    msg = str(exc.value)
+    assert "rates[0]: missing 'p99_s'" in msg
+    assert "sustained: missing 'queue_depth'" in msg
+
+
+def test_check_load_gen_section_requires_empty_rates_to_fail():
+    with pytest.raises(ValueError, match="rates sweep empty"):
+        bench_schema.check_load_gen_section(_load_gen_section(rates=[]))
+
+
+def test_validate_requires_load_gen_from_pr9():
+    base = {k: {} for k in bench_schema.TOP_KEYS
+            if k not in ("pr", "load_gen")}
+    with pytest.raises(ValueError,
+                       match="missing top-level key 'load_gen'"):
+        bench_schema.validate({**base, "pr": 9, "tiny": True})
+    # pr 8 records predate the harness and stay valid without it.
+    try:
+        bench_schema.validate({**base, "pr": 8, "tiny": True})
+    except ValueError as e:
+        assert "load_gen" not in str(e)
