@@ -27,7 +27,13 @@ import sys
 from typing import Any, Dict, List
 
 TOP_KEYS = ("pr", "backend", "tiny", "batched_throughput", "spatial_fcm",
-            "superpixel_fcm", "roofline", "sweep", "load_gen")
+            "superpixel_fcm", "roofline", "sweep", "load_gen", "faults")
+
+#: Keys of the ``faults`` section — the injected-vs-clean provenance
+#: marker. A record claiming zero injections must also say chaos=False;
+#: a chaos run (injected > 0) must be flagged so it can never be read
+#: as (or regress-gated against) a clean perf record.
+FAULTS_KEYS = ("seed", "injected", "by_site", "chaos")
 
 CELL_KEYS = ("kind", "impl", "backend", "shape", "flops", "bytes",
              "wall_s", "achieved_flops_per_s", "achieved_bytes_per_s",
@@ -303,6 +309,45 @@ def check_load_gen_section(section: dict) -> None:
 
 
 # ---------------------------------------------------------------------------
+# Faults section (fault-injection provenance)
+# ---------------------------------------------------------------------------
+
+def _check_faults(section, problems: List[str]) -> None:
+    """The faults section must carry the full injection snapshot, and
+    its internal consistency is part of the schema: a record with
+    injected faults that claims ``chaos: false`` is masquerading as a
+    clean benchmark."""
+    if not isinstance(section, dict):
+        problems.append("faults: section missing")
+        return
+    for k in FAULTS_KEYS:
+        if k not in section:
+            problems.append(f"faults: missing {k!r}")
+    injected = section.get("injected", 0)
+    by_site = section.get("by_site")
+    if not isinstance(by_site, dict):
+        problems.append("faults: by_site must be a site->count mapping")
+        by_site = {}
+    if injected and not section.get("chaos"):
+        problems.append(f"faults: {injected} faults injected but "
+                        "chaos=false — an injected run may not pose as "
+                        "a clean one")
+    if sum(by_site.values()) != injected:
+        problems.append(f"faults: by_site totals "
+                        f"{sum(by_site.values())} but injected="
+                        f"{injected}")
+
+
+def check_faults_section(section: dict) -> None:
+    """Raise ValueError naming every faults-section schema violation."""
+    problems: List[str] = []
+    _check_faults(section, problems)
+    if problems:
+        raise ValueError("faults schema violations:\n  "
+                         + "\n  ".join(problems))
+
+
+# ---------------------------------------------------------------------------
 # Standalone report schemas (spatial_fcm.json / superpixel_fcm.json)
 # ---------------------------------------------------------------------------
 
@@ -369,9 +414,9 @@ def validate_superpixel_report(report: dict) -> None:
 def validate(bench: dict) -> None:
     """Raise ValueError naming every schema violation (None when OK).
 
-    ``sweep`` is required from pr >= 8 and ``load_gen`` from pr >= 9
-    (older committed ledger entries predate those harnesses and stay
-    valid as-written)."""
+    ``sweep`` is required from pr >= 8, ``load_gen`` from pr >= 9 and
+    ``faults`` from pr >= 10 (older committed ledger entries predate
+    those harnesses and stay valid as-written)."""
     problems: List[str] = []
     pr = bench.get("pr", 0)
     optional = set()
@@ -379,6 +424,8 @@ def validate(bench: dict) -> None:
         optional.add("sweep")
     if pr < 9:
         optional.add("load_gen")
+    if pr < 10:
+        optional.add("faults")
     for k in TOP_KEYS:
         if k not in optional and k not in bench:
             problems.append(f"missing top-level key {k!r}")
@@ -388,6 +435,8 @@ def validate(bench: dict) -> None:
         _check_sweep(bench["sweep"], problems)
     if "load_gen" in bench:
         _check_load_gen(bench["load_gen"], problems)
+    if "faults" in bench:
+        _check_faults(bench["faults"], problems)
     bt = bench.get("batched_throughput", {})
     hist = bt.get("histogram", {}) if isinstance(bt, dict) else {}
     _check_latency(hist.get("latency"), "batched_throughput.histogram",

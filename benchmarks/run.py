@@ -40,10 +40,20 @@ import os
 #: ``BENCH_pr{CURRENT_PR}.json`` and the regression baseline
 #: auto-resolves to the newest committed ``BENCH_pr*.json`` with an
 #: older pr number (no more hand-bumping a hardcoded baseline path).
-CURRENT_PR = 9
+CURRENT_PR = 10
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
 FIG_DIR = os.path.join(OUT_DIR, "figures")
+
+
+def _faults_snapshot() -> dict:
+    """The BENCH record's faults section: the live global injector's
+    snapshot if one is somehow installed (a chaos run that must be
+    flagged), otherwise the explicit all-clean marker."""
+    from repro import faults as FI
+
+    inj = FI.get()
+    return inj.snapshot() if inj is not None else FI.clean_snapshot()
 
 
 def perf_gate(bench: dict, baseline_path: str = None) -> None:
@@ -156,6 +166,11 @@ def main(argv=None):
         # async serving under open-loop Poisson load: sustained QPS,
         # p50/p99, queue depth, batch occupancy + the 3x gate
         "load_gen": load,
+        # fault-injection provenance: the benchmark harness never
+        # installs an injector, so a clean snapshot here is the record's
+        # proof it was not a chaos run (bench_schema enforces the
+        # consistency of injected/chaos).
+        "faults": _faults_snapshot(),
     }
     bench_schema.validate(bench)
     print("# BENCH schema OK")

@@ -143,6 +143,11 @@ class FCMResult:
     n_iters: int
     final_delta: float
     membership: Optional[jax.Array] = None   # (c, N) if kept
+    #: False when the solve exhausted max_iters without meeting its
+    #: center-movement (or staged-membership) tolerance.
+    converged: bool = True
+    #: False when the returned centers contain NaN/Inf.
+    healthy: bool = True
 
 
 # --- paper-faithful staged pipeline -----------------------------------------

@@ -414,6 +414,34 @@ def _tol_from_range(rng, eps):
     return eps * jnp.where(rng > 0, rng, 1.0) * 0.1
 
 
+@partial(jax.jit, static_argnames=("b",))
+def _lane_tol_stencil(features, eps, b):
+    flat = features.reshape(b, -1)
+    rng = jnp.max(flat, axis=1) - jnp.min(flat, axis=1)
+    return _tol_from_range(rng, eps)
+
+
+@jax.jit
+def _lane_tol_flat(feats, w, eps):
+    lo, hi = jax.vmap(weighted_support)(feats, w)
+    return _tol_from_range(jnp.max(hi - lo, axis=1), eps)
+
+
+def lane_tolerances(problem: FCMProblem, eps: float) -> np.ndarray:
+    """Host-side replica of the per-lane center-movement tolerances the
+    batched loop drivers derive internally (same f32 arithmetic), so a
+    post-solve pass can decide per lane whether ``final_delta`` actually
+    met the stop test — the ``converged`` signal on
+    :class:`BatchedFCMResult`. Jitted per shape: this runs on every
+    ``solve_batched`` call, so eager dispatch here would tax the B=64
+    hot path the throughput gate times."""
+    if problem.stencil is not None:
+        b = problem.features.shape[0]
+        return np.asarray(_lane_tol_stencil(problem.features, eps, b))
+    feats, w = problem.rows()
+    return np.asarray(_lane_tol_flat(feats, w, eps))
+
+
 def _single_init(problem: FCMProblem, eps: float, tol: Optional[float]):
     """Concrete (v0 (c, D), tol) for one problem (eager, like fit_*)."""
     if problem.stencil is not None:
@@ -762,9 +790,13 @@ def solve(problem: FCMProblem, cfg: Optional[F.FCMConfig] = None, *,
         u = SP.spatial_membership(img, v[:, 0], m, alpha, neighbors)
         labels = F.defuzzify(u.reshape(c, -1)).reshape(img.shape)
         _record_telemetry("stencil", impl, int(it), float(delta))
-        return F.FCMResult(centers=v[:, 0], labels=labels, n_iters=int(it),
+        centers = v[:, 0]
+        return F.FCMResult(centers=centers, labels=labels, n_iters=int(it),
                            final_delta=float(delta),
-                           membership=u if keep_membership else None)
+                           membership=u if keep_membership else None,
+                           converged=bool(float(delta) < tol),
+                           healthy=bool(np.isfinite(
+                               np.asarray(centers)).all()))
 
     feats2, w = problem.rows()
     if impl == "resident":
@@ -798,30 +830,48 @@ def solve(problem: FCMProblem, cfg: Optional[F.FCMConfig] = None, *,
     centers = v[:, 0] if problem.scalar else v
     _record_telemetry("flat", impl, int(it), float(delta))
     return F.FCMResult(centers=centers, labels=labels, n_iters=int(it),
-                       final_delta=float(delta), membership=u)
+                       final_delta=float(delta), membership=u,
+                       converged=bool(float(delta) < tol),
+                       healthy=bool(np.isfinite(np.asarray(centers)).all()))
 
 
 @dataclasses.dataclass
 class BatchedFCMResult:
-    """Per-lane results of a batched solve."""
+    """Per-lane results of a batched solve (+ per-lane health flags)."""
     centers: jax.Array            # (B, c) scalar or (B, c, D)
     n_iters: np.ndarray           # (B,) int32, per-lane iteration counts
     final_delta: np.ndarray       # (B,) float32, per-lane last center move
     total_iters: int              # global while_loop trip count
     labels: Optional[list] = None  # per lane, if the adapter computes them
+    #: (B,) bool — lane met its center-movement tolerance (False =
+    #: max_iters exhausted). None only on legacy constructors.
+    converged: Optional[np.ndarray] = None
+    #: (B,) bool — lane's centers are all finite (post-salvage).
+    healthy: Optional[np.ndarray] = None
+    #: (B,) bool — lane was re-solved on the reference backend after the
+    #: primary impl left it poisoned/unconverged.
+    salvaged: Optional[np.ndarray] = None
 
 
 def solve_batched(problem: FCMProblem, cfg: Optional[F.FCMConfig] = None, *,
                   eps: Optional[float] = None,
                   max_iters: Optional[int] = None,
                   backend: str = "auto",
-                  interpret: Optional[bool] = None) -> BatchedFCMResult:
+                  interpret: Optional[bool] = None,
+                  salvage: bool = True) -> BatchedFCMResult:
     """Solve a stacked batch of independent problems (``batch=True``):
     one device loop — the per-lane-masked reference ``while_loop``, or
     the VMEM-resident whole-solve kernel (``backend="resident"``, or
     ``auto`` on TPU when the problem fits) — with each lane freezing at
     its own convergence point, so a lane's trajectory is identical to
-    what :func:`solve` would produce for it alone."""
+    what :func:`solve` would produce for it alone.
+
+    Post-solve, every lane gets health flags (``converged`` — met its
+    tolerance; ``healthy`` — finite centers), and with ``salvage=True``
+    (the default) bad lanes are re-solved *individually-masked* on the
+    reference loop and scattered back — one poisoned or kernel-diverged
+    lane degrades to the reference backend instead of failing the whole
+    batch, and healthy lanes' centers ride through bitwise untouched."""
     if not problem.batch:
         raise ValueError("solve_batched() needs a batch=True problem "
                          "(see batch_problems())")
@@ -862,14 +912,66 @@ def solve_batched(problem: FCMProblem, cfg: Optional[F.FCMConfig] = None, *,
                                                      max_iters)
         if problem.scalar:
             v = v[..., 0]
+    from repro import faults as FI
+    inj = FI.get()
+    if inj is not None:
+        v = inj.corrupt("solve_batched", v)
+
     n_iters = np.asarray(iters)
     final_delta = np.asarray(delta)
+    total = int(it)
     kind = "stencil" if problem.stencil is not None else "flat"
-    _record_telemetry(kind, impl, int(it),
-                      float(np.max(final_delta)), lane_iters=n_iters)
+
+    cen = np.asarray(v)
+    b = cen.shape[0]
+    lane_tol = lane_tolerances(problem, eps)
+    healthy = np.isfinite(cen.reshape(b, -1)).all(axis=1)
+    converged = np.asarray(final_delta < lane_tol) \
+        & np.isfinite(final_delta)
+
+    # Per-lane salvage: poisoned lanes always re-solve on the reference
+    # loop (finite math beats a NaN result); unconverged lanes re-solve
+    # only when the primary impl wasn't already the reference step
+    # (identical math would just exhaust max_iters again).
+    salvaged = np.zeros(b, dtype=bool)
+    bad = ~healthy
+    if impl != "reference":
+        bad = bad | ~converged
+    if salvage and bad.any():
+        idx = np.nonzero(bad)[0]
+        if problem.stencil is not None:
+            v2, d2, i2, it2 = _stencil_batched_loop(
+                problem.features[idx], c, m, problem.stencil.alpha,
+                problem.stencil.neighbors, eps, max_iters)
+        else:
+            feats, w = problem.rows()
+            v2, d2, i2, it2 = _flat_batched_loop(
+                feats[idx], w[idx], c, m, eps, max_iters)
+            if problem.scalar:
+                v2 = v2[..., 0]
+        cen = np.array(cen, copy=True)
+        cen[idx] = np.asarray(v2)
+        n_iters = np.array(n_iters, copy=True)
+        n_iters[idx] = np.asarray(i2)
+        final_delta = np.array(final_delta, copy=True)
+        final_delta[idx] = np.asarray(d2)
+        total = max(total, int(it2))
+        healthy = np.isfinite(cen.reshape(b, -1)).all(axis=1)
+        converged = np.asarray(final_delta < lane_tol) \
+            & np.isfinite(final_delta)
+        salvaged[idx] = True
+        v = jnp.asarray(cen)
+        from repro import obs
+        obs.default_registry().counter(
+            "solver.salvaged_lanes", kind=kind).inc(len(idx))
+
+    _record_telemetry(kind, impl, total,
+                      float(np.nanmax(final_delta)), lane_iters=n_iters)
     return BatchedFCMResult(centers=v, n_iters=n_iters,
                             final_delta=final_delta,
-                            total_iters=int(it))
+                            total_iters=total,
+                            converged=converged, healthy=healthy,
+                            salvaged=salvaged)
 
 
 # ---------------------------------------------------------------------------
@@ -927,7 +1029,9 @@ def solve_staged(problem: FCMProblem, *, eps: float = 5e-3,
         v = F.update_centers(x, u, m)
     return F.FCMResult(centers=v, labels=F.defuzzify(u), n_iters=n_iters,
                        final_delta=delta,
-                       membership=u if keep_membership else None)
+                       membership=u if keep_membership else None,
+                       converged=bool(delta < eps),
+                       healthy=bool(np.isfinite(np.asarray(v)).all()))
 
 
 def _solve_sequential(problem: FCMProblem, eps: float, max_iters: int,
@@ -942,6 +1046,10 @@ def _solve_sequential(problem: FCMProblem, eps: float, max_iters: int,
     v, labels, it = S.fcm_sequential_numpy(
         np.asarray(problem.features), c=problem.c, m=problem.m, eps=eps,
         max_iters=max_iters, seed=seed, u0=u0)
+    # The comparator reports no residual (final_delta=NaN), so converged
+    # is inferred from the iteration budget.
     return F.FCMResult(centers=jnp.asarray(v, jnp.float32),
                        labels=jnp.asarray(labels),
-                       n_iters=int(it), final_delta=float("nan"))
+                       n_iters=int(it), final_delta=float("nan"),
+                       converged=bool(int(it) < max_iters),
+                       healthy=bool(np.isfinite(np.asarray(v)).all()))

@@ -404,6 +404,12 @@ def select_step(kind: str, *, prefer: Optional[str] = None,
     kinds = sorted({k for k, _ in _STEP_REGISTRY})
     if kind not in kinds:
         raise ValueError(f"unknown step kind {kind!r}; one of {kinds}")
+    from repro import faults as FI
+    _inj = FI.get()
+    if _inj is not None:
+        # Chaos hook: lets tests inject a dispatch-time launch failure
+        # for a specific (kind, impl) without monkeypatching internals.
+        _inj.maybe_fail("kernel", route=f"{kind}/{prefer or 'auto'}")
     if prefer is not None:
         impl = _STEP_REGISTRY.get((kind, prefer))
         if impl is None:

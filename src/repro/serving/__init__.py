@@ -8,7 +8,8 @@ for old call sites.
 """
 from . import fcm_engine  # noqa: F401
 from .admission import (DeadlineExceeded, EngineShutdown,  # noqa: F401
-                        SegmentationFuture)
+                        InvalidInput, Overloaded, SegmentationFuture,
+                        SolveFailed)
 from .fcm_engine import FCMServeEngine, SegmentationResult  # noqa: F401
 
 

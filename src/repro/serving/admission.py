@@ -13,9 +13,9 @@ materialize. Continuous batching is where the throughput comes from:
 concurrent callers share one RouteProgram dispatch instead of serializing
 one-lane flushes.
 
-This module is deliberately engine-agnostic plumbing: the future, the
-two admission errors, and nothing else. The queueing policy lives on the
-engine (it owns the queues, buckets and programs).
+This module is deliberately engine-agnostic plumbing: the future and
+the typed admission/fault errors, nothing else. The queueing policy
+lives on the engine (it owns the queues, buckets and programs).
 """
 from __future__ import annotations
 
@@ -23,7 +23,8 @@ import threading
 import time
 from typing import Any, Optional
 
-__all__ = ["SegmentationFuture", "DeadlineExceeded", "EngineShutdown"]
+__all__ = ["SegmentationFuture", "DeadlineExceeded", "EngineShutdown",
+           "InvalidInput", "Overloaded", "SolveFailed"]
 
 
 class DeadlineExceeded(RuntimeError):
@@ -33,6 +34,21 @@ class DeadlineExceeded(RuntimeError):
 class EngineShutdown(RuntimeError):
     """The engine was shut down with this request still pending (or a
     submit arrived after shutdown)."""
+
+
+class InvalidInput(ValueError):
+    """The payload was rejected at submit time (NaN/Inf floats, empty
+    image) — before consuming a request id or poisoning a shared batch."""
+
+
+class Overloaded(RuntimeError):
+    """Shed under queue-depth overload: the engine failed this request
+    (lowest urgency) fast rather than blowing deadlines for everyone."""
+
+
+class SolveFailed(RuntimeError):
+    """The solve produced non-finite centers even after the reference-
+    backend salvage pass — the per-request terminal numerical error."""
 
 
 class SegmentationFuture:
@@ -48,7 +64,7 @@ class SegmentationFuture:
     """
 
     __slots__ = ("request_id", "method", "deadline", "submit_t",
-                 "resolve_t", "_event", "_result", "_error")
+                 "resolve_t", "_lock", "_event", "_result", "_error")
 
     def __init__(self, request_id: int, method: str,
                  deadline: Optional[float] = None):
@@ -58,27 +74,47 @@ class SegmentationFuture:
         self.deadline = deadline
         self.submit_t = time.perf_counter()
         self.resolve_t: Optional[float] = None
+        self._lock = threading.Lock()
         self._event = threading.Event()
         self._result: Any = None
         self._error: Optional[BaseException] = None
 
     # -- resolution (engine side) ------------------------------------------
 
+    def try_set_result(self, result: Any) -> bool:
+        """Atomically resolve with a result; False if already resolved.
+        The race-safe face ``set_result`` and the engine's concurrent
+        resolvers (flusher vs shutdown vs sync flush) build on — the
+        check-and-set is one critical section, so two racing resolvers
+        can never both win (or both raise)."""
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self._result = result
+            self.resolve_t = time.perf_counter()
+            self._event.set()
+            return True
+
+    def try_set_exception(self, err: BaseException) -> bool:
+        """Atomically resolve with an exception; False if already
+        resolved."""
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self._error = err
+            self.resolve_t = time.perf_counter()
+            self._event.set()
+            return True
+
     def set_result(self, result: Any) -> None:
-        if self._event.is_set():
+        if not self.try_set_result(result):
             raise RuntimeError(
                 f"future for request {self.request_id} resolved twice")
-        self._result = result
-        self.resolve_t = time.perf_counter()
-        self._event.set()
 
     def set_exception(self, err: BaseException) -> None:
-        if self._event.is_set():
+        if not self.try_set_exception(err):
             raise RuntimeError(
                 f"future for request {self.request_id} resolved twice")
-        self._error = err
-        self.resolve_t = time.perf_counter()
-        self._event.set()
 
     # -- readout (caller side) ---------------------------------------------
 

@@ -64,6 +64,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as _P
 
+from repro import faults as FI
 from repro import obs
 from repro.core import distributed as DD
 from repro.core import fcm as F
@@ -73,7 +74,8 @@ from repro.core.batched import hist_rows
 from repro.kernels import ops as kops
 from repro.superpixel import pipeline as SX
 
-from .admission import DeadlineExceeded, EngineShutdown, SegmentationFuture
+from .admission import (DeadlineExceeded, EngineShutdown, InvalidInput,
+                        Overloaded, SegmentationFuture, SolveFailed)
 
 
 @dataclasses.dataclass
@@ -85,6 +87,22 @@ class SegmentationResult:
     n_iters: int                  # 0 for cache hits
     cache_hit: bool
     method: str = "histogram"
+    #: False when this request's lane exhausted its iteration budget
+    #: without meeting the solver tolerance (the result is still the
+    #: best available centers — degraded, not wrong-typed).
+    converged: bool = True
+
+
+def _validate_payload(img: np.ndarray) -> None:
+    """Submit-time input guard: empty and non-finite float payloads are
+    rejected with a typed :class:`InvalidInput` *before* they consume a
+    request id or poison a shared batch lane. Integer payloads skip the
+    finite scan (they cannot carry NaN/Inf) so the uint8 hot path pays
+    nothing."""
+    if img.size == 0:
+        raise InvalidInput(f"empty image payload (shape {img.shape})")
+    if img.dtype.kind == "f" and not np.isfinite(img).all():
+        raise InvalidInput("image payload contains NaN/Inf pixels")
 
 
 # ---------------------------------------------------------------------------
@@ -821,7 +839,13 @@ class FCMServeEngine:
                  tracing: bool = True,
                  trace_ring: int = 64,
                  mesh=None,
-                 max_wait_ms: float = 10.0):
+                 max_wait_ms: float = 10.0,
+                 faults: Optional[Any] = None,
+                 retries: int = 2,
+                 retry_backoff_s: float = 0.05,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 5.0,
+                 max_queue_depth: Optional[int] = None):
         if not batch_sizes or any(b <= 0 for b in batch_sizes):
             raise ValueError(f"bad batch_sizes {batch_sizes!r}")
         self.cfg = cfg
@@ -856,6 +880,34 @@ class FCMServeEngine:
         self.metrics = obs.MetricsRegistry()
         self.tracer = obs.Tracer(max_traces=trace_ring, enabled=tracing,
                                  metrics=self.metrics)
+        # -- fault tolerance ------------------------------------------------
+        #: bounded retry on transient launch failures (exponential
+        #: backoff: retry_backoff_s * 2^attempt between attempts).
+        self.retries = int(retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        #: consecutive post-retry launch failures before a route's
+        #: compiled program is circuit-broken to the staged reference
+        #: path; after breaker_cooldown_s one half-open probe launch
+        #: tests recovery.
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_cooldown_s = float(breaker_cooldown_s)
+        #: queued-request ceiling: submits beyond it shed the lowest-
+        #: urgency queued async request (or the incoming one) with a
+        #: typed Overloaded error. None = unbounded (the default).
+        self.max_queue_depth = (None if max_queue_depth is None
+                                else int(max_queue_depth))
+        if faults is None:
+            self._faults: Optional[FI.FaultInjector] = None
+        elif isinstance(faults, FI.FaultInjector):
+            self._faults = faults
+        else:
+            self._faults = FI.FaultInjector(faults, registry=self.metrics)
+        #: per-route breaker state {"state", "failures", "opened_t"};
+        #: guarded by _lock.
+        self._breakers: Dict[str, Dict[str, Any]] = {}
+        #: hard (BaseException) flusher deaths observed; restarts are the
+        #: "flusher.restarts" counter.
+        self._flusher_kills = 0
         #: request id -> (submit perf_counter, route name); consumed when
         #: the request's result materializes, feeding the per-route
         #: submit->result latency histogram.
@@ -889,12 +941,15 @@ class FCMServeEngine:
         self.metrics.counter("requests")
         self.metrics.counter("cache_hits")
         self.metrics.gauge("queue.depth")
+        self.metrics.counter("flusher.restarts")
         for route in ROUTES.values():
             self._route_counter("requests", route.name)
             self._route_counter("cache_hits", route.name)
             for k in ("batches", "images", "padded", "iters",
-                      "deadline_expired"):
+                      "deadline_expired", "retries", "shed", "salvaged",
+                      "degraded", "breaker_trips", "invalid_input"):
                 self._route_counter(k, route.name)
+            self.metrics.gauge("route.breaker_state", route=route.name)
             for stage in ("ingest", "solve", "materialize", "compress"):
                 self._stage_seconds(route.name, stage)
             self._latency_hist(route.name)
@@ -995,8 +1050,19 @@ class FCMServeEngine:
             self._latency_hist(route.name).record(
                 time.perf_counter() - sub[0])
         fut = self._futures.pop(r.request_id, None)
-        if fut is not None and not fut.done():
-            fut.set_result(r)
+        if fut is not None:
+            fut.try_set_result(r)
+
+    def _fail_request(self, p: Any, err: BaseException) -> bool:
+        """Resolve one request's bookkeeping with a typed error; returns
+        True when an async future took it (sync callers have no future —
+        their flush must surface the error itself)."""
+        self._submit_t.pop(p.request_id, None)
+        fut = self._futures.pop(p.request_id, None)
+        if fut is not None:
+            fut.try_set_exception(err)
+            return True
+        return False
 
     # -- ingest ------------------------------------------------------------
 
@@ -1010,10 +1076,18 @@ class FCMServeEngine:
         img = np.asarray(img)
         # Ingest validates eagerly: a request failing inside flush()
         # would discard the whole drained batch's results. A raise here
-        # consumes neither a request id nor a counter (the span records
-        # status="error" and re-raises before any counter moves).
-        with self.tracer.span("ingest", ring=False, route=method) as sp:
-            pending = route.ingest(self, img, self._next_id)
+        # consumes neither a request id nor a queue slot (the span
+        # records status="error" and re-raises before any counter but
+        # the invalid-input tally moves).
+        try:
+            with self.tracer.span("ingest", ring=False, route=method) as sp:
+                if self._faults is not None:
+                    self._faults.maybe_fail("ingest", route=method)
+                _validate_payload(img)
+                pending = route.ingest(self, img, self._next_id)
+        except InvalidInput:
+            self._route_counter("invalid_input", method).inc()
+            raise
         self._stage_seconds(method, "ingest").inc(sp.wall_s)
         return pending
 
@@ -1079,12 +1153,35 @@ class FCMServeEngine:
             fut.set_exception(DeadlineExceeded(
                 f"deadline {deadline}s already expired at submit"))
             return fut
-        pending = self._ingest(method, img)
+        try:
+            pending = self._ingest(method, img)
+        except (InvalidInput, FI.InjectedFault) as e:
+            # Same semantics as an already-expired deadline: a failed
+            # future, no request id, no queue slot. Injected ingest
+            # faults take the same door — a payload that dies during
+            # decode must fail only its own submit.
+            fut = SegmentationFuture(-1, method)
+            fut.submit_t = t_submit
+            fut.set_exception(e)
+            return fut
+        abs_deadline = None if deadline is None else t_submit + deadline
         with self._lock:
+            if (self.max_queue_depth is not None
+                    and self._qtotal >= self.max_queue_depth
+                    and not self._shed_for(
+                        float("inf") if abs_deadline is None
+                        else abs_deadline)):
+                # Every queued request is at least as urgent as this
+                # one: shed the incoming request instead.
+                self._route_counter("shed", method).inc()
+                fut = SegmentationFuture(-1, method, deadline=abs_deadline)
+                fut.submit_t = t_submit
+                fut.set_exception(Overloaded(
+                    f"queue depth {self._qtotal} at max_queue_depth="
+                    f"{self.max_queue_depth}; request shed"))
+                return fut
             rid = self._enqueue(method, pending, t_submit)
-            fut = SegmentationFuture(
-                rid, method,
-                deadline=None if deadline is None else t_submit + deadline)
+            fut = SegmentationFuture(rid, method, deadline=abs_deadline)
             fut.submit_t = t_submit
             self._futures[rid] = fut
             self._ensure_flusher()
@@ -1101,6 +1198,43 @@ class FCMServeEngine:
                     == 0):
                 self._cond.notify_all()
         return fut
+
+    def _shed_for(self, incoming_deadline: float) -> bool:
+        """Overload shedding (caller holds ``_lock``): fail the single
+        *least urgent* queued async request — the one with the farthest
+        (or no) deadline — with :class:`Overloaded`, freeing its slot
+        for a strictly more urgent incoming request. Returns False when
+        nothing queued is less urgent (ties shed the incoming request:
+        it is the newest) or only sync requests are queued (their
+        callers hold no future to fail)."""
+        worst: Optional[Tuple[Tuple[float, int], str, Any]] = None
+        for name, q in self._queues.items():
+            for p in q:
+                fut = self._futures.get(p.request_id)
+                if fut is None:
+                    continue
+                d = (fut.deadline if fut.deadline is not None
+                     else float("inf"))
+                key = (d, p.request_id)
+                if worst is None or key > worst[0]:
+                    worst = (key, name, p)
+        if worst is None or worst[0][0] <= incoming_deadline:
+            return False
+        (_, rid), name, p = worst
+        self._queues[name].remove(p)
+        self._qtotal -= 1
+        self._depth_gauge.set(self._qtotal)
+        self._depth_gauge_for(name).set(len(self._queues[name]))
+        if self._async_n.get(name):
+            self._async_n[name] -= 1
+        self._route_counter("shed", name).inc()
+        self._submit_t.pop(rid, None)
+        fut = self._futures.pop(rid, None)
+        if fut is not None:
+            fut.try_set_exception(Overloaded(
+                f"request {rid} shed under overload (queue at "
+                f"max_queue_depth={self.max_queue_depth})"))
+        return True
 
     @staticmethod
     def _normalize(hist: np.ndarray) -> np.ndarray:
@@ -1145,10 +1279,7 @@ class FCMServeEngine:
                         for p in pend:
                             if p.request_id in results:
                                 continue
-                            self._submit_t.pop(p.request_id, None)
-                            fut = self._futures.pop(p.request_id, None)
-                            if fut is not None and not fut.done():
-                                fut.set_exception(e)
+                            self._fail_request(p, e)
                         if first_err is None:
                             first_err = e
         if first_err is not None and raise_errors:
@@ -1171,10 +1302,9 @@ class FCMServeEngine:
                 self._futures.pop(p.request_id, None)
                 self._submit_t.pop(p.request_id, None)
                 self._route_counter("deadline_expired", route.name).inc()
-                if not fut.done():
-                    fut.set_exception(DeadlineExceeded(
-                        f"request {p.request_id} missed its deadline "
-                        f"while queued"))
+                fut.try_set_exception(DeadlineExceeded(
+                    f"request {p.request_id} missed its deadline "
+                    f"while queued"))
                 continue
             keep.append(p)
 
@@ -1235,8 +1365,17 @@ class FCMServeEngine:
     def _ensure_flusher(self) -> None:
         """Start the batch-formation thread lazily (caller holds
         ``_lock``): engines serving only the synchronous API never pay
-        for — or behave differently because of — a background thread."""
-        if self._flusher is None or not self._flusher.is_alive():
+        for — or behave differently because of — a background thread.
+        Called on *every* async submit, so a flusher that died hard
+        (anything escaping the supervised loop, including an injected
+        :class:`~repro.faults.FlusherKilled`) is replaced before the new
+        request could ever hang on a dead thread."""
+        if self._flusher is not None and not self._flusher.is_alive():
+            # Replacing a dead thread (supervised restarts inside a live
+            # loop count themselves).
+            self.metrics.counter("flusher.restarts").inc()
+            self._flusher = None
+        if self._flusher is None:
             self._flusher = threading.Thread(
                 target=self._flusher_loop, name="fcm-serve-flusher",
                 daemon=True)
@@ -1275,20 +1414,47 @@ class FCMServeEngine:
         return max(0.0, oldest + self.max_wait_ms / 1000.0 - now)
 
     def _flusher_loop(self) -> None:
+        # Supervised: the whole iteration body is wrapped, so a raise
+        # anywhere — _flush_due bookkeeping on a malformed payload, the
+        # flush machinery itself — restarts the loop in place (counted
+        # in flusher.restarts) instead of silently killing the thread
+        # with async clients parked on it forever. Only BaseException
+        # (thread-kill) escapes; _ensure_flusher replaces the thread on
+        # the next async submit.
         while True:
-            with self._lock:
-                while True:
-                    if self._closed:
-                        return
-                    wait = self._flush_due()
-                    if wait is not None and wait <= 0.0:
-                        break
-                    self._cond.wait(timeout=wait)
-            # Outside the lock: the flush body serializes on _flush_lock
-            # and swaps queues atomically; errors have already been
-            # routed into the affected futures (raise_errors=False), so
-            # nothing can kill the thread mid-service.
-            self.flush(raise_errors=False)
+            try:
+                if self._faults is not None:
+                    self._faults.maybe_fail("flusher")
+                with self._lock:
+                    while True:
+                        if self._closed:
+                            return
+                        wait = self._flush_due()
+                        if wait is not None and wait <= 0.0:
+                            break
+                        self._cond.wait(timeout=wait)
+                # Outside the lock: the flush body serializes on
+                # _flush_lock and swaps queues atomically; per-route
+                # errors have already been routed into the affected
+                # futures (raise_errors=False).
+                self.flush(raise_errors=False)
+            except FI.FlusherKilled:
+                # Hard thread death. If work is still pending, spawn a
+                # replacement before dying — parked futures must never
+                # hang on a corpse (submit_async also re-ensures, but a
+                # lone in-flight request has no later submit to do it).
+                with self._lock:
+                    self._flusher_kills += 1
+                    self._flusher = None
+                    if not self._closed and (
+                            self._qtotal > 0
+                            or sum(self._async_n.values()) > 0):
+                        self.metrics.counter("flusher.restarts").inc()
+                        self._ensure_flusher()
+                return
+            except Exception:   # noqa: BLE001 — supervised restart
+                self.metrics.counter("flusher.restarts").inc()
+                continue
 
     def shutdown(self, drain: bool = True) -> None:
         """Stop the background flusher and close admission. With
@@ -1318,10 +1484,7 @@ class FCMServeEngine:
             self._set_queue_gauges()
         err = EngineShutdown("engine shut down with the request queued")
         for p in dropped:
-            self._submit_t.pop(p.request_id, None)
-            fut = self._futures.pop(p.request_id, None)
-            if fut is not None and not fut.done():
-                fut.set_exception(err)
+            self._fail_request(p, err)
 
     @property
     def closed(self) -> bool:
@@ -1394,53 +1557,251 @@ class FCMServeEngine:
                 del self._programs[oldest]
         return prog
 
+    # -- circuit breaker + retry (the graceful-degradation ladder) ---------
+
+    _BREAKER_GAUGE = {"closed": 0.0, "half_open": 0.5, "open": 1.0}
+
+    def _breaker(self, route_name: str) -> Dict[str, Any]:
+        b = self._breakers.get(route_name)
+        if b is None:
+            b = {"state": "closed", "failures": 0, "opened_t": 0.0}
+            self._breakers[route_name] = b
+        return b
+
+    def _set_breaker(self, route_name: str, b: Dict[str, Any],
+                     state: str) -> None:
+        b["state"] = state
+        self.metrics.gauge("route.breaker_state", route=route_name).set(
+            self._BREAKER_GAUGE[state])
+
+    def _breaker_allows(self, route_name: str) -> bool:
+        """May this chunk ride the route's compiled program? ``closed``
+        -> yes; ``open`` -> no until ``breaker_cooldown_s`` elapses,
+        then exactly one half-open probe launch tests recovery;
+        ``half_open`` -> no (a probe is already in flight)."""
+        with self._lock:
+            b = self._breaker(route_name)
+            if b["state"] == "closed":
+                return True
+            if b["state"] == "open" and (
+                    time.perf_counter() - b["opened_t"]
+                    >= self.breaker_cooldown_s):
+                self._set_breaker(route_name, b, "half_open")
+                return True
+            return False
+
+    def _breaker_success(self, route_name: str) -> None:
+        with self._lock:
+            b = self._breaker(route_name)
+            if b["state"] != "closed" or b["failures"]:
+                b["failures"] = 0
+                self._set_breaker(route_name, b, "closed")
+
+    def _breaker_failure(self, route_name: str) -> None:
+        """One post-retry launch failure: count toward the trip
+        threshold (closed) or fail the recovery probe straight back to
+        open with a fresh cooldown (half_open)."""
+        with self._lock:
+            b = self._breaker(route_name)
+            if b["state"] == "half_open":
+                b["opened_t"] = time.perf_counter()
+                self._route_counter("breaker_trips", route_name).inc()
+                self._set_breaker(route_name, b, "open")
+                return
+            b["failures"] += 1
+            if (b["state"] == "closed"
+                    and b["failures"] >= self.breaker_threshold):
+                b["opened_t"] = time.perf_counter()
+                self._route_counter("breaker_trips", route_name).inc()
+                self._set_breaker(route_name, b, "open")
+
+    def _launch_attempts(self, route: RouteSpec, prog: RouteProgram,
+                         inputs: Tuple) -> Tuple:
+        """One program launch under the bounded-retry policy: transient
+        failures (injected faults, launch-time runtime errors) retry up
+        to ``retries`` times with exponential backoff; programming
+        errors (ValueError/TypeError) and the final failure propagate —
+        the caller advances the breaker and degrades the chunk."""
+        attempt = 0
+        while True:
+            try:
+                if self._faults is not None:
+                    self._faults.maybe_fail("launch", route=route.name)
+                return prog.launch(*inputs)
+            except (ValueError, TypeError):
+                raise
+            except Exception:
+                if attempt >= self.retries:
+                    raise
+                self._route_counter("retries", route.name).inc()
+                time.sleep(self.retry_backoff_s * (2 ** attempt))
+                attempt += 1
+
+    def _route_cfg(self, route: RouteSpec):
+        """The config whose eps/max_iters govern this route's fits."""
+        if route.name == "spatial":
+            return self.spatial_cfg
+        if route.name == "superpixel":
+            return self.superpixel_cfg
+        return self.cfg
+
+    def _salvage_requests(self, route: RouteSpec, bad: List[Any],
+                          results: Dict[int, SegmentationResult],
+                          fitted: Dict[bytes, np.ndarray]) -> None:
+        """Re-solve poisoned requests on the reference backend in their
+        own mini-bucket and finish them from the clean centers — one
+        non-finite lane degrades to a per-request reference re-solve
+        instead of failing (or infecting) its whole batch. A request
+        still non-finite after the reference pass fails with
+        :class:`SolveFailed` (async: typed error on its future; sync:
+        raised to the flushing caller)."""
+        self._route_counter("salvaged", route.name).inc(len(bad))
+        bucket = self._bucket_for(len(bad))
+        problem, cfg = route.build_problem(self, bad, bucket)
+        res = SV.solve_batched(problem, cfg, backend="reference")
+        centers = np.asarray(res.centers)
+        healthy = (np.ones(len(bad), bool) if res.healthy is None
+                   else np.asarray(res.healthy))
+        conv = (None if res.converged is None
+                else np.asarray(res.converged))
+        doomed: Optional[BaseException] = None
+        for lane, p in enumerate(bad):
+            if not bool(healthy[lane]):
+                err = SolveFailed(
+                    f"request {p.request_id}: non-finite centers even "
+                    f"on the reference backend")
+                if not self._fail_request(p, err) and doomed is None:
+                    doomed = err
+                continue
+            r = route.materialize(self, p, centers[lane],
+                                  int(res.n_iters[lane]), False)
+            if conv is not None:
+                r.converged = bool(conv[lane])
+            self._finish(route, results, r)
+            if route.cacheable and getattr(p, "key", None) is not None:
+                fitted[p.key] = centers[lane]
+                if self.cache_size > 0 and p.hist is not None:
+                    self._cache_put(p.key, centers[lane], p.hist)
+        if doomed is not None:
+            raise doomed
+
     def _run_bucket(self, route: RouteSpec, chunk: List[Any], bucket: int,
                     results: Dict[int, SegmentationResult],
                     fitted: Dict[bytes, np.ndarray]):
         prog = self._program_for(route, chunk, bucket)
+        use_prog = prog is not None and self._breaker_allows(route.name)
+        degraded = prog is not None and not use_prog
         n_iters = None
         deltas = None
+        max_iters = int(self._route_cfg(route).max_iters)
+        bad_pend: List[Any] = []
+        bad_ids: set = set()
         with self.tracer.span("bucket", route=route.name, bucket=bucket,
-                              n=len(chunk), fused=prog is not None,
+                              n=len(chunk), fused=use_prog,
                               requests=[p.request_id for p in chunk]):
-            if prog is not None:
+            if use_prog:
                 # Device-resident fast path: host-side stacking, ONE
                 # jitted dispatch (ingest-binning + solve + defuzzify),
-                # unpack.
+                # unpack. Launch failures surviving the retry budget
+                # advance the breaker and degrade this chunk to the
+                # staged reference path below.
                 with self.tracer.span("gather", route=route.name) as sp_g:
                     inputs = prog.gather(self, chunk, bucket)
-                with self.tracer.span("launch", route=route.name) as sp_s:
-                    outs = sp_s.fence(prog.launch(*inputs))
-                with self.tracer.span("scatter", route=route.name) as sp_m:
-                    scattered = prog.scatter(self, chunk, outs)
-                res_list, centers, n_iters, total_iters = scattered[:4]
-                if len(scattered) > 4:      # telemetry-aware program
-                    deltas = np.asarray(scattered[4])
-                for r in res_list:
-                    self._finish(route, results, r)
-            else:
+                try:
+                    with self.tracer.span("launch",
+                                          route=route.name) as sp_s:
+                        outs = sp_s.fence(
+                            self._launch_attempts(route, prog, inputs))
+                except (ValueError, TypeError):
+                    raise       # programming errors are not transient
+                except Exception:
+                    self._breaker_failure(route.name)
+                    self._route_counter("degraded", route.name).inc()
+                    use_prog, degraded = False, True
+                else:
+                    self._breaker_success(route.name)
+                    with self.tracer.span("scatter",
+                                          route=route.name) as sp_m:
+                        scattered = prog.scatter(self, chunk, outs)
+                    res_list, centers, n_iters, total_iters = scattered[:4]
+                    if len(scattered) > 4:      # telemetry-aware program
+                        deltas = np.asarray(scattered[4])
+                    if self._faults is not None:
+                        centers = np.asarray(self._faults.corrupt(
+                            "solve", centers, route=route.name))
+                    finite = np.isfinite(
+                        centers.reshape(centers.shape[0], -1)).all(axis=1)
+                    iters_np = np.asarray(n_iters)
+                    for lane, (p, r) in enumerate(zip(chunk, res_list)):
+                        if not bool(finite[lane]):
+                            bad_pend.append(p)
+                            bad_ids.add(p.request_id)
+                            continue
+                        r.converged = bool(iters_np[lane] < max_iters)
+                        self._finish(route, results, r)
+                    self._stage_seconds(route.name, "ingest").inc(
+                        sp_g.wall_s)
+                    self._stage_seconds(route.name, "solve").inc(
+                        sp_s.wall_s)
+                    self._stage_seconds(route.name, "materialize").inc(
+                        sp_m.wall_s)
+            if not use_prog:
                 with self.tracer.span("build", route=route.name) as sp_g:
                     problem, cfg = route.build_problem(self, chunk, bucket)
                 with self.tracer.span("solve", route=route.name) as sp_s:
-                    res = sp_s.fence(SV.solve_batched(problem, cfg))
+                    res = sp_s.fence(SV.solve_batched(
+                        problem, cfg,
+                        backend="reference" if degraded else "auto"))
                 with self.tracer.span("materialize",
                                       route=route.name) as sp_m:
                     centers = np.asarray(res.centers)
+                    if self._faults is not None:
+                        centers = np.asarray(self._faults.corrupt(
+                            "solve", centers, route=route.name))
                     total_iters = int(res.total_iters)
                     n_iters = res.n_iters
                     deltas = np.asarray(res.final_delta)
+                    finite = np.isfinite(
+                        centers.reshape(centers.shape[0], -1)).all(axis=1)
+                    conv = (None if res.converged is None
+                            else np.asarray(res.converged))
+                    good: List[Tuple[int, Any]] = []
+                    for lane, p in enumerate(chunk):
+                        if bool(finite[lane]):
+                            good.append((lane, p))
+                        else:
+                            bad_pend.append(p)
+                            bad_ids.add(p.request_id)
                     if route.materialize_batch is not None:
-                        for r in route.materialize_batch(
-                                self, chunk, centers, res.n_iters):
-                            self._finish(route, results, r)
+                        gchunk = [p for _, p in good]
+                        if gchunk:
+                            lanes = [lane for lane, _ in good]
+                            for j, r in enumerate(route.materialize_batch(
+                                    self, gchunk, centers[lanes],
+                                    res.n_iters[lanes])):
+                                if conv is not None:
+                                    r.converged = bool(conv[lanes[j]])
+                                self._finish(route, results, r)
                     else:
-                        for lane, p in enumerate(chunk):
-                            self._finish(route, results, route.materialize(
+                        for lane, p in good:
+                            r = route.materialize(
                                 self, p, centers[lane],
-                                int(res.n_iters[lane]), False))
-            self._stage_seconds(route.name, "ingest").inc(sp_g.wall_s)
-            self._stage_seconds(route.name, "solve").inc(sp_s.wall_s)
-            self._stage_seconds(route.name, "materialize").inc(sp_m.wall_s)
+                                int(res.n_iters[lane]), False)
+                            if conv is not None:
+                                r.converged = bool(conv[lane])
+                            self._finish(route, results, r)
+                self._stage_seconds(route.name, "ingest").inc(sp_g.wall_s)
+                self._stage_seconds(route.name, "solve").inc(sp_s.wall_s)
+                self._stage_seconds(route.name, "materialize").inc(
+                    sp_m.wall_s)
+            if bad_pend:
+                # Poisoned lanes (injected or real non-finite centers):
+                # per-request reference re-solve, healthy batchmates
+                # already finished untouched above.
+                with self.tracer.span("salvage", route=route.name,
+                                      n=len(bad_pend)):
+                    self._salvage_requests(route, bad_pend, results,
+                                           fitted)
         self._route_counter("batches", route.name).inc()
         self._route_counter("images", route.name).inc(len(chunk))
         self._route_counter("padded", route.name).inc(bucket - len(chunk))
@@ -1458,6 +1819,8 @@ class FCMServeEngine:
                 float(np.max(deltas[:len(chunk)])))
         if route.cacheable and self.cache_size > 0:
             for lane, p in enumerate(chunk):
+                if p.request_id in bad_ids:
+                    continue    # poisoned centers must never enter the LRU
                 fitted[p.key] = centers[lane]
                 self._cache_put(p.key, centers[lane], p.hist)
 
@@ -1602,7 +1965,75 @@ class FCMServeEngine:
                                         r.name).snapshot()
             for r in ROUTES.values()}
         s["pending_futures"] = len(self._futures)
+        # Fault-tolerance telemetry: the graceful-degradation ladder's
+        # per-route counters plus breaker state and flusher health.
+        with self._lock:
+            breaker_state = {name: b["state"]
+                             for name, b in self._breakers.items()}
+        s["fault_tolerance"] = {
+            "retries": {r.name: self._route_counter(
+                "retries", r.name).snapshot() for r in ROUTES.values()},
+            "shed": {r.name: self._route_counter(
+                "shed", r.name).snapshot() for r in ROUTES.values()},
+            "salvaged": {r.name: self._route_counter(
+                "salvaged", r.name).snapshot() for r in ROUTES.values()},
+            "degraded": {r.name: self._route_counter(
+                "degraded", r.name).snapshot() for r in ROUTES.values()},
+            "breaker_trips": {r.name: self._route_counter(
+                "breaker_trips", r.name).snapshot()
+                for r in ROUTES.values()},
+            "invalid_input": {r.name: self._route_counter(
+                "invalid_input", r.name).snapshot()
+                for r in ROUTES.values()},
+            "breaker_state": breaker_state,
+            "flusher_restarts":
+                self.metrics.counter("flusher.restarts").snapshot(),
+            "flusher_kills": self._flusher_kills,
+        }
+        s["faults"] = (self._faults.snapshot() if self._faults is not None
+                       else FI.clean_snapshot())
         return obs.json_safe(s)
+
+    def healthy(self) -> bool:
+        """Liveness: no route breaker stuck open AND (if async traffic
+        is in flight) the flusher thread is alive. A tripped breaker is
+        *degraded* — requests still complete via the reference fallback
+        — so it flips readiness, not liveness; ``healthy()`` is False
+        only when async requests are pending with no live flusher to
+        drain them (and none can be restarted because we're shut down)."""
+        with self._lock:
+            if self._closed:
+                return False
+            if sum(self._async_n.values()) > 0 and (
+                    self._flusher is None
+                    or not self._flusher.is_alive()):
+                # submit_async re-ensures the flusher, so a dead thread
+                # here is only unhealthy once restarts are impossible.
+                return False
+        return True
+
+    def readiness(self) -> Dict[str, Any]:
+        """One JSON-safe health snapshot for probes: overall liveness,
+        per-route breaker state, flusher aliveness/restarts, and queue
+        pressure against the overload limit."""
+        with self._lock:
+            breaker_state = {r.name: self._breaker(r.name)["state"]
+                             for r in ROUTES.values()}
+            flusher_alive = (self._flusher is not None
+                             and self._flusher.is_alive())
+            depth = self._qtotal
+        return obs.json_safe({
+            "healthy": self.healthy(),
+            "ready": not self._closed
+            and all(st != "open" for st in breaker_state.values()),
+            "breaker_state": breaker_state,
+            "flusher_alive": flusher_alive,
+            "flusher_restarts":
+                self.metrics.counter("flusher.restarts").snapshot(),
+            "flusher_kills": self._flusher_kills,
+            "queue_depth": depth,
+            "max_queue_depth": self.max_queue_depth,
+        })
 
     def reset_stats(self) -> None:
         """Zero every counter/gauge/histogram and drop the trace ring;

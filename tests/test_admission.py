@@ -217,6 +217,49 @@ def test_shutdown_drains_in_flight_futures():
     eng.shutdown()                            # idempotent
 
 
+def test_concurrent_shutdown_and_erroring_route_exactly_once():
+    # Regression: a route whose solve raises, racing shutdown(drain=True)
+    # — both paths try to resolve the same futures. Every future must
+    # resolve exactly once (typed error or EngineShutdown), with no
+    # "resolved twice" RuntimeError escaping either resolver and no
+    # future left pending.
+    from repro import faults as FI
+    from repro.core import solver as SV
+
+    plan = FI.FaultPlan(seed=0, specs=(
+        FI.FaultSpec(site="launch", kind="error", times=None),))
+    eng = _engine(faults=plan, retries=0, breaker_threshold=10**9,
+                  max_wait_ms=10_000.0)
+    futs = [eng.submit_async(im) for im in _imgs(4)]
+
+    def boom(*a, **k):
+        raise ValueError("solver exploded")
+
+    orig = SV.solve_batched
+    SV.solve_batched = boom     # degraded fallback path raises too
+    errs = []
+
+    def flusher():
+        try:
+            eng.flush(raise_errors=False)
+        except BaseException as e:  # noqa: BLE001
+            errs.append(e)
+
+    try:
+        t = threading.Thread(target=flusher)
+        t.start()
+        eng.shutdown(drain=True)
+        t.join()
+    finally:
+        SV.solve_batched = orig
+    assert errs == []                       # no "resolved twice" escaped
+    for f in futs:
+        assert f.done()
+        assert isinstance(f.exception(), (ValueError, EngineShutdown))
+    assert eng.stats()["pending_futures"] == 0
+    eng.shutdown()
+
+
 def test_shutdown_drop_fails_queued_futures():
     eng = _engine(max_wait_ms=10_000.0)
     futs = [eng.submit_async(im) for im in _imgs(2)]

@@ -1,0 +1,553 @@
+"""Chaos suite: deterministic fault injection against the serving stack.
+
+Every scenario here pins the contract of ISSUE PR 10: under injected
+failures (launch errors, NaN/Inf payloads, flusher death, overload)
+every submitted request resolves exactly once — with a correct result
+or a *typed* error — and degraded paths stay center-for-center close
+(<= 1e-5) to the fault-free run. All injection is driven by a seeded
+:class:`repro.faults.FaultPlan`, so a failure here replays bit-for-bit.
+
+CI runs this file as its own chaos lane (fixed seeds throughout).
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import faults as FI
+from repro.core import batched as B
+from repro.core import fcm as F
+from repro.core import solver as SV
+from repro.data import phantom
+from repro.serving import (FCMServeEngine, InvalidInput, Overloaded,
+                           SolveFailed)
+
+CFG = F.FCMConfig(max_iters=100)
+ATOL = 1e-5
+
+
+def _imgs(n, size=20):
+    return [phantom.phantom_slice(size, size, noise=4.0 + (i % 3),
+                                  seed=300 + i)[0] for i in range(n)]
+
+
+def _engine(**kw):
+    kw.setdefault("cache_size", 0)
+    kw.setdefault("batch_sizes", (1, 4))
+    return FCMServeEngine(CFG, **kw)
+
+
+def _clean_run(imgs):
+    eng = _engine()
+    for im in imgs:
+        eng.submit(im)
+    res = {r.request_id: r for r in eng.flush()}
+    eng.shutdown()
+    return res
+
+
+@pytest.fixture(autouse=True)
+def _no_global_injector():
+    # Tests that install the process-global injector must never leak it
+    # into the next test (or the rest of the suite).
+    yield
+    FI.clear()
+
+
+# -- plan / injector unit behavior -------------------------------------------
+
+def test_fault_spec_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FI.FaultSpec(site="launch", kind="segfault")
+
+
+def test_window_firing_is_deterministic():
+    spec = FI.FaultSpec(site="launch", kind="error", after=2, times=3)
+    inj = FI.FaultInjector(FI.FaultPlan(seed=0, specs=(spec,)))
+    outcomes = []
+    for _ in range(8):
+        try:
+            inj.maybe_fail("launch")
+            outcomes.append(False)
+        except FI.InjectedFault:
+            outcomes.append(True)
+    # hits 0,1 pass; hits 2,3,4 fire; hits 5+ pass again.
+    assert outcomes == [False, False, True, True, True, False, False, False]
+    snap = inj.snapshot()
+    assert snap == {"seed": 0, "injected": 3, "by_site": {"launch": 3},
+                    "chaos": True}
+
+
+def test_probabilistic_firing_replays_with_same_seed():
+    spec = FI.FaultSpec(site="launch", kind="error", p=0.5, times=None)
+
+    def pattern(seed):
+        inj = FI.FaultInjector(FI.FaultPlan(seed=seed, specs=(spec,)))
+        out = []
+        for _ in range(64):
+            try:
+                inj.maybe_fail("launch")
+                out.append(0)
+            except FI.InjectedFault:
+                out.append(1)
+        return out
+
+    a, b = pattern(7), pattern(7)
+    assert a == b                       # same seed => same chaos
+    assert 0 < sum(a) < 64              # actually probabilistic
+    assert pattern(8) != a              # seed matters
+
+
+def test_route_filter_and_corrupt_lanes():
+    plan = FI.FaultPlan(seed=0, specs=(
+        FI.FaultSpec(site="solve", kind="nan", route="histogram",
+                     lanes=(1, 3)),))
+    inj = FI.FaultInjector(plan)
+    arr = np.zeros((4, 4), np.float32)
+    # Wrong route: untouched (and identity — no silent copies).
+    assert inj.corrupt("solve", arr, route="pixel") is arr
+    out = inj.corrupt("solve", arr, route="histogram")
+    assert np.isnan(out[1]).all() and np.isnan(out[3]).all()
+    assert np.isfinite(out[0]).all() and np.isfinite(out[2]).all()
+    assert np.isfinite(arr).all()       # input never mutated
+
+
+def test_latency_injection_sleeps_then_succeeds():
+    plan = FI.FaultPlan(seed=0, specs=(
+        FI.FaultSpec(site="ingest", kind="latency", latency_s=0.05),))
+    inj = FI.FaultInjector(plan)
+    t0 = time.perf_counter()
+    inj.maybe_fail("ingest")            # fires: sleeps, no raise
+    assert time.perf_counter() - t0 >= 0.04
+    assert inj.snapshot()["by_site"] == {"ingest": 1}
+
+
+# -- transient launch failure: retry absorbs it ------------------------------
+
+def test_transient_launch_failure_retried_to_parity():
+    imgs = _imgs(2)
+    clean = _clean_run(imgs)
+    plan = FI.FaultPlan(seed=3, specs=(
+        FI.FaultSpec(site="launch", kind="error", route="histogram",
+                     times=1),))
+    eng = _engine(faults=plan, retries=2, retry_backoff_s=0.0)
+    for im in imgs:
+        eng.submit(im)
+    res = {r.request_id: r for r in eng.flush()}
+    st = eng.stats()
+    assert st["fault_tolerance"]["retries"]["histogram"] == 1
+    assert st["fault_tolerance"]["degraded"]["histogram"] == 0
+    assert st["fault_tolerance"]["breaker_state"].get(
+        "histogram", "closed") == "closed"
+    assert st["faults"]["injected"] == 1 and st["faults"]["chaos"]
+    for i in clean:
+        np.testing.assert_allclose(res[i].centers, clean[i].centers,
+                                   atol=ATOL)
+    eng.shutdown()
+
+
+# -- persistent launch failure: breaker trips, reference fallback ------------
+
+def test_breaker_trips_and_reference_fallback_matches():
+    imgs = _imgs(1)
+    clean = _clean_run(imgs)
+    plan = FI.FaultPlan(seed=5, specs=(
+        FI.FaultSpec(site="launch", kind="error", route="histogram",
+                     times=None),))      # every launch attempt fails
+    eng = _engine(faults=plan, retries=1, retry_backoff_s=0.0,
+                  breaker_threshold=2, breaker_cooldown_s=1000.0)
+    last = None
+    for _ in range(4):
+        eng.submit(imgs[0])
+        last = eng.flush()[0]
+    st = eng.stats()
+    ft = st["fault_tolerance"]
+    assert ft["breaker_state"]["histogram"] == "open"
+    assert ft["breaker_trips"]["histogram"] == 1
+    # Flushes 1-2 burn a retry each then degrade; once open, flushes
+    # 3-4 go straight to the reference path without touching the
+    # program (no further retries).
+    assert ft["retries"]["histogram"] == 2
+    assert ft["degraded"]["histogram"] == 2
+    np.testing.assert_allclose(last.centers, clean[0].centers, atol=ATOL)
+    assert not eng.readiness()["ready"]     # open breaker = not ready
+    assert eng.healthy()                    # ...but degraded, not dead
+    eng.shutdown()
+
+
+def test_breaker_half_open_probe_recovers():
+    imgs = _imgs(1)
+    plan = FI.FaultPlan(seed=5, specs=(
+        FI.FaultSpec(site="launch", kind="error", route="histogram",
+                     times=1),))          # exactly one failing launch
+    eng = _engine(faults=plan, retries=0, breaker_threshold=1,
+                  breaker_cooldown_s=0.0)
+    eng.submit(imgs[0])
+    eng.flush()                           # fails -> trips open
+    assert eng.stats()["fault_tolerance"]["breaker_state"][
+        "histogram"] == "open"
+    eng.submit(imgs[0])
+    eng.flush()                           # cooldown=0: half-open probe, OK
+    st = eng.stats()["fault_tolerance"]
+    assert st["breaker_state"]["histogram"] == "closed"
+    assert st["breaker_trips"]["histogram"] == 1
+    assert eng.readiness()["ready"]
+    eng.shutdown()
+
+
+def test_half_open_probe_failure_reopens():
+    imgs = _imgs(1)
+    plan = FI.FaultPlan(seed=5, specs=(
+        FI.FaultSpec(site="launch", kind="error", route="histogram",
+                     times=None),))
+    eng = _engine(faults=plan, retries=0, breaker_threshold=1,
+                  breaker_cooldown_s=0.0)
+    eng.submit(imgs[0])
+    eng.flush()                           # trip
+    eng.submit(imgs[0])
+    eng.flush()                           # probe fails -> re-open
+    st = eng.stats()["fault_tolerance"]
+    assert st["breaker_state"]["histogram"] == "open"
+    assert st["breaker_trips"]["histogram"] == 2
+    eng.shutdown()
+
+
+# -- NaN/Inf poisoning: per-lane salvage -------------------------------------
+
+@pytest.mark.parametrize("kind", ["nan", "inf"])
+def test_poisoned_lane_salvaged_healthy_lanes_bitwise(kind):
+    imgs = _imgs(4)
+    clean = _clean_run(imgs)
+    plan = FI.FaultPlan(seed=11, specs=(
+        FI.FaultSpec(site="solve", kind=kind, route="histogram",
+                     lanes=(1,), times=1),))
+    eng = _engine(faults=plan, batch_sizes=(4,))
+    for im in imgs:
+        eng.submit(im)
+    res = {r.request_id: r for r in eng.flush()}
+    assert len(res) == 4
+    for i, r in res.items():
+        assert np.isfinite(r.centers).all()
+    # Healthy batchmates must be BITWISE untouched by the salvage.
+    for i in (0, 2, 3):
+        np.testing.assert_array_equal(res[i].centers, clean[i].centers)
+        assert (res[i].labels == clean[i].labels).all()
+    # The salvaged lane re-solved on reference: close, labeled, counted.
+    np.testing.assert_allclose(res[1].centers, clean[1].centers, atol=ATOL)
+    st = eng.stats()
+    assert st["fault_tolerance"]["salvaged"]["histogram"] == 1
+    eng.shutdown()
+
+
+def test_salvaged_centers_never_enter_cache():
+    img = _imgs(1)[0]
+    plan = FI.FaultPlan(seed=11, specs=(
+        FI.FaultSpec(site="solve", kind="nan", route="histogram",
+                     lanes=(0,), times=1),))
+    eng = _engine(cache_size=16, faults=plan)
+    eng.submit(img)
+    r1 = eng.flush()[0]
+    assert np.isfinite(r1.centers).all() and not r1.cache_hit
+    # Same payload again: if the poisoned program centers had been
+    # cached, this hit would serve garbage. The salvage path caches the
+    # clean reference centers instead, so the hit matches the salvage.
+    eng.submit(img.copy())
+    r2 = eng.flush()[0]
+    assert r2.cache_hit
+    np.testing.assert_array_equal(r2.centers, r1.centers)
+    eng.shutdown()
+
+
+def test_solver_level_corruption_salvaged_via_global_injector():
+    rng = np.random.default_rng(0)
+    hists = rng.integers(0, 50, (3, 256)).astype(np.float32)
+    batch = SV.batch_problems(B.hist_rows(hists), hists, cfg=CFG)
+    clean = SV.solve_batched(batch, CFG)
+    FI.install(FI.FaultPlan(seed=13, specs=(
+        FI.FaultSpec(site="solve_batched", kind="nan", lanes=(2,),
+                     times=1),)))
+    try:
+        res = SV.solve_batched(batch, CFG)
+    finally:
+        FI.clear()
+    assert np.isfinite(np.asarray(res.centers)).all()
+    assert res.salvaged is not None and res.salvaged.tolist() == [
+        False, False, True]
+    assert res.healthy.all()
+    np.testing.assert_allclose(np.asarray(res.centers),
+                               np.asarray(clean.centers), atol=ATOL)
+    # Untouched lanes bitwise identical to the clean run.
+    np.testing.assert_array_equal(np.asarray(res.centers)[:2],
+                                  np.asarray(clean.centers)[:2])
+
+
+def test_solve_batched_salvage_opt_out():
+    rng = np.random.default_rng(0)
+    hists = rng.integers(0, 50, (2, 256)).astype(np.float32)
+    batch = SV.batch_problems(B.hist_rows(hists), hists, cfg=CFG)
+    FI.install(FI.FaultPlan(seed=13, specs=(
+        FI.FaultSpec(site="solve_batched", kind="nan", lanes=(0,),
+                     times=1),)))
+    try:
+        res = SV.solve_batched(batch, CFG, salvage=False)
+    finally:
+        FI.clear()
+    # salvage=False surfaces the poison honestly instead of hiding it.
+    assert not res.healthy[0] and res.healthy[1]
+    assert not np.isfinite(np.asarray(res.centers)[0]).all()
+
+
+def test_kernel_site_injection_raises_typed():
+    from repro.kernels import ops as kops
+    FI.install(FI.FaultPlan(seed=0, specs=(
+        FI.FaultSpec(site="kernel", kind="error", times=1),)))
+    try:
+        with pytest.raises(FI.InjectedFault):
+            kops.select_step("flat")
+    finally:
+        FI.clear()
+    kops.select_step("flat")            # clean after clear()
+
+
+# -- flusher death ------------------------------------------------------------
+
+def test_flusher_kill_restarts_and_resolves_all():
+    plan = FI.FaultPlan(seed=2, specs=(
+        FI.FaultSpec(site="flusher", kind="kill", times=1),))
+    eng = _engine(faults=plan, max_wait_ms=5.0)
+    futs = [eng.submit_async(im) for im in _imgs(3)]
+    for f in futs:
+        r = f.result(timeout=60)
+        assert np.isfinite(r.centers).all()
+    assert eng._flusher_kills == 1
+    st = eng.stats()["fault_tolerance"]
+    assert st["flusher_kills"] == 1 and st["flusher_restarts"] >= 1
+    rd = eng.readiness()
+    assert rd["healthy"] and rd["flusher_restarts"] >= 1
+    eng.shutdown()
+
+
+def test_flusher_survives_repeated_kills():
+    plan = FI.FaultPlan(seed=2, specs=(
+        FI.FaultSpec(site="flusher", kind="kill", times=3),))
+    eng = _engine(faults=plan, max_wait_ms=5.0)
+    for im in _imgs(3):
+        fut = eng.submit_async(im)
+        assert np.isfinite(fut.result(timeout=60).centers).all()
+    assert eng._flusher_kills >= 1
+    eng.shutdown()
+
+
+# -- overload shedding --------------------------------------------------------
+
+def test_overload_sheds_lowest_urgency_with_typed_error():
+    imgs = _imgs(3)
+    eng = _engine(max_queue_depth=2, max_wait_ms=100_000.0)
+    loose = eng.submit_async(imgs[0], deadline=100.0)
+    mid = eng.submit_async(imgs[1], deadline=50.0)
+    tight = eng.submit_async(imgs[2], deadline=1.0)   # displaces `loose`
+    assert loose.done() and isinstance(loose.exception(), Overloaded)
+    assert not mid.done() and not tight.done()
+    assert eng.stats()["fault_tolerance"]["shed"]["histogram"] == 1
+    eng.drain()
+    assert mid.result(timeout=10).labels.shape == imgs[1].shape
+    assert tight.result(timeout=10).labels.shape == imgs[2].shape
+    eng.shutdown()
+
+
+def test_overload_rejects_incoming_when_least_urgent():
+    imgs = _imgs(3)
+    eng = _engine(max_queue_depth=2, max_wait_ms=100_000.0)
+    a = eng.submit_async(imgs[0], deadline=5.0)
+    b = eng.submit_async(imgs[1], deadline=5.0)
+    lazy = eng.submit_async(imgs[2])                 # no deadline: least urgent
+    assert lazy.done() and isinstance(lazy.exception(), Overloaded)
+    assert not a.done() and not b.done()
+    eng.drain()
+    for f in (a, b):
+        assert f.result(timeout=10) is not None
+    eng.shutdown()
+
+
+def test_sync_submit_never_shed():
+    # Queue-depth shedding only fails futures; the sync path has no
+    # future to fail, so sync submits always enqueue.
+    imgs = _imgs(3)
+    eng = _engine(max_queue_depth=1, max_wait_ms=100_000.0)
+    for im in imgs:
+        eng.submit(im)
+    assert len(eng.flush()) == 3
+    eng.shutdown()
+
+
+# -- input validation at ingest ----------------------------------------------
+
+def test_nan_payload_rejected_sync_and_async():
+    eng = _engine()
+    bad = np.full((8, 8), np.nan, np.float32)
+    with pytest.raises(InvalidInput):
+        eng.submit(bad)
+    before = eng._next_id
+    fut = eng.submit_async(bad)
+    assert fut.done() and isinstance(fut.exception(), InvalidInput)
+    assert eng._next_id == before       # no id, no queue slot consumed
+    assert eng.queue_depth == 0
+    assert eng.stats()["fault_tolerance"][
+        "invalid_input"]["histogram"] == 2
+    eng.shutdown()
+
+
+def test_empty_and_inf_payloads_rejected():
+    eng = _engine()
+    with pytest.raises(InvalidInput):
+        eng.submit(np.zeros((0, 0), np.uint8))
+    with pytest.raises(InvalidInput):
+        eng.submit(np.array([[np.inf, 1.0]], np.float32), method="pixel")
+    # Integer payloads skip the finite scan entirely and still work.
+    eng.submit(_imgs(1)[0])
+    assert len(eng.flush()) == 1
+    eng.shutdown()
+
+
+def test_ingest_fault_rejected_before_id_allocation():
+    plan = FI.FaultPlan(seed=0, specs=(
+        FI.FaultSpec(site="ingest", kind="error", times=1),))
+    eng = _engine(faults=plan)
+    img = _imgs(1)[0]
+    before = eng._next_id
+    fut = eng.submit_async(img)
+    assert fut.done()
+    assert eng._next_id == before
+    # Next submit is clean (times=1) and resolves normally.
+    ok = eng.submit_async(img)
+    eng.drain()
+    assert np.isfinite(ok.result(timeout=10).centers).all()
+    eng.shutdown()
+
+
+# -- degenerate solves --------------------------------------------------------
+
+def test_constant_image_zero_variance():
+    # All-one-value image: zero-range histogram, every distance tie.
+    img = np.full((16, 16), 97, np.uint8)
+    eng = _engine()
+    eng.submit(img)
+    r = eng.flush()[0]
+    assert np.isfinite(r.centers).all()
+    assert (r.labels >= 0).all() and (r.labels < CFG.n_clusters).all()
+    eng.shutdown()
+
+
+def test_more_clusters_than_distinct_values():
+    img = np.where(np.indices((12, 12)).sum(0) % 2 == 0, 10, 200
+                   ).astype(np.uint8)                # 2 distinct values
+    cfg = F.FCMConfig(n_clusters=6, max_iters=100)
+    eng = FCMServeEngine(cfg, cache_size=0, batch_sizes=(1, 4))
+    eng.submit(img)
+    r = eng.flush()[0]
+    assert np.isfinite(r.centers).all() and r.centers.shape == (6,)
+    # The two value populations must land on different clusters.
+    assert len(np.unique(r.labels)) == 2
+    eng.shutdown()
+
+
+def test_constant_lane_inside_mixed_batch():
+    imgs = _imgs(3) + [np.full((20, 20), 42, np.uint8)]
+    clean = _clean_run(imgs[:3])
+    eng = _engine(batch_sizes=(4,))
+    for im in imgs:
+        eng.submit(im)
+    res = {r.request_id: r for r in eng.flush()}
+    assert all(np.isfinite(r.centers).all() for r in res.values())
+    # The degenerate lane must not perturb its healthy batchmates.
+    for i in range(3):
+        np.testing.assert_array_equal(res[i].centers, clean[i].centers)
+    eng.shutdown()
+
+
+# -- convergence / health signals on results ---------------------------------
+
+def test_result_reports_nonconvergence_honestly():
+    cfg = F.FCMConfig(max_iters=2)      # nothing converges in 2 iters
+    eng = FCMServeEngine(cfg, cache_size=0, batch_sizes=(1, 4))
+    eng.submit(_imgs(1, size=32)[0])
+    r = eng.flush()[0]
+    assert r.converged is False
+    assert np.isfinite(r.centers).all()
+    eng.shutdown()
+
+
+def test_solve_result_converged_flag():
+    img, _ = phantom.phantom_slice(24, 24, seed=9)
+    ok = SV.solve(SV.histogram_problem(img, CFG), CFG)
+    assert ok.converged and ok.healthy
+    capped = SV.solve(SV.histogram_problem(img, CFG), max_iters=1)
+    assert not capped.converged and capped.healthy
+
+
+# -- bench provenance: injected runs can't pose as clean ----------------------
+
+def test_faults_bench_section_schema():
+    from benchmarks import bench_schema as BS
+    BS.check_faults_section(FI.clean_snapshot())
+    inj = FI.FaultInjector(FI.FaultPlan(seed=1, specs=(
+        FI.FaultSpec(site="launch", kind="error"),)))
+    with pytest.raises(FI.InjectedFault):
+        inj.maybe_fail("launch")
+    BS.check_faults_section(inj.snapshot())     # chaos honestly flagged
+    with pytest.raises(ValueError, match="masquerade|pose as a clean"):
+        BS.check_faults_section({"seed": 1, "injected": 2,
+                                 "by_site": {"launch": 2},
+                                 "chaos": False})
+    with pytest.raises(ValueError, match="by_site totals"):
+        BS.check_faults_section({"seed": 1, "injected": 2,
+                                 "by_site": {"launch": 1}, "chaos": True})
+
+
+def test_engine_stats_carry_faults_provenance():
+    eng = _engine()
+    assert eng.stats()["faults"] == FI.clean_snapshot()
+    eng.shutdown()
+    plan = FI.FaultPlan(seed=9, specs=(
+        FI.FaultSpec(site="launch", kind="error", times=1),))
+    eng2 = _engine(faults=plan, retries=1, retry_backoff_s=0.0)
+    eng2.submit(_imgs(1)[0])
+    eng2.flush()
+    snap = eng2.stats()["faults"]
+    assert snap["chaos"] and snap["seed"] == 9 and snap["injected"] == 1
+    eng2.shutdown()
+
+
+# -- every-future-resolves under concurrent chaos -----------------------------
+
+def test_chaotic_async_storm_every_future_resolves_once():
+    # Launch faults + a flusher kill + concurrent submitters: every
+    # future must resolve exactly once with a result or a typed error.
+    plan = FI.FaultPlan(seed=42, specs=(
+        FI.FaultSpec(site="launch", kind="error", p=0.4, times=None),
+        FI.FaultSpec(site="flusher", kind="kill", after=1, times=1),))
+    eng = _engine(faults=plan, retries=1, retry_backoff_s=0.0,
+                  breaker_threshold=2, breaker_cooldown_s=0.01,
+                  batch_sizes=(1, 4), max_wait_ms=5.0)
+    imgs = _imgs(10)
+    futs = []
+
+    def submitter(i):
+        futs.append(eng.submit_async(imgs[i]))
+
+    threads = [threading.Thread(target=submitter, args=(i,))
+               for i in range(len(imgs))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    resolved = 0
+    for f in futs:
+        r = f.result(timeout=120)
+        assert np.isfinite(r.centers).all()
+        resolved += 1
+    assert resolved == len(imgs)
+    eng.shutdown()
+    # Post-shutdown: no leaked pending futures.
+    assert eng.stats()["pending_futures"] == 0
